@@ -1,0 +1,72 @@
+"""Beyond-paper: the PackKV codec applied to DP gradient exchange.
+
+Measures (a) on-wire compression ratio vs bit width, (b) convergence
+penalty with/without error feedback on a real tiny-LM training run —
+the distributed-optimization trick recorded in DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import SMOKES
+from repro.data import ShardedTokenStream
+from repro.distributed.grad_compress import (
+    GradCompressConfig,
+    compression_ratio,
+    init_residuals,
+    roundtrip_grads,
+)
+from repro.models import get_model
+from repro.training import OptConfig, init_opt_state
+from repro.training.optimizer import adamw_update
+
+
+def train_losses(bits: int | None, error_feedback: bool, steps: int = 12):
+    cfg = SMOKES["smollm-135m"]
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params)
+    oc = OptConfig(lr=1e-3, warmup_steps=2, total_steps=steps)
+    gc = GradCompressConfig(bits=bits or 8, error_feedback=error_feedback)
+    resid = init_residuals(params, gc) if error_feedback else None
+    stream = ShardedTokenStream(vocab=cfg.vocab, batch_per_host=8, seq=64)
+    losses = []
+
+    @jax.jit
+    def grads_fn(p, b):
+        return jax.value_and_grad(lambda pp: api.loss_fn(pp, cfg, b))(p)
+
+    for _ in range(steps):
+        b = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+        loss, g = grads_fn(params, b)
+        if bits is not None:
+            g, new_resid = roundtrip_grads(g, gc, resid)
+            if error_feedback:
+                resid = new_resid
+        params, opt, _ = adamw_update(g, opt, params, oc)
+        losses.append(float(loss))
+    return losses
+
+
+def main() -> bool:
+    cfg = SMOKES["smollm-135m"]
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    print("\n[beyond-paper] PackKV-style gradient compression for DP all-reduce")
+    for bits in (2, 4, 8):
+        cr = compression_ratio(params, GradCompressConfig(bits=bits))
+        print(f"  {bits}-bit wire format: {cr:.1f}x less DP traffic")
+
+    base = train_losses(None, False)
+    ef = train_losses(4, True)
+    nf = train_losses(4, False)
+    print(f"\n  final loss after 12 steps: fp32 {base[-1]:.4f} | "
+          f"4-bit+EF {ef[-1]:.4f} | 4-bit no-EF {nf[-1]:.4f}")
+    ok = ef[-1] < base[-1] + 0.15 and base[-1] < base[0]
+    print(f"  4-bit + error feedback tracks fp32 within 0.15 nats: {ok}")
+    return ok
+
+
+if __name__ == "__main__":
+    main()

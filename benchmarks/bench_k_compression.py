@@ -1,0 +1,63 @@
+"""Paper Table II: K-cache CR — KIVI (channel quant, integer bits) vs
+PackKV (token quant + repack + bit-pack) at MATCHED distortion.
+
+Procedure (paper §IV-D1): find each method's 5%-distortion turning point,
+then take the best CR at or below it. KIVI CRs are the analytic
+bits+metadata formula (the paper quotes 4.57/6.40 from the same formula);
+PackKV CRs come from the actual storage-tier bitstream.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.kivi import kivi_cr_from_rel_scale
+
+from .common import (
+    K_PACK_SWEEP,
+    MODEL_PROFILES,
+    find_turning_point,
+    model_kv,
+    stream_cr,
+)
+
+
+def run() -> dict:
+    out: dict = {}
+    for name in MODEL_PROFILES:
+        k = model_kv(name, part="k")
+        v = model_kv(name, part="v")
+        tp_ch = find_turning_point(k, v, "k_channel",
+                                   scales=np.geomspace(0.01, 0.8, 12))
+        tp_tok = find_turning_point(k, v, "k_token",
+                                    scales=np.geomspace(0.01, 0.24, 12))
+        kivi = kivi_cr_from_rel_scale(max(tp_ch, 1e-3))
+        # PackKV: best CR over pack sizes / repacking at the token turning pt
+        pack = max(
+            stream_cr(k, v, pack_size=p, repack=m, k_rel=max(tp_tok, 1e-3),
+                      part="k")
+            for p, m in K_PACK_SWEEP
+        )
+        out[name] = {"kivi": kivi, "packkv": pack,
+                     "gain_pct": (pack / kivi - 1) * 100}
+    return out
+
+
+def main() -> bool:
+    res = run()
+    print("\n[Table II] K cache CR at matched (5%) distortion")
+    print(f"{'model':22s} {'KIVI':>8s} {'PackKV':>8s} {'gain':>9s}")
+    gains = []
+    for name, r in res.items():
+        gains.append(r["gain_pct"])
+        print(f"{name:22s} {r['kivi']:8.2f} {r['packkv']:8.2f} "
+              f"{r['gain_pct']:+8.1f}%")
+    avg = float(np.mean(gains))
+    print(f"{'avg':22s} {'':8s} {'':8s} {avg:+8.1f}%   (paper: +153.2%)")
+    ok = avg > 25  # direction + material margin (absolute value is data-dependent)
+    print(f"\nTable II direction reproduced (PackKV >> KIVI at matched "
+          f"distortion): {ok}")
+    return ok
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Paper Tables III/IV (structure): acceptable-accuracy turning points.
+
+For each synthetic model profile, sweep relative quantization scales and
+record the largest scale whose attention-output distortion stays <= 5%
+(the paper's acceptable-drop criterion, with distortion standing in for
+task accuracy — no trained checkpoints in this container).
+
+Reproduced claim: token-wise K quantization hits the 5% wall at a much
+SMALLER rel scale than channel-wise (paper Table III: token ranges top
+out ~0.12-0.24 vs channel ~0.27-0.80) — this is exactly why KIVI chose
+channel-wise K, and why PackKV's lossless stage must (and does) win the
+CR back (Table II / bench_k_compression).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import MODEL_PROFILES, find_turning_point, model_kv
+
+K_CHANNEL_SCALES = np.geomspace(0.01, 0.8, 12)
+K_TOKEN_SCALES = np.geomspace(0.01, 0.24, 12)
+V_TOKEN_SCALES = np.geomspace(0.01, 0.68, 12)
+
+
+def run() -> dict:
+    out: dict = {}
+    for name in MODEL_PROFILES:
+        k = model_kv(name, part="k")
+        v = model_kv(name, part="v")
+        out[name] = {
+            "k_channel": find_turning_point(k, v, "k_channel",
+                                            scales=K_CHANNEL_SCALES),
+            "k_token": find_turning_point(k, v, "k_token", scales=K_TOKEN_SCALES),
+            "v_token": find_turning_point(k, v, "v_token", scales=V_TOKEN_SCALES),
+        }
+    return out
+
+
+def main() -> bool:
+    res = run()
+    print("\n[Tables III/IV] 5%-distortion turning points (rel quant scale)")
+    print(f"{'model':22s} {'K channel':>10s} {'K token':>10s} {'V token':>10s}")
+    ok = True
+    for name, r in res.items():
+        print(f"{name:22s} {r['k_channel']:10.4f} {r['k_token']:10.4f} "
+              f"{r['v_token']:10.4f}")
+        if not (r["k_channel"] >= r["k_token"] > 0):
+            ok = False
+    print(f"\nTable III pattern reproduced (channel turning point >= token): {ok}")
+    return ok
+
+
+if __name__ == "__main__":
+    main()

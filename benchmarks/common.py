@@ -1,0 +1,168 @@
+"""Shared benchmark plumbing: synthetic model profiles + CR measurement.
+
+The paper evaluates six checkpoints on six QA benchmarks; this container
+has no trained weights or eval sets, so each paper model is emulated by a
+synthetic-KV PROFILE (channel spread / token smoothness / outlier rate
+chosen to span the entropy regimes the paper's Figs 3-4 show). Absolute
+CRs therefore differ from the paper's; the REPRODUCED quantities are the
+relative effects: CR vs pack size (Fig 13), repacking gains (Table I),
+PackKV-vs-KIVI at matched distortion (Tables II-V). See EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.block_format import CompressedKVStream
+from repro.core.quantization import QuantConfig
+from repro.data import synthetic_kv
+
+# six synthetic profiles standing in for the paper's six models (token
+# spikes = attention-sink/delimiter outliers — they produce Fig 13's
+# falling tail at large pack sizes)
+MODEL_PROFILES = {
+    "llama2-7b-like": dict(channel_scale=2.0, smooth=0.88, noise=0.20,
+                           outlier_frac=0.05, spike_frac=0.10, spike_mag=4.0),
+    "llama31-8b-like": dict(channel_scale=1.5, smooth=0.82, noise=0.30,
+                            outlier_frac=0.08, spike_frac=0.12, spike_mag=4.5),
+    "llama2-13b-like": dict(channel_scale=2.2, smooth=0.90, noise=0.18,
+                            outlier_frac=0.04, spike_frac=0.08, spike_mag=4.0),
+    "r1-llama-8b-like": dict(channel_scale=1.4, smooth=0.78, noise=0.35,
+                             outlier_frac=0.10, spike_frac=0.14, spike_mag=5.0),
+    "ministral-8b-like": dict(channel_scale=1.8, smooth=0.85, noise=0.25,
+                              outlier_frac=0.06, spike_frac=0.11, spike_mag=4.5),
+    "phi4-like": dict(channel_scale=2.0, smooth=0.84, noise=0.22,
+                      outlier_frac=0.05, spike_frac=0.10, spike_mag=4.2),
+}
+
+HEAD_DIM = 128
+N_TOKENS = 512  # 8 blocks of 64
+N_HEADS = 4
+
+# (pack_size, repack_mode) sweeps at the turning point (paper §IV-D)
+K_PACK_SWEEP = [(4, "greedy_joint"), (8, "greedy_joint"), (16, "greedy_joint"),
+                (8, "none")]
+V_PACK_SWEEP = [(4, "greedy_joint"), (8, "greedy_joint"), (16, "greedy_joint"),
+                (8, "median_v")]
+
+
+def model_kv(name: str, seed: int = 0, part: str = "k") -> np.ndarray:
+    prof = dict(MODEL_PROFILES[name])
+    if part == "v":
+        # V caches carry token-CATEGORY structure (the groupable pattern
+        # repacking exploits — Table I's V gains) and fewer channel outliers
+        prof.update(n_patterns=4, pattern_scale=1.2,
+                    outlier_frac=prof["outlier_frac"] / 2)
+    # deterministic per (model, part)
+    seed_v = (abs(hash((name, part))) + seed) % 2**31
+    rng = np.random.default_rng(seed_v)
+    x = synthetic_kv(rng, 1, N_HEADS, N_TOKENS, HEAD_DIM, **prof)
+    return x[0]  # [H, L, D]
+
+
+def stream_cr(
+    k: np.ndarray,
+    v: np.ndarray,
+    *,
+    pack_size: int = 8,
+    repack: str = "greedy_joint",
+    k_rel: float = 0.1,
+    v_rel: float = 0.2,
+    part: str = "both",
+) -> float:
+    """Storage-tier compression ratio over all heads/blocks (paper format)."""
+    s = CompressedKVStream(
+        pack_size=pack_size,
+        repack_mode=repack,
+        k_quant=QuantConfig(rel_scale=k_rel),
+        v_quant=QuantConfig(rel_scale=v_rel),
+    )
+    H, L, D = k.shape
+    nb = L // 64
+    for h in range(H):
+        for b in range(nb):
+            s.append(k[h, b * 64 : (b + 1) * 64], v[h, b * 64 : (b + 1) * 64],
+                     head=h, token_start=b * 64)
+    if part == "both":
+        return s.compression_ratio()
+    # single-part accounting (K or V only)
+    sm = s.entries[0].k_block  # noqa: F841 (structure reference)
+    bits = 0
+    vals = 0
+    for e in s.entries:
+        blk = e.k_block if part == "k" else e.v_block
+        bits += blk.total_bits() + e.n_tokens * 32
+        vals += e.n_tokens * blk.shape[1]
+    return vals * 16 / bits
+
+
+def attn_distortion(k: np.ndarray, v: np.ndarray, k_deq: np.ndarray,
+                    v_deq: np.ndarray, seed: int = 0) -> float:
+    """Decode-attention output relative error — the accuracy proxy.
+
+    Mean over random queries of ||Att(q,K',V') - Att(q,K,V)|| / ||Att||.
+    """
+    rng = np.random.default_rng(seed)
+    H, L, D = k.shape
+    q = rng.normal(size=(16, H, D)).astype(np.float32)
+    sm = 1.0 / np.sqrt(D)
+
+    def att(K, V):
+        s = np.einsum("qhd,hld->qhl", q, K) * sm
+        s = s - s.max(-1, keepdims=True)
+        p = np.exp(s)
+        p /= p.sum(-1, keepdims=True)
+        return np.einsum("qhl,hld->qhd", p, V)
+
+    base = att(k, v)
+    out = att(k_deq, v_deq)
+    return float(np.linalg.norm(out - base) / np.linalg.norm(base))
+
+
+def quant_roundtrip(x: np.ndarray, rel: float, granularity: str = "token",
+                    group: int = 64, bits: int | None = None) -> np.ndarray:
+    """Host-side quantize+dequantize for distortion sweeps. x: [H, L, D]."""
+    if granularity == "token":
+        lo = x.min(-1, keepdims=True)
+        hi = x.max(-1, keepdims=True)
+        rngs = hi - lo
+        scale = rngs / (2**bits - 1) if bits else rel * rngs
+        scale = np.where(scale > 0, scale, 1.0)
+        maxq = (2**bits - 1) if bits else int(round(1.0 / rel))
+        q = np.clip(np.round((x - lo) / scale), 0, maxq)
+        return (q * scale + lo).astype(np.float32)
+    # channel-wise (KIVI-K): stats along context inside groups
+    H, L, D = x.shape
+    Lb = (L // group) * group
+    xg = x[:, :Lb].reshape(H, Lb // group, group, D)
+    lo = xg.min(2, keepdims=True)
+    hi = xg.max(2, keepdims=True)
+    rngs = hi - lo
+    scale = rngs / (2**bits - 1) if bits else rel * rngs
+    scale = np.where(scale > 0, scale, 1.0)
+    maxq = (2**bits - 1) if bits else int(round(1.0 / rel))
+    q = np.clip(np.round((xg - lo) / scale), 0, maxq)
+    out = (q * scale + lo).reshape(H, Lb, D)
+    return np.concatenate([out, x[:, Lb:]], axis=1).astype(np.float32)
+
+
+def find_turning_point(k: np.ndarray, v: np.ndarray, mode: str,
+                       threshold: float = 0.05, scales=None) -> float:
+    """Largest rel scale with distortion <= threshold — the paper's
+    'acceptable accuracy turning point' (Tables III/IV), with attention-
+    output distortion standing in for task accuracy.
+
+    mode: 'k_channel' (KIVI-K), 'k_token' (PackKV-K), 'v_token'.
+    """
+    best = 0.0
+    for rel in scales if scales is not None else np.geomspace(0.01, 0.8, 14):
+        if mode == "k_channel":
+            d = attn_distortion(k, v, quant_roundtrip(k, rel, "channel"), v)
+        elif mode == "k_token":
+            d = attn_distortion(k, v, quant_roundtrip(k, rel, "token"), v)
+        else:  # v_token
+            d = attn_distortion(k, v, k, quant_roundtrip(v, rel, "token"))
+        if d <= threshold:
+            best = max(best, rel)
+    return best

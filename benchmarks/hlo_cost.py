@@ -1,0 +1,284 @@
+"""Mini HLO cost analyzer with while-loop trip-count multiplication.
+
+XLA's ``compiled.cost_analysis()`` counts while-loop bodies ONCE, so any
+scan-over-layers / chunked-attention / token-recurrence graph is
+undercounted by its trip count (verified: smollm L=2/4/8 all report the
+same FLOPs). This analyzer parses the post-optimization HLO text and
+computes:
+
+  * flops       — dot/convolution ops (2·|out|·K), multiplied through
+                  nested while trip counts
+  * bytes       — per-op operand+output buffer traffic (fusion = its
+                  operands + outputs, matching XLA's fusion accounting)
+  * collectives — per-kind bytes (all-reduce / all-gather / reduce-scatter
+                  / all-to-all / collective-permute), trip-multiplied
+
+Trip counts are extracted from each while's condition computation
+(largest integer literal in a compare — the lax.scan pattern). Unknown
+conditions fall back to 1 and are reported in ``warnings``.
+
+``conditional`` branches contribute their MAX-cost branch (conservative:
+the decode flush branch runs once per 64 tokens but is counted every
+step; see EXPERIMENTS.md §Roofline notes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1,
+}
+
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|f8\w*|s64|s32|s16|s8|u64|u32|u16|u8|pred)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?(?P<name>[\w.\-]+)\s*=\s*(?P<rest>.+)$"
+)
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?(?P<name>[\w.\-]+)(?:\.clone)?\s*\(.*\)\s*->.*{\s*$")
+_CALLS = ("calls=", "body=", "condition=", "to_apply=")
+
+COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(text: str) -> int:
+    n = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        b = _DTYPE_BYTES.get(dt, 4)
+        size = 1
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        n += size * b
+    return n
+
+
+def _shape_elems(text: str) -> int:
+    n = 0
+    for _, dims in _SHAPE_RE.findall(text):
+        size = 1
+        for d in dims.split(","):
+            if d:
+                size *= int(d)
+        n += size
+    return n
+
+
+@dataclasses.dataclass
+class Op:
+    name: str
+    opcode: str
+    out_text: str  # output shape text
+    operands: list
+    attrs: str
+    operands_text: str = ""
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: dict = dataclasses.field(default_factory=dict)
+
+    def __iadd__(self, o: "Cost"):
+        self.flops += o.flops
+        self.bytes += o.bytes
+        for k, v in o.coll.items():
+            self.coll[k] = self.coll.get(k, 0.0) + v
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        return Cost(
+            self.flops * k, self.bytes * k,
+            {kk: vv * k for kk, vv in self.coll.items()},
+        )
+
+
+class HloAnalyzer:
+    def __init__(self, hlo_text: str):
+        self.comps: dict[str, list[Op]] = {}
+        self.warnings: list[str] = []
+        self._parse(hlo_text)
+        self.entry = self._find_entry(hlo_text)
+        self._memo: dict[str, Cost] = {}
+
+    # -- parsing -----------------------------------------------------------
+    def _parse(self, text: str) -> None:
+        cur: list[Op] | None = None
+        for line in text.splitlines():
+            mc = _COMP_RE.match(line)
+            # op lines have " = " with spaces; header /*index=N*/ comments don't
+            if mc and " = " not in line.split("->")[0]:
+                cur = []
+                self.comps[mc.group("name")] = cur
+                continue
+            if line.strip() == "}":
+                cur = None
+                continue
+            if cur is None:
+                continue
+            mo = _OP_RE.match(line)
+            if not mo:
+                continue
+            rest = mo.group("rest")
+            # split "SHAPES opcode(operands), attrs"
+            m2 = re.match(r"(?P<shape>\(.*?\)|\S+)\s+(?P<opcode>[\w\-]+)\((?P<tail>.*)$", rest)
+            if not m2:
+                continue
+            tail = m2.group("tail")
+            # operands end at the matching close paren
+            depth = 1
+            for i, ch in enumerate(tail):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            operands_text = tail[:i] if depth == 0 else tail
+            attrs = tail[i + 1 :] if depth == 0 else ""
+            ops = re.findall(r"%([\w.\-]+)", operands_text)
+            cur.append(
+                Op(
+                    name=mo.group("name"),
+                    opcode=m2.group("opcode"),
+                    out_text=m2.group("shape"),
+                    operands=ops,
+                    attrs=attrs,
+                    operands_text=operands_text,
+                )
+            )
+
+    def _find_entry(self, text: str) -> str:
+        m = re.search(r"^ENTRY\s+%?([\w.\-]+)", text, re.M)
+        if m:
+            return m.group(1)
+        return next(iter(self.comps))
+
+    # -- trip count --------------------------------------------------------
+    def _trip_count(self, cond_name: str) -> int:
+        """Largest integer literal in the condition computation — the
+        lax.scan pattern compares the induction var against the length."""
+        ops = self.comps.get(cond_name, [])
+        best = 0
+        for op in ops:
+            if op.opcode == "constant":
+                m = re.match(r"\s*(\d+)\s*$", op.operands_text)
+                if m:
+                    best = max(best, int(m.group(1)))
+            for m in re.finditer(r"constant\((\d+)\)", op.attrs + op.operands_text):
+                best = max(best, int(m.group(1)))
+            # fused conditions inline the bound into a fusion's computation
+            called = self._attr_comp(op, "calls=")
+            if called:
+                for iop in self.comps.get(called, []):
+                    if iop.opcode == "constant":
+                        m = re.match(r"\s*(\d+)\s*$", iop.operands_text)
+                        if m:
+                            best = max(best, int(m.group(1)))
+        if best == 0:
+            self.warnings.append(f"trip count not found for {cond_name}; using 1")
+            best = 1
+        return best
+
+    # -- cost --------------------------------------------------------------
+    def _symtab(self, comp: str) -> dict[str, str]:
+        return {op.name: op.out_text for op in self.comps.get(comp, [])}
+
+    def _dot_flops(self, op: Op, sym: dict) -> float:
+        out_elems = _shape_elems(op.out_text)
+        lhs_text = sym.get(op.operands[0], "") if op.operands else ""
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.attrs)
+        k = 1
+        if m and lhs_text:
+            dims_txt = _SHAPE_RE.findall(lhs_text)
+            if dims_txt:
+                dims = [int(d) for d in dims_txt[0][1].split(",") if d]
+                for ci in m.group(1).split(","):
+                    if ci and int(ci) < len(dims):
+                        k *= dims[int(ci)]
+        return 2.0 * out_elems * k
+
+    def cost_of(self, comp_name: str) -> Cost:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        total = Cost()
+        sym = self._symtab(comp_name)
+        for op in self.comps.get(comp_name, []):
+            oc = op.opcode
+            out_bytes = _shape_bytes(op.out_text)
+            if oc == "while":
+                body = self._attr_comp(op, "body=")
+                cond = self._attr_comp(op, "condition=")
+                trips = self._trip_count(cond) if cond else 1
+                if body:
+                    total += self.cost_of(body).scaled(trips)
+                if cond:
+                    total += self.cost_of(cond).scaled(trips)
+            elif oc == "conditional":
+                branches = re.findall(r"%([\w.\-]+)", op.attrs)
+                branch_comps = [b for b in branches if b in self.comps]
+                if branch_comps:
+                    costs = [self.cost_of(b) for b in branch_comps]
+                    best = max(costs, key=lambda c: c.flops + c.bytes)
+                    total += best
+            elif oc in ("fusion", "call", "custom-call", "map"):
+                called = self._attr_comp(op, "calls=") or self._attr_comp(
+                    op, "to_apply="
+                )
+                inner = self.cost_of(called) if called else Cost()
+                # fusion buffer traffic: operands + output (inner bytes are
+                # register/loop traffic, not HBM)
+                opnd_bytes = sum(
+                    _shape_bytes(sym.get(o, "")) for o in op.operands
+                )
+                total += Cost(flops=inner.flops, bytes=opnd_bytes + out_bytes,
+                              coll=dict(inner.coll))
+            elif oc == "dot":
+                f = self._dot_flops(op, sym)
+                opnd_bytes = sum(_shape_bytes(sym.get(o, "")) for o in op.operands)
+                total += Cost(flops=f, bytes=opnd_bytes + out_bytes)
+            elif oc == "convolution":
+                # rough: 2 * out_elems * (kernel elems)
+                k_bytes = (
+                    _shape_elems(sym.get(op.operands[1], "")) if len(op.operands) > 1 else 1
+                )
+                total += Cost(flops=2.0 * _shape_elems(op.out_text) * k_bytes,
+                              bytes=out_bytes * 2)
+            elif any(oc.startswith(c) for c in COLLECTIVES):
+                kind = next(c for c in COLLECTIVES if oc.startswith(c))
+                total += Cost(bytes=out_bytes * 2, coll={kind: float(out_bytes)})
+            elif oc in ("parameter", "constant", "get-tuple-element", "tuple",
+                        "bitcast", "after-all", "partition-id"):
+                pass
+            else:  # standalone elementwise / copy / reduce etc.
+                opnd_bytes = sum(_shape_bytes(sym.get(o, "")) for o in op.operands)
+                total += Cost(bytes=opnd_bytes + out_bytes)
+        self._memo[comp_name] = total
+        return total
+
+    def _attr_comp(self, op: Op, key: str) -> str | None:
+        m = re.search(re.escape(key) + r"%?([\w.\-]+)", op.attrs)
+        if m and m.group(1) in self.comps:
+            return m.group(1)
+        return None
+
+    def total(self) -> Cost:
+        return self.cost_of(self.entry)
+
+
+def analyze(hlo_text: str) -> dict:
+    a = HloAnalyzer(hlo_text)
+    c = a.total()
+    coll = dict(c.coll)
+    coll["total"] = sum(coll.values())
+    return {
+        "flops": c.flops,
+        "bytes": c.bytes,
+        "collectives": coll,
+        "warnings": a.warnings[:20],
+    }

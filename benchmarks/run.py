@@ -1,0 +1,65 @@
+"""Benchmark runner: one harness per paper table/figure + roofline summary.
+
+  PYTHONPATH=src python -m benchmarks.run            # all paper benchmarks
+  PYTHONPATH=src python -m benchmarks.run --only fig13
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+from . import (
+    bench_grad_compress,
+    bench_k_compression,
+    bench_pack_size,
+    bench_repacking,
+    bench_scaling,
+    bench_throughput,
+    bench_turning_points,
+    bench_v_compression,
+)
+
+BENCHES = {
+    "fig13_pack_size": bench_pack_size.main,
+    "table1_repacking": bench_repacking.main,
+    "table34_turning_points": bench_turning_points.main,
+    "table2_k_compression": bench_k_compression.main,
+    "table5_v_compression": bench_v_compression.main,
+    "fig1516_throughput": bench_throughput.main,
+    "fig17_scaling": bench_scaling.main,
+    "beyond_grad_compress": bench_grad_compress.main,
+}
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+    results = {}
+    for name, fn in BENCHES.items():
+        if args.only and args.only not in name:
+            continue
+        print(f"\n{'=' * 72}\nBENCH {name}\n{'=' * 72}")
+        t0 = time.time()
+        try:
+            results[name] = bool(fn())
+        except Exception:  # noqa: BLE001 — report, don't abort the suite
+            import traceback
+
+            traceback.print_exc()
+            results[name] = False
+        print(f"[{name}] {'PASS' if results[name] else 'FAIL'} "
+              f"({time.time() - t0:.1f}s)")
+
+    print(f"\n{'=' * 72}\nSUMMARY\n{'=' * 72}")
+    for name, ok in results.items():
+        print(f"{'PASS' if ok else 'FAIL'}  {name}")
+    n_fail = sum(not ok for ok in results.values())
+    print(f"\n{len(results) - n_fail}/{len(results)} benchmarks reproduce "
+          f"the paper's claims")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,83 @@
+"""Fault-tolerance drill: preemption + elastic restart + straggler exclusion.
+
+Simulates the fleet-controller loop: train, get preempted mid-run (we just
+stop), restart from the latest COMMITted checkpoint with a DIFFERENT mesh
+shape (elastic downscale after a straggler exclusion), and verify the loss
+trajectory continues bit-exactly for the data stream.
+
+Run:  PYTHONPATH=src python examples/elastic_restart.py
+"""
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.configs import get_arch
+from repro.data import ShardedTokenStream
+from repro.distributed import StragglerMonitor, downscale_plan
+from repro.models import get_model
+from repro.training import OptConfig, init_opt_state
+from repro.training.train import make_train_step
+
+CKPT = "/tmp/packkv_elastic"
+
+
+def run_segment(start: int, stop: int, params, opt, stream, step_fn, ckpt):
+    losses = {}
+    for step in range(start, stop):
+        batch = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+        params, opt, metrics = step_fn(params, opt, batch)
+        losses[step] = float(metrics["loss"])
+        if (step + 1) % 5 == 0:
+            ckpt.submit(step + 1, (params, opt), {"stream": stream.state()})
+    return params, opt, losses
+
+
+def main():
+    shutil.rmtree(CKPT, ignore_errors=True)
+    cfg = get_arch("smollm-135m", smoke=True)
+    api = get_model(cfg)
+    opt_cfg = OptConfig(lr=1e-3, warmup_steps=2, total_steps=40)
+    stream = ShardedTokenStream(vocab=cfg.vocab, batch_per_host=4, seq=128)
+    step_fn = jax.jit(make_train_step(api, cfg, opt_cfg), donate_argnums=(0, 1))
+
+    # ---- run 1: train 12 steps, checkpointing every 5; then "preempted"
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params)
+    ckpt = AsyncCheckpointer(CKPT)
+    params, opt, l1 = run_segment(0, 12, params, opt, stream, step_fn, ckpt)
+    ckpt.close()
+    print(f"run 1 preempted at step 12 (latest checkpoint: "
+          f"step {latest_step(CKPT)})")
+
+    # ---- straggler detection triggers an elastic downscale decision
+    mon = StragglerMonitor(patience=2)
+    for dt in (1.0, 1.0, 1.0, 1.0, 9.0, 9.5):
+        verdict = mon.observe(dt)
+    plan = downscale_plan((2, 16, 16), "exclude-straggler")
+    print(f"straggler verdict: {verdict} -> elastic plan "
+          f"{plan.old_shape} -> {plan.new_shape}")
+
+    # ---- run 2: restore on the "new mesh" (restore takes target shardings;
+    # on 1 CPU device the reshard is trivial, the code path is identical)
+    params2 = api.init(jax.random.PRNGKey(0), cfg)
+    opt2 = init_opt_state(params2)
+    last = latest_step(CKPT)
+    (params2, opt2), extra = restore(CKPT, last, (params2, opt2))
+    stream2 = ShardedTokenStream(vocab=cfg.vocab, batch_per_host=4, seq=128)
+    stream2.restore(extra["stream"])
+    ckpt2 = AsyncCheckpointer(CKPT)
+    _, _, l2 = run_segment(last, 15, params2, opt2, stream2, step_fn, ckpt2)
+    ckpt2.close()
+
+    # the overlapping steps must match the uninterrupted trajectory
+    overlap = [s for s in l1 if s in l2]
+    drift = max(abs(l1[s] - l2[s]) for s in overlap)
+    print(f"steps {overlap} replayed after restart; max loss drift {drift:.2e}")
+    assert drift < 1e-4, "restart is not deterministic!"
+    print("elastic restart drill PASSED")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Serve a small model with batched requests through the PackKV engine.
+
+Builds two engines over the same weights — uncompressed and PackKV —
+serves the same wave of requests through both, and reports the agreement
+rate and cache memory. This is the paper's deployment story end-to-end:
+calibration -> compile -> wave-batched serving with compressed decode.
+
+Run:  PYTHONPATH=src python examples/serve_packkv.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.core.cache import PackKVConfig
+from repro.core.tiered import tiered_bits_per_value
+from repro.models import get_model
+from repro.serving import Engine, EngineConfig, Request, WaveServer
+
+
+def main():
+    cfg = get_arch("llama2-7b", smoke=True)  # reduced config for CPU
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    ecfg = EngineConfig(capacity=512, max_batch=4, calib_tokens=192)
+
+    print("building engines (calibration + jit)...")
+    e_none = Engine(cfg, params, PackKVConfig(policy="none"), ecfg)
+    e_pack = Engine(cfg, params,
+                    PackKVConfig(k_rel_scale=0.02, v_rel_scale=0.02), ecfg)
+    ks = e_pack.pack_cfg.k_spec_static
+    print(f"calibrated K tiers {ks.widths} × {ks.counts} -> "
+          f"{tiered_bits_per_value(ks):.2f} bits/value "
+          f"({16 / tiered_bits_per_value(ks):.1f}x vs bf16)")
+
+    rng = np.random.default_rng(0)
+    reqs = [
+        Request(rid=i, max_new=12,
+                tokens=rng.integers(0, cfg.vocab, int(rng.integers(40, 120))))
+        for i in range(8)
+    ]
+
+    outs = {}
+    for name, eng in (("uncompressed", e_none), ("packkv", e_pack)):
+        srv = WaveServer(eng)
+        for r in reqs:
+            srv.submit(dataclasses.replace(r))
+        while srv.queue:
+            srv.run_wave()
+        outs[name] = {r.rid: r.output for r in srv.done.values()}
+        print(f"{name}: served {len(srv.done)} requests")
+
+    agree = np.mean([
+        (outs["uncompressed"][rid] == outs["packkv"][rid]).mean()
+        for rid in outs["uncompressed"]
+    ])
+    print(f"greedy-token agreement (rel_scale=0.02): {agree:.1%}")
+    print("(tighten/loosen rel scales to trade cache memory vs fidelity — "
+          "paper Tables III/IV)")
+
+
+if __name__ == "__main__":
+    main()

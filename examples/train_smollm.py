@@ -1,0 +1,76 @@
+"""End-to-end driver: train a ~100M-param model for a few hundred steps.
+
+Uses the FULL smollm-135m config (30L × 576d, the assigned architecture)
+on the synthetic Zipf stream, with WSD schedule, gradient accumulation,
+async checkpointing, and straggler monitoring — the complete training
+substrate at quickstart scale.
+
+Run:  PYTHONPATH=src python examples/train_smollm.py [--steps 300]
+(CPU: ~1-2 s/step at batch 8 × seq 256.)
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import AsyncCheckpointer, latest_step, restore
+from repro.configs import get_arch
+from repro.data import ShardedTokenStream
+from repro.distributed import StragglerMonitor
+from repro.models import get_model
+from repro.training import OptConfig, init_opt_state
+from repro.training.train import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--grad-accum", type=int, default=2)
+    ap.add_argument("--ckpt-dir", default="/tmp/packkv_smollm")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_arch("smollm-135m")  # FULL 135M config
+    api = get_model(cfg)
+    print(f"{cfg.name}: {cfg.param_count() / 1e6:.0f}M params")
+
+    opt_cfg = OptConfig(lr=6e-4, schedule="wsd", warmup_steps=20,
+                        total_steps=args.steps)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    opt = init_opt_state(params)
+    stream = ShardedTokenStream(vocab=cfg.vocab, batch_per_host=args.batch,
+                                seq=args.seq)
+    start = 0
+    if args.resume and (last := latest_step(args.ckpt_dir)) is not None:
+        (params, opt), extra = restore(args.ckpt_dir, last, (params, opt))
+        stream.restore(extra["stream"])
+        start = last
+        print(f"resumed from step {last}")
+
+    step_fn = jax.jit(make_train_step(api, cfg, opt_cfg, args.grad_accum),
+                      donate_argnums=(0, 1))
+    ckpt = AsyncCheckpointer(args.ckpt_dir)
+    monitor = StragglerMonitor()
+    t0 = time.time()
+    for step in range(start, args.steps):
+        batch = {k: jnp.asarray(v) for k, v in stream.next_batch().items()}
+        monitor.start()
+        params, opt, metrics = step_fn(params, opt, batch)
+        loss = float(metrics["loss"])
+        verdict = monitor.stop()
+        if step % 20 == 0:
+            tok_s = args.batch * args.seq * (step - start + 1) / (time.time() - t0)
+            print(f"step {step:4d}  loss {loss:.4f}  "
+                  f"lr-phase {'warmup' if step < 20 else 'stable/decay'}  "
+                  f"{tok_s:,.0f} tok/s  [{verdict}]")
+        if (step + 1) % 100 == 0:
+            ckpt.submit(step + 1, (params, opt), {"stream": stream.state()})
+    ckpt.close()
+    print(f"done: final loss {loss:.4f} in {time.time() - t0:.0f}s")
+
+
+if __name__ == "__main__":
+    main()

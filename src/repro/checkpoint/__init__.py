@@ -1,0 +1,7 @@
+from .sharded import (  # noqa: F401
+    AsyncCheckpointer,
+    gc_old,
+    latest_step,
+    restore,
+    save,
+)

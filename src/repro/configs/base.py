@@ -1,0 +1,124 @@
+"""Architecture + shape configuration schema.
+
+Every assigned architecture is a frozen ``ArchConfig``; the four assigned
+input shapes are ``ShapeCfg`` entries. ``cells()`` enumerates the
+(arch × shape) grid with the skip rules recorded in DESIGN.md §4.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ArchConfig:
+    name: str
+    family: str  # dense | moe | rwkv6 | hybrid_rglru | encoder | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: int = 0  # 0 -> d_model // n_heads
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    use_rope: bool = True
+    # MoE
+    n_experts: int = 0
+    n_shared_experts: int = 0
+    moe_topk: int = 0
+    d_ff_expert: int = 0
+    # hybrid (recurrentgemma): 1 attention block per `group` of blocks
+    window: int = 0
+    rec_per_attn: int = 0  # recurrent blocks per attention block (2 for RG)
+    conv_width: int = 4
+    lru_dim: int = 0  # RG-LRU width (defaults to d_model)
+    # rwkv
+    wkv_heads: int = 0
+    # io
+    input_mode: str = "tokens"  # tokens | frames | tokens_patches
+    n_patches: int = 256
+    causal: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_subquadratic(self) -> bool:
+        return self.family in ("rwkv6", "hybrid_rglru")
+
+    @property
+    def has_decode(self) -> bool:
+        return self.family != "encoder"
+
+    # -- analytic parameter counts (roofline MODEL_FLOPS = 6·N·D) ----------
+    def param_count(self) -> int:
+        D, F, V, L = self.d_model, self.d_ff, self.vocab, self.n_layers
+        hd = self.hd
+        emb = V * D * 2  # embed + untied head
+        if self.family == "rwkv6":
+            per = 6 * D * D + 2 * D * F  # time-mix 5D²+wo, channel-mix 2DF+D²
+            return emb + L * per
+        attn = D * (self.n_heads * hd) + 2 * D * (self.n_kv_heads * hd) + (
+            self.n_heads * hd
+        ) * D
+        dense_mlp = 3 * D * F
+        if self.family == "moe":
+            moe = self.n_experts * 3 * D * self.d_ff_expert + D * self.n_experts
+            shared = self.n_shared_experts * 3 * D * self.d_ff_expert
+            return emb + L * (attn + moe + shared)
+        if self.family == "hybrid_rglru":
+            lru_d = self.lru_dim or D
+            rec = 2 * D * lru_d + 2 * lru_d * lru_d // 1 + lru_d * D  # approx
+            group = self.rec_per_attn + 1
+            n_attn = self.n_layers // group
+            n_rec = self.n_layers - n_attn
+            return emb + n_attn * (attn + dense_mlp) + n_rec * (rec + dense_mlp)
+        return emb + L * (attn + dense_mlp)
+
+    def active_param_count(self) -> int:
+        if self.family != "moe":
+            return self.param_count()
+        D, L = self.d_model, self.n_layers
+        hd = self.hd
+        attn = D * (self.n_heads * hd) + 2 * D * (self.n_kv_heads * hd) + (
+            self.n_heads * hd
+        ) * D
+        active = (self.moe_topk + self.n_shared_experts) * 3 * D * self.d_ff_expert
+        return self.vocab * D * 2 + L * (attn + active + D * self.n_experts)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCfg:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeCfg("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeCfg("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeCfg("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeCfg("long_500k", "decode", 524288, 1),
+}
+
+
+def shape_applicable(arch: ArchConfig, shape: ShapeCfg) -> tuple[bool, str]:
+    """Skip rules from the assignment (recorded in DESIGN.md §4)."""
+    if shape.kind == "decode" and not arch.has_decode:
+        return False, "encoder-only: no decode step"
+    if shape.name == "long_500k" and not arch.is_subquadratic:
+        return False, "pure full-attention arch: long_500k skipped per assignment"
+    return True, ""
+
+
+def cells(archs: dict[str, ArchConfig]):
+    """All runnable (arch, shape) cells plus the skip list."""
+    run, skip = [], []
+    for a in archs.values():
+        for s in SHAPES.values():
+            ok, why = shape_applicable(a, s)
+            (run if ok else skip).append((a.name, s.name) if ok else (a.name, s.name, why))
+    return run, skip

@@ -1,0 +1,16 @@
+"""Llama-2-7B — the paper's primary evaluation model (§IV-A).
+
+Not part of the assigned-10 grid; used by the paper-reproduction
+benchmarks (compression-ratio tables, throughput figures).
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="llama2-7b", family="dense", n_layers=32, d_model=4096, n_heads=32,
+    n_kv_heads=32, d_ff=11008, vocab=32000,
+)
+
+SMOKE = ArchConfig(
+    name="llama2-7b-smoke", family="dense", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=4, d_ff=256, vocab=512, head_dim=32,
+)

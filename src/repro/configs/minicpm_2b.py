@@ -1,0 +1,18 @@
+"""MiniCPM-2B — WSD schedule, llama-like arch [arXiv:2404.06395; hf].
+
+The WSD (warmup-stable-decay) schedule is implemented in
+repro.training.optimizer and selected by this config's training preset.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="minicpm-2b", family="dense", n_layers=40, d_model=2304, n_heads=36,
+    n_kv_heads=36, d_ff=5760, vocab=122753,
+)
+
+SMOKE = ArchConfig(
+    name="minicpm-2b-smoke", family="dense", n_layers=2, d_model=128, n_heads=4,
+    n_kv_heads=4, d_ff=256, vocab=511,  # odd vocab keeps the padding path hot
+)
+
+TRAIN_SCHEDULE = "wsd"

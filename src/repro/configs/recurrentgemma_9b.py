@@ -1,0 +1,19 @@
+"""RecurrentGemma-9B — RG-LRU + local attention 1:2 [arXiv:2402.19427].
+
+PackKV applies to the local-attention layers' bounded (window=2048) KV
+cache via the ring-buffer append; RG-LRU layers carry O(1) state, so
+long_500k decode has a fixed memory footprint.
+"""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="recurrentgemma-9b", family="hybrid_rglru", n_layers=38, d_model=4096,
+    n_heads=16, n_kv_heads=1, d_ff=12288, vocab=256000, head_dim=256,
+    window=2048, rec_per_attn=2, lru_dim=4096,
+)
+
+SMOKE = ArchConfig(
+    name="recurrentgemma-9b-smoke", family="hybrid_rglru", n_layers=5,
+    d_model=128, n_heads=4, n_kv_heads=1, d_ff=256, vocab=512, head_dim=32,
+    window=128, rec_per_attn=2, lru_dim=128,
+)

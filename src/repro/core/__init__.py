@@ -1,0 +1,38 @@
+"""PackKV core: the paper's contribution as composable JAX modules.
+
+Pipeline (paper Fig. 2): quantization -> encode-aware repacking ->
+bit-packing -> seamless appending -> computation-aware decompression.
+
+Two on-device formats:
+  * storage tier (bitpack.py/block_format.py) — exact paper format,
+    per-pack adaptive widths; CR accounting, offload, checkpoints.
+  * compute tier (tiered.py) — static-shape TPU format consumed by the
+    fused kernels in repro.kernels.
+"""
+from .quantization import QuantConfig, dequantize, quantize  # noqa: F401
+from .bitpack import (  # noqa: F401
+    DEFAULT_SIZE_MODEL,
+    SizeModel,
+    compression_ratio,
+    pack_block,
+    packed_total_bits,
+    unpack_block,
+)
+from .repacking import greedy_repack, median_repack, median_repack_jnp, repack  # noqa: F401
+from .block_format import CompressedKVStream  # noqa: F401
+from .tiered import (  # noqa: F401
+    TierBuffer,
+    TierSpec,
+    TieredCache,
+    alloc_tiered,
+    append_block,
+    assign_channel_tiers,
+    dequantize_tiered,
+    pack_tiered,
+    required_channel_widths,
+    tiered_bits_per_value,
+    unpack_tiered,
+)
+from .kivi import KIVIConfig, kivi_cr, kivi_cr_from_rel_scale  # noqa: F401
+
+from .policy import available as available_policies, get_policy  # noqa: F401,E402

@@ -1,0 +1,217 @@
+"""Per-pack adaptive bit-packing — the paper's STORAGE format (§III-B3).
+
+A *pack* is ``pack_size`` consecutive quantized integers along the context
+(channel) direction. Per pack we store:
+
+  * ``min``   — the pack minimum (subtracted before encoding),
+  * ``width`` — ``ceil(log2(range+1))`` bits per value (0 when the pack is
+    constant),
+  * payload  — ``pack_size * width`` bits.
+
+This module implements the exact variable-width format on the host (numpy):
+it is the unit of CR accounting for every benchmark table, the offload/
+checkpoint format, and the oracle the TPU compute-tier format (tiered.py) is
+compared against. The compute path never touches this code at decode time —
+that is the whole point of the paper's asymmetry argument (§III-A): encode is
+rare and cheap, decode must be fused with the mat-vec (kernels/).
+
+Sizes are reported in *bits* and include all metadata so compression ratios
+match the paper's accounting style (KIVI 2-bit/64-group → 6.4x, 3-bit →
+4.57x reproduce exactly with the same formulas).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+# ---------------------------------------------------------------------------
+# Size model
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class SizeModel:
+    """Metadata field widths used in CR accounting.
+
+    width_field_bits: per-pack encoded-length field (widths 0..15).
+    min_field_bits:   per-pack minimum field.
+    token_meta_bits:  per-(token, head) quantization metadata — fp16 scale +
+      fp16 zero, as in KIVI's accounting.
+    raw_bits:         uncompressed element width (fp16).
+    """
+
+    width_field_bits: int = 4
+    min_field_bits: int = 8
+    token_meta_bits: int = 32
+    raw_bits: int = 16
+
+
+DEFAULT_SIZE_MODEL = SizeModel()
+
+
+def bits_required(rng: np.ndarray) -> np.ndarray:
+    """ceil(log2(range+1)); 0 for constant packs. Vectorized."""
+    rng = np.asarray(rng)
+    out = np.zeros(rng.shape, dtype=np.int64)
+    nz = rng > 0
+    out[nz] = np.floor(np.log2(rng[nz])).astype(np.int64) + 1
+    return out
+
+
+def packed_payload_bits(q: np.ndarray, pack_size: int, axis: int = 0) -> int:
+    """Analytic payload size (no metadata) of per-pack adaptive packing."""
+    q = np.moveaxis(np.asarray(q), axis, 0)
+    n = q.shape[0]
+    assert n % pack_size == 0, f"{n} % {pack_size} != 0"
+    qp = q.reshape(n // pack_size, pack_size, *q.shape[1:])
+    rng = qp.max(axis=1) - qp.min(axis=1)
+    return int(bits_required(rng).sum() * pack_size)
+
+
+def packed_total_bits(
+    q: np.ndarray,
+    pack_size: int,
+    axis: int = 0,
+    size_model: SizeModel = DEFAULT_SIZE_MODEL,
+    n_token_meta: int | None = None,
+) -> int:
+    """Payload + per-pack metadata + per-token quantization metadata.
+
+    n_token_meta: number of (token, head) quantization units covered by q;
+      defaults to q.shape[axis] (token-wise quantization of one head's block).
+    """
+    q = np.asarray(q)
+    n = q.shape[axis]
+    n_packs = (n // pack_size) * (q.size // n)
+    payload = packed_payload_bits(q, pack_size, axis)
+    meta = n_packs * (size_model.width_field_bits + size_model.min_field_bits)
+    if n_token_meta is None:
+        n_token_meta = n
+    return payload + meta + n_token_meta * size_model.token_meta_bits
+
+
+def compression_ratio(
+    q: np.ndarray,
+    pack_size: int,
+    axis: int = 0,
+    size_model: SizeModel = DEFAULT_SIZE_MODEL,
+    n_token_meta: int | None = None,
+) -> float:
+    raw = q.size * size_model.raw_bits
+    return raw / packed_total_bits(q, pack_size, axis, size_model, n_token_meta)
+
+
+# ---------------------------------------------------------------------------
+# Actual bitstream (round-trip exact)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PackedBlock:
+    """One bit-packed 2D block (the storage unit of block_format.py).
+
+    Packing runs along axis 0 of ``shape`` (the context direction); each of
+    the ``shape[1]`` columns is split into ``shape[0]/pack_size`` packs.
+    """
+
+    payload: np.ndarray  # uint32 bitstream words
+    widths: np.ndarray  # uint8  [n_cols, n_packs]
+    mins: np.ndarray  # int32  [n_cols, n_packs]
+    pack_size: int
+    shape: tuple[int, int]
+    payload_bits: int
+
+    def total_bits(self, size_model: SizeModel = DEFAULT_SIZE_MODEL) -> int:
+        n_packs = self.widths.size
+        return self.payload_bits + n_packs * (
+            size_model.width_field_bits + size_model.min_field_bits
+        )
+
+
+class _BitWriter:
+    def __init__(self):
+        self.words: list[int] = []
+        self.cur = 0
+        self.fill = 0
+
+    def write(self, vals: np.ndarray, width: int) -> None:
+        if width == 0:
+            return
+        for v in vals.tolist():
+            self.cur |= (int(v) & ((1 << width) - 1)) << self.fill
+            self.fill += width
+            while self.fill >= 32:
+                self.words.append(self.cur & 0xFFFFFFFF)
+                self.cur >>= 32
+                self.fill -= 32
+
+    def finish(self) -> np.ndarray:
+        if self.fill:
+            self.words.append(self.cur & 0xFFFFFFFF)
+        return np.asarray(self.words, dtype=np.uint32)
+
+
+class _BitReader:
+    def __init__(self, words: np.ndarray):
+        self.words = words
+        self.pos = 0  # bit position
+
+    def read(self, count: int, width: int) -> np.ndarray:
+        if width == 0:
+            return np.zeros(count, dtype=np.int64)
+        out = np.empty(count, dtype=np.int64)
+        mask = (1 << width) - 1
+        for i in range(count):
+            w, b = divmod(self.pos, 32)
+            v = int(self.words[w]) >> b
+            got = 32 - b
+            while got < width:
+                w += 1
+                v |= int(self.words[w]) << got
+                got += 32
+            out[i] = v & mask
+            self.pos += width
+        return out
+
+
+def pack_block(q: np.ndarray, pack_size: int) -> PackedBlock:
+    """Bit-pack a 2D integer block [N, D] along axis 0 (context)."""
+    q = np.asarray(q, dtype=np.int64)
+    n, d = q.shape
+    assert n % pack_size == 0
+    n_packs = n // pack_size
+    qp = q.reshape(n_packs, pack_size, d)
+    mins = qp.min(axis=1)  # [n_packs, d]
+    rng = qp.max(axis=1) - mins
+    widths = bits_required(rng)  # [n_packs, d]
+    writer = _BitWriter()
+    # column-major: all packs of column 0, then column 1, ... (paper Fig. 9
+    # stores per-column pack runs; the interleaving for bank conflicts is a
+    # GPU-ism we do not replicate — see DESIGN.md §3).
+    for col in range(d):
+        for p in range(n_packs):
+            writer.write(qp[p, :, col] - mins[p, col], int(widths[p, col]))
+    payload = writer.finish()
+    payload_bits = int((widths * pack_size).sum())
+    return PackedBlock(
+        payload=payload,
+        widths=widths.T.astype(np.uint8),  # [d, n_packs]
+        mins=mins.T.astype(np.int32),
+        pack_size=pack_size,
+        shape=(n, d),
+        payload_bits=payload_bits,
+    )
+
+
+def unpack_block(blk: PackedBlock) -> np.ndarray:
+    n, d = blk.shape
+    n_packs = n // blk.pack_size
+    out = np.empty((n, d), dtype=np.int64)
+    reader = _BitReader(blk.payload)
+    for col in range(d):
+        for p in range(n_packs):
+            w = int(blk.widths[col, p])
+            vals = reader.read(blk.pack_size, w) + int(blk.mins[col, p])
+            out[p * blk.pack_size : (p + 1) * blk.pack_size, col] = vals
+    return out

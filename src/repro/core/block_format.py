@@ -1,0 +1,144 @@
+"""Block-independent compressed storage format with seamless appending
+(paper §III-B4).
+
+Each 64-token block of each kv-head is compressed independently
+(quantize -> repack -> bit-pack) and serialized as a self-describing chunk;
+chunks append to a flat stream without touching earlier chunks. A directory
+of (head, token_range, offset) entries makes any block independently
+addressable — the property that enables the paper's single-kernel
+decompression and our per-tier grids.
+
+This is the STORAGE/offload tier (host-side, exact paper format). The
+compute tier is tiered.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from .bitpack import (
+    DEFAULT_SIZE_MODEL,
+    PackedBlock,
+    SizeModel,
+    pack_block,
+    unpack_block,
+)
+from .quantization import QuantConfig
+from .repacking import repack
+
+
+@dataclasses.dataclass
+class BlockEntry:
+    head: int
+    token_start: int
+    n_tokens: int
+    perm: np.ndarray  # joint K/V row permutation used at encode time
+    k_block: PackedBlock
+    v_block: PackedBlock
+    k_meta: np.ndarray  # [n_tokens, 2] (scale, zero) per token
+    v_meta: np.ndarray
+
+
+@dataclasses.dataclass
+class CompressedKVStream:
+    """Appendable stream of independently compressed KV blocks."""
+
+    pack_size: int = 8
+    repack_mode: str = "greedy_joint"
+    k_quant: QuantConfig = dataclasses.field(
+        default_factory=lambda: QuantConfig(rel_scale=0.1, granularity="token")
+    )
+    v_quant: QuantConfig = dataclasses.field(
+        default_factory=lambda: QuantConfig(rel_scale=0.2, granularity="token")
+    )
+    entries: list[BlockEntry] = dataclasses.field(default_factory=list)
+
+    # -- encode ------------------------------------------------------------
+    def append(self, k: np.ndarray, v: np.ndarray, head: int, token_start: int):
+        """Compress one block. k, v: [n_tokens, D] float."""
+        n = k.shape[0]
+        qk, sk, zk = _np_quant_tokenwise(k, self.k_quant)
+        qv, sv, zv = _np_quant_tokenwise(v, self.v_quant)
+        perm = repack(qk, qv, self.pack_size, self.repack_mode)
+        entry = BlockEntry(
+            head=head,
+            token_start=token_start,
+            n_tokens=n,
+            perm=perm,
+            k_block=pack_block(qk[perm], self.pack_size),
+            v_block=pack_block(qv[perm], self.pack_size),
+            k_meta=np.stack([sk[perm], zk[perm]], axis=1),
+            v_meta=np.stack([sv[perm], zv[perm]], axis=1),
+        )
+        self.entries.append(entry)
+        return entry
+
+    # -- decode ------------------------------------------------------------
+    def decode_block(self, idx: int, restore_order: bool = False):
+        e = self.entries[idx]
+        qk = unpack_block(e.k_block)
+        qv = unpack_block(e.v_block)
+        k = qk * e.k_meta[:, :1] + e.k_meta[:, 1:]
+        v = qv * e.v_meta[:, :1] + e.v_meta[:, 1:]
+        if restore_order:
+            inv = np.argsort(e.perm)
+            k, v = k[inv], v[inv]
+        return k, v
+
+    def decode_head(self, head: int, restore_order: bool = False):
+        ks, vs = [], []
+        for i, e in enumerate(self.entries):
+            if e.head == head:
+                k, v = self.decode_block(i, restore_order)
+                ks.append(k)
+                vs.append(v)
+        return np.concatenate(ks, axis=0), np.concatenate(vs, axis=0)
+
+    # -- accounting ---------------------------------------------------------
+    def total_bits(self, size_model: SizeModel = DEFAULT_SIZE_MODEL) -> int:
+        bits = 0
+        for e in self.entries:
+            bits += e.k_block.total_bits(size_model) + e.v_block.total_bits(size_model)
+            bits += 2 * e.n_tokens * size_model.token_meta_bits
+        return bits
+
+    def raw_bits(self, size_model: SizeModel = DEFAULT_SIZE_MODEL) -> int:
+        vals = sum(
+            e.n_tokens * (e.k_block.shape[1] + e.v_block.shape[1]) for e in self.entries
+        )
+        return vals * size_model.raw_bits
+
+    def compression_ratio(self, size_model: SizeModel = DEFAULT_SIZE_MODEL) -> float:
+        return self.raw_bits(size_model) / max(self.total_bits(size_model), 1)
+
+    # -- serialization (flat stream: proves append-only layout) -------------
+    def serialize(self) -> tuple[np.ndarray, list[dict]]:
+        words: list[np.ndarray] = []
+        directory: list[dict] = []
+        off = 0
+        for e in self.entries:
+            chunk = np.concatenate([e.k_block.payload, e.v_block.payload])
+            directory.append(
+                {
+                    "head": e.head,
+                    "token_start": e.token_start,
+                    "offset_words": off,
+                    "k_words": len(e.k_block.payload),
+                    "v_words": len(e.v_block.payload),
+                }
+            )
+            words.append(chunk)
+            off += len(chunk)
+        flat = np.concatenate(words) if words else np.zeros(0, np.uint32)
+        return flat, directory
+
+
+def _np_quant_tokenwise(x: np.ndarray, cfg: QuantConfig):
+    lo = x.min(axis=1, keepdims=True)
+    hi = x.max(axis=1, keepdims=True)
+    rng = hi - lo
+    scale = rng / cfg.max_q if cfg.bits is not None else cfg.rel_scale * rng
+    safe = np.where(scale > 0, scale, 1.0)
+    q = np.clip(np.round((x - lo) / safe), 0, cfg.max_q).astype(np.int64)
+    return q, safe[:, 0], lo[:, 0]

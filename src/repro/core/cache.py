@@ -1,0 +1,342 @@
+"""Runtime PackKV cache manager (paper §III-B1/B4 + §III-C glue).
+
+Mirrors the paper's system: a fixed-size **residual buffer** of recent tokens
+in full precision; when it fills past one truncated block (64 tokens), the
+oldest block is quantized, repacked (in-graph V-median), tier-packed and
+**appended** to the compressed region. Everything is static-shape and
+jit-compatible (lax.cond / dynamic_update_slice), so the same code path runs
+under pjit on the production mesh.
+
+Three policies share one pytree layout so serve_step signatures are uniform:
+  * ``none``   — raw bf16 cache (the cuBLAS-equivalent baseline).
+  * ``kivi``   — integer quantization only (single tier, no adaptive widths).
+  * ``packkv`` — full pipeline (token-wise quant + repack + tiered packing).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..utils import pytree_dataclass
+from .quantization import QuantConfig
+from .repacking import median_repack_jnp
+from .tiered import (
+    TierSpec,
+    TieredCache,
+    alloc_tiered,
+    append_block,
+    assign_channel_tiers,
+    pack_tiered,
+    required_channel_widths,
+)
+
+Array = jax.Array
+
+BLOCK = 64  # truncated block size (consistent with KIVI, paper §IV-A)
+
+
+@dataclasses.dataclass(frozen=True)
+class PackKVConfig:
+    """Tunable knobs of the paper's pipeline (paper §IV-A)."""
+
+    policy: str = "packkv"  # none | kivi | packkv
+    k_rel_scale: float = 0.1
+    v_rel_scale: float = 0.2
+    pack_size: int = 8
+    repack: str = "median_v"  # none | median_v (in-graph)
+    residual: int = 128  # max buffer size (recent tokens kept fp16)
+    block: int = BLOCK
+    k_tiers: tuple[int, ...] = (2, 4, 8)
+    k_fracs: tuple[float, ...] = (0.25, 0.5, 0.25)
+    v_tiers: tuple[int, ...] = (2, 4, 8)
+    v_fracs: tuple[float, ...] = (0.25, 0.5, 0.25)
+    # Calibrated static specs (engine build time, core.tiered.choose_tier_spec);
+    # override the frac-based defaults when set.
+    k_spec_static: Optional[TierSpec] = None
+    v_spec_static: Optional[TierSpec] = None
+
+    def k_quant(self) -> QuantConfig:
+        return QuantConfig(rel_scale=self.k_rel_scale, granularity="token")
+
+    def v_quant(self) -> QuantConfig:
+        return QuantConfig(rel_scale=self.v_rel_scale, granularity="token")
+
+    def k_spec(self, head_dim: int) -> TierSpec:
+        if self.k_spec_static is not None:
+            return self.k_spec_static
+        if self.policy == "kivi":
+            return TierSpec(widths=(4,), counts=(head_dim,), pack_size=self.pack_size)
+        return TierSpec.for_head_dim(head_dim, self.k_tiers, self.k_fracs)
+
+    def v_spec(self, head_dim: int) -> TierSpec:
+        if self.v_spec_static is not None:
+            return self.v_spec_static
+        if self.policy == "kivi":
+            return TierSpec(widths=(4,), counts=(head_dim,), pack_size=self.pack_size)
+        return TierSpec.for_head_dim(head_dim, self.v_tiers, self.v_fracs)
+
+
+@pytree_dataclass(meta_fields=("cfg",))
+class LayerKVCache:
+    """Per-layer decode cache. ``k``/``v`` are None for policy='none'."""
+
+    k: Optional[TieredCache]  # compressed region (channels-major)
+    v: Optional[TieredCache]
+    raw_k: Optional[Array]  # policy='none': bf16 [B, Hkv, Lcap, D]
+    raw_v: Optional[Array]
+    resid_k: Array  # bf16 [B, Hkv, R, D]
+    resid_v: Array
+    n_comp: Array  # i32 [] tokens in compressed/raw region
+    n_resid: Array  # i32 [] tokens in residual buffer
+    cfg: PackKVConfig
+
+
+def alloc_layer_cache(
+    cfg: PackKVConfig,
+    batch: int,
+    h_kv: int,
+    head_dim: int,
+    capacity: int,
+    dtype=jnp.bfloat16,
+) -> LayerKVCache:
+    """Preallocate a cache with static ``capacity`` (compressed region)."""
+    R = cfg.residual
+    resid = jnp.zeros((batch, h_kv, R, head_dim), dtype)
+    zero_i = jnp.zeros((), jnp.int32)
+    if cfg.policy == "none":
+        raw = jnp.zeros((batch, h_kv, capacity, head_dim), dtype)
+        return LayerKVCache(
+            k=None, v=None, raw_k=raw, raw_v=raw, resid_k=resid, resid_v=resid,
+            n_comp=zero_i, n_resid=zero_i, cfg=cfg,
+        )
+    k = alloc_tiered(batch, h_kv, capacity, cfg.k_spec(head_dim))
+    v = alloc_tiered(batch, h_kv, capacity, cfg.v_spec(head_dim))
+    return LayerKVCache(
+        k=k, v=v, raw_k=None, raw_v=None, resid_k=resid, resid_v=resid,
+        n_comp=zero_i, n_resid=zero_i, cfg=cfg,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Quantize + repack + pack one block (in-graph)
+# ---------------------------------------------------------------------------
+
+
+def _quant_tokenwise(x: Array, qc: QuantConfig):
+    """x: [B,H,N,D] -> (q i32, scale f32 [B,H,N], zero f32 [B,H,N])."""
+    lo = x.min(axis=-1)
+    hi = x.max(axis=-1)
+    rng = (hi - lo).astype(jnp.float32)
+    scale = jnp.where(rng > 0, qc.rel_scale * rng, 1.0)
+    q = jnp.clip(
+        jnp.round((x.astype(jnp.float32) - lo[..., None].astype(jnp.float32)) / scale[..., None]),
+        0,
+        qc.max_q,
+    ).astype(jnp.int32)
+    return q, scale, lo.astype(jnp.float32)
+
+
+def compress_block(
+    k: Array, v: Array, cfg: PackKVConfig, k_perm: Array, v_perm: Array
+) -> tuple[TieredCache, TieredCache]:
+    """Compress one [B,H,N,D] block pair into single-block TieredCaches.
+
+    k_perm/v_perm: [B,H,D] channel->tier assignment (from calibration).
+    """
+    qk, sk, zk = _quant_tokenwise(k, cfg.k_quant())
+    qv, sv, zv = _quant_tokenwise(v, cfg.v_quant())
+    qk, qv, perm = _repack_tokens(qk, qv, cfg)
+    if perm is not None:
+        # per-token metadata rides along with the joint permutation
+        take_meta = lambda a: jnp.take_along_axis(a, perm, axis=-1)
+        sk, zk = take_meta(sk), take_meta(zk)
+        sv, zv = take_meta(sv), take_meta(zv)
+    # channels-major
+    qk_cm = jnp.swapaxes(qk, -1, -2)  # [B,H,D,N]
+    qv_cm = jnp.swapaxes(qv, -1, -2)
+    kc = pack_tiered(qk_cm, k_perm, sk, zk, cfg.k_spec(k.shape[-1]))
+    vc = pack_tiered(qv_cm, v_perm, sv, zv, cfg.v_spec(v.shape[-1]))
+    return kc, vc
+
+
+def _repack_tokens(qk: Array, qv: Array, cfg: PackKVConfig):
+    """Joint token permutation (paper §III-B3); returns permuted (qk, qv, perm).
+
+    perm is None for repack='none'. Permutation is computed from the V part
+    (V-median) and applied jointly to K and V — valid by the permutation
+    invariance of decode attention.
+    """
+    if cfg.repack != "median_v":
+        return qk, qv, None
+    perm = median_repack_jnp(qv.reshape(*qv.shape[:-2], -1, qv.shape[-1]))
+    take = lambda a: jnp.take_along_axis(a, perm[..., None], axis=-2)
+    return take(qk), take(qv), perm
+
+
+def calibrate_channel_tiers(k: Array, v: Array, cfg: PackKVConfig):
+    """Assign channel tiers from (prefill) data. k, v: [B,H,L,D].
+
+    Widths are measured AFTER token repacking so the tier assignment sees
+    the exact pack ranges the compressor will encode.
+    """
+    qk, _, _ = _quant_tokenwise(k, cfg.k_quant())
+    qv, _, _ = _quant_tokenwise(v, cfg.v_quant())
+    L = k.shape[-2]
+    Lb = (L // cfg.block) * cfg.block
+    if Lb == 0:  # not enough data — identity assignment
+        D = k.shape[-1]
+        eye = jnp.broadcast_to(jnp.arange(D, dtype=jnp.int32), k.shape[:-2] + (D,))
+        return eye, eye
+    qk, qv, _ = _repack_tokens(qk[..., :Lb, :], qv[..., :Lb, :], cfg)
+    wk = required_channel_widths(jnp.swapaxes(qk, -1, -2), cfg.pack_size)
+    wv = required_channel_widths(jnp.swapaxes(qv, -1, -2), cfg.pack_size)
+    D = k.shape[-1]
+    return (
+        assign_channel_tiers(wk, cfg.k_spec(D)),
+        assign_channel_tiers(wv, cfg.v_spec(D)),
+    )
+
+
+def calibrate_specs(k: Array, v: Array, cfg: PackKVConfig, slack: int = 0):
+    """Host-side: pick static TierSpecs from calibration K/V ([B,H,L,D]).
+
+    Returns a new PackKVConfig with k_spec_static / v_spec_static set. Run
+    once at engine build (before compiling the decode step) — the TPU
+    analogue of the paper's per-model configuration sweep (§IV-B).
+    """
+    from .tiered import choose_tier_spec
+
+    qk, _, _ = _quant_tokenwise(k, cfg.k_quant())
+    qv, _, _ = _quant_tokenwise(v, cfg.v_quant())
+    L = k.shape[-2]
+    Lb = (L // cfg.block) * cfg.block
+    if Lb == 0:  # not enough calibration data for one block
+        return cfg
+    qk, qv, _ = _repack_tokens(qk[..., :Lb, :], qv[..., :Lb, :], cfg)
+    wk = required_channel_widths(jnp.swapaxes(qk, -1, -2), cfg.pack_size)
+    wv = required_channel_widths(jnp.swapaxes(qv, -1, -2), cfg.pack_size)
+    return dataclasses.replace(
+        cfg,
+        k_spec_static=choose_tier_spec(wk, pack_size=cfg.pack_size, slack=slack),
+        v_spec_static=choose_tier_spec(wv, pack_size=cfg.pack_size, slack=slack),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Cache update ops
+# ---------------------------------------------------------------------------
+
+
+def prefill_cache(cache: LayerKVCache, k: Array, v: Array) -> LayerKVCache:
+    """Fill the cache from prefill K/V ([B,H,L,D]). L is static here.
+
+    Compresses all complete blocks; the remainder goes to the residual.
+    Calibrates channel tiers from the prefill data (per batch, head).
+    """
+    cfg = cache.cfg
+    B, H, L, D = k.shape
+    n_blocks = L // cfg.block
+    Lb = n_blocks * cfg.block
+    if cfg.policy == "none":
+        raw_k = jax.lax.dynamic_update_slice_in_dim(
+            cache.raw_k, k[..., :Lb, :].astype(cache.raw_k.dtype), 0, axis=-2
+        )
+        raw_v = jax.lax.dynamic_update_slice_in_dim(
+            cache.raw_v, v[..., :Lb, :].astype(cache.raw_v.dtype), 0, axis=-2
+        )
+        new = dataclasses.replace(cache, raw_k=raw_k, raw_v=raw_v)
+    else:
+        k_perm, v_perm = calibrate_channel_tiers(k[..., :Lb, :], v[..., :Lb, :], cfg)
+        kc, vc = compress_block(k[..., :Lb, :], v[..., :Lb, :], cfg, k_perm, v_perm)
+        new_k = append_block(
+            dataclasses.replace(cache.k, chan_perm=k_perm), kc, jnp.int32(0)
+        )
+        new_v = append_block(
+            dataclasses.replace(cache.v, chan_perm=v_perm), vc, jnp.int32(0)
+        )
+        new = dataclasses.replace(cache, k=new_k, v=new_v)
+    rem = L - Lb
+    resid_k, resid_v = cache.resid_k, cache.resid_v
+    if rem:
+        resid_k = jax.lax.dynamic_update_slice_in_dim(
+            resid_k, k[..., Lb:, :].astype(resid_k.dtype), 0, axis=-2
+        )
+        resid_v = jax.lax.dynamic_update_slice_in_dim(
+            resid_v, v[..., Lb:, :].astype(resid_v.dtype), 0, axis=-2
+        )
+    return dataclasses.replace(
+        new,
+        resid_k=resid_k,
+        resid_v=resid_v,
+        n_comp=jnp.int32(Lb),
+        n_resid=jnp.int32(rem),
+    )
+
+
+def append_token(
+    cache: LayerKVCache, k_new: Array, v_new: Array, ring: bool = False
+) -> LayerKVCache:
+    """Decode-step append. k_new/v_new: [B,H,1,D].
+
+    Writes into the residual; when the residual is full, compresses the
+    oldest block and appends it to the compressed region (lax.cond — the
+    amortized O(1) compression cost of paper §III-D).
+
+    ring=True: sliding-window mode (recurrentgemma local attention) — the
+    compressed region is a circular block buffer of ``capacity`` tokens;
+    blocks overwrite the oldest slot. Valid because decode attention is
+    permutation-invariant over the cached window (DESIGN.md §4); callers
+    mask with ``n_valid = min(n_comp, capacity)``.
+    """
+    cfg = cache.cfg
+    R = cfg.residual
+    capacity = (
+        cache.raw_k.shape[-2] if cfg.policy == "none" else cache.k.capacity
+    )
+
+    def write(c: LayerKVCache) -> LayerKVCache:
+        rk = jax.lax.dynamic_update_slice_in_dim(
+            c.resid_k, k_new.astype(c.resid_k.dtype), c.n_resid, axis=-2
+        )
+        rv = jax.lax.dynamic_update_slice_in_dim(
+            c.resid_v, v_new.astype(c.resid_v.dtype), c.n_resid, axis=-2
+        )
+        return dataclasses.replace(c, resid_k=rk, resid_v=rv, n_resid=c.n_resid + 1)
+
+    def flush(c: LayerKVCache) -> LayerKVCache:
+        blk_k = c.resid_k[..., : cfg.block, :]
+        blk_v = c.resid_v[..., : cfg.block, :]
+        off = (c.n_comp % capacity) if ring else c.n_comp
+        if cfg.policy == "none":
+            raw_k = jax.lax.dynamic_update_slice_in_dim(
+                c.raw_k, blk_k, off, axis=-2
+            )
+            raw_v = jax.lax.dynamic_update_slice_in_dim(
+                c.raw_v, blk_v, off, axis=-2
+            )
+            c = dataclasses.replace(c, raw_k=raw_k, raw_v=raw_v)
+        else:
+            kc, vc = compress_block(
+                blk_k, blk_v, cfg, c.k.chan_perm, c.v.chan_perm
+            )
+            c = dataclasses.replace(
+                c,
+                k=append_block(c.k, kc, off),
+                v=append_block(c.v, vc, off),
+            )
+        # shift residual left by one block
+        rk = jnp.roll(c.resid_k, -cfg.block, axis=-2)
+        rv = jnp.roll(c.resid_v, -cfg.block, axis=-2)
+        return dataclasses.replace(
+            c,
+            resid_k=rk,
+            resid_v=rv,
+            n_comp=c.n_comp + cfg.block,
+            n_resid=c.n_resid - cfg.block,
+        )
+
+    cache = jax.lax.cond(cache.n_resid >= R, flush, lambda c: c, cache)
+    return write(cache)

@@ -1,0 +1,64 @@
+"""Compression-policy registry (DESIGN.md §2).
+
+A policy names a full cache configuration preset; launchers and the
+serving engine resolve ``--policy`` strings here. ``packkv_storage``
+denotes the exact-paper host format (CompressedKVStream) used for
+offload/checkpoints; the runtime decode policies map onto PackKVConfig.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from .cache import PackKVConfig
+
+_REGISTRY: dict[str, Callable[[], PackKVConfig]] = {}
+
+
+def register(name: str):
+    def deco(fn):
+        _REGISTRY[name] = fn
+        return fn
+
+    return deco
+
+
+@register("none")
+def _none() -> PackKVConfig:
+    """Uncompressed bf16 cache — the cuBLAS-equivalent baseline."""
+    return PackKVConfig(policy="none")
+
+
+@register("kivi")
+def _kivi() -> PackKVConfig:
+    """Integer quantization only (single 4-bit tier, no adaptive widths)."""
+    return PackKVConfig(policy="kivi")
+
+
+@register("packkv")
+def _packkv() -> PackKVConfig:
+    """Full paper pipeline: token-wise quant + V-median repack + tiers."""
+    return PackKVConfig(policy="packkv")
+
+
+@register("packkv_tight")
+def _packkv_tight() -> PackKVConfig:
+    """Near-lossless setting (rel scales 0.02) for fidelity-critical serving."""
+    return PackKVConfig(policy="packkv", k_rel_scale=0.02, v_rel_scale=0.02)
+
+
+@register("packkv_aggressive")
+def _packkv_aggressive() -> PackKVConfig:
+    """Paper Table II/V turning-point regime (max compression at ~5% drop)."""
+    return PackKVConfig(policy="packkv", k_rel_scale=0.2, v_rel_scale=0.3)
+
+
+def get_policy(name: str, **overrides) -> PackKVConfig:
+    if name not in _REGISTRY:
+        raise KeyError(f"unknown policy {name!r}; known: {sorted(_REGISTRY)}")
+    cfg = _REGISTRY[name]()
+    return dataclasses.replace(cfg, **overrides) if overrides else cfg
+
+
+def available() -> list[str]:
+    return sorted(_REGISTRY)

@@ -1,0 +1,157 @@
+"""Error-controlled quantization for KV-cache tensors.
+
+Implements the paper's only lossy step (PackKV §III-B2) plus the KIVI
+granularities used as the baseline:
+
+* **token-wise**  — one (scale, zero) per (token, head): PackKV's choice for
+  both K and V.
+* **channel-wise** — one (scale, zero) per (channel-group, channel): KIVI's
+  choice for K (group size 32/64/128 along the context dim).
+
+Error model (paper §IV-A): ``scale = rel_quant_scale * (max - min)`` so the
+max abs error is ``scale / 2 = rel_error_bound * (max - min)``.
+
+All functions are pure jnp and jit-friendly; integer outputs use int32 (the
+storage width is decided later by bit-packing, not here).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantConfig:
+    """Configuration of the (lossy) quantization stage.
+
+    Attributes:
+      rel_scale: relative quantization scale in (0, 1]. actual scale =
+        rel_scale * (max - min) of the quantization unit.
+      granularity: 'token' (PackKV) or 'channel' (KIVI-K).
+      group_size: context-dim group length for channel-wise quantization.
+      bits: optional hard cap on integer width (KIVI-style b-bit quant). When
+        set, levels = 2**bits and rel_scale is ignored.
+    """
+
+    rel_scale: float = 0.1
+    granularity: str = "token"
+    group_size: int = 64
+    bits: int | None = None
+
+    @property
+    def levels(self) -> int:
+        if self.bits is not None:
+            return 2 ** self.bits
+        # round(1/rel) + 1 integer levels cover [min, max] with step
+        # rel*(max-min); matches the paper's rel_error_bound = rel/2.
+        return int(round(1.0 / self.rel_scale)) + 1
+
+    @property
+    def max_q(self) -> int:
+        return self.levels - 1
+
+
+def _minmax(x: Array, axis, keepdims=True):
+    return jnp.min(x, axis=axis, keepdims=keepdims), jnp.max(
+        x, axis=axis, keepdims=keepdims
+    )
+
+
+def quantize_tokenwise(x: Array, cfg: QuantConfig):
+    """Token-wise quantization over the last dim.
+
+    x: [..., L, D] (typically [B, H, L, D]); each (..., L) vector of length D
+    gets its own (scale, zero).
+
+    Returns (q:int32 same shape, scale:f32 [...,L,1], zero:f32 [...,L,1]).
+    """
+    lo, hi = _minmax(x, axis=-1)
+    rng = hi - lo
+    if cfg.bits is not None:
+        scale = rng / cfg.max_q
+    else:
+        scale = cfg.rel_scale * rng
+    # Guard degenerate all-equal vectors.
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round((x - lo) / safe), 0, cfg.max_q).astype(jnp.int32)
+    return q, safe.astype(jnp.float32), lo.astype(jnp.float32)
+
+
+def dequantize_tokenwise(q: Array, scale: Array, zero: Array, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale + zero).astype(dtype)
+
+
+def quantize_channelwise(x: Array, cfg: QuantConfig):
+    """Channel-wise (KIVI-K) quantization.
+
+    x: [..., L, D]. The context dim L is split into groups of ``group_size``;
+    each (group, channel) pair gets its own (scale, zero), i.e. statistics are
+    taken along the context dim inside the group.
+
+    L must be divisible by group_size (callers pad; the runtime cache always
+    compresses full blocks).
+    Returns (q, scale [..., L/g, 1, D], zero [..., L/g, 1, D]).
+    """
+    g = cfg.group_size
+    *lead, L, D = x.shape
+    assert L % g == 0, f"context {L} not divisible by group {g}"
+    xg = x.reshape(*lead, L // g, g, D)
+    lo, hi = _minmax(xg, axis=-2)
+    rng = hi - lo
+    if cfg.bits is not None:
+        scale = rng / cfg.max_q
+    else:
+        scale = cfg.rel_scale * rng
+    safe = jnp.where(scale > 0, scale, 1.0)
+    q = jnp.clip(jnp.round((xg - lo) / safe), 0, cfg.max_q).astype(jnp.int32)
+    return (
+        q.reshape(*lead, L, D),
+        safe.astype(jnp.float32),
+        lo.astype(jnp.float32),
+    )
+
+
+def dequantize_channelwise(
+    q: Array, scale: Array, zero: Array, group_size: int, dtype=jnp.float32
+):
+    *lead, L, D = q.shape
+    g = group_size
+    qg = q.reshape(*lead, L // g, g, D).astype(jnp.float32)
+    x = qg * scale + zero
+    return x.reshape(*lead, L, D).astype(dtype)
+
+
+def quantize(x: Array, cfg: QuantConfig):
+    if cfg.granularity == "token":
+        return quantize_tokenwise(x, cfg)
+    if cfg.granularity == "channel":
+        return quantize_channelwise(x, cfg)
+    raise ValueError(f"unknown granularity {cfg.granularity!r}")
+
+
+def dequantize(q: Array, scale: Array, zero: Array, cfg: QuantConfig, dtype=jnp.float32):
+    if cfg.granularity == "token":
+        return dequantize_tokenwise(q, scale, zero, dtype)
+    if cfg.granularity == "channel":
+        return dequantize_channelwise(q, scale, zero, cfg.group_size, dtype)
+    raise ValueError(f"unknown granularity {cfg.granularity!r}")
+
+
+@partial(jax.jit, static_argnames=("levels",))
+def _error_bound_check(x, q, scale, zero, levels):
+    deq = q.astype(jnp.float32) * scale + zero
+    return jnp.max(jnp.abs(deq - x) / jnp.maximum(scale, 1e-30))
+
+
+def max_relative_error(x: Array, cfg: QuantConfig) -> float:
+    """max |x - deq| / scale — should be <= 0.5 (+ rounding eps)."""
+    q, s, z = quantize(x, cfg)
+    if cfg.granularity == "channel":
+        deq = dequantize(q, s, z, cfg)
+        return float(jnp.max(jnp.abs(deq - x) / jnp.maximum(jnp.max(s), 1e-30)))
+    return float(_error_bound_check(x, q, s, z, cfg.levels))

@@ -1,0 +1,109 @@
+"""Encode-aware repacking (paper §III-B3, Algorithm 1).
+
+Reorders KV token vectors inside a block so that each bit-packing pack holds
+similar vectors, shrinking per-pack ranges and therefore encoded widths.
+Correctness rests on the permutation invariance of decode attention
+(Att(q, PK, PV) == Att(q, K, V)); the permutation is applied JOINTLY to K and
+V rows and never needs to be undone at decode time.
+
+Implementations:
+
+* ``greedy_repack``   — Algorithm 1: seed each pack with the vector closest
+  to the centroid of the remaining set, then grow it by least incremental
+  bit cost. O(N²D) on the host; storage-tier only.
+* ``median_repack``   — "V Median Repacking": sort tokens by the median of
+  their (quantized) V vector. O(N log N); also available in-graph (jnp) so
+  the runtime cache can repack on-TPU.
+* ``identity_repack`` — baseline (mode "none").
+
+All return a permutation ``perm`` with the meaning: row i of the repacked
+block is row ``perm[i]`` of the input.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from .bitpack import bits_required
+
+
+def identity_repack(q: np.ndarray, pack_size: int) -> np.ndarray:
+    return np.arange(q.shape[0])
+
+
+def median_repack(qv: np.ndarray, pack_size: int) -> np.ndarray:
+    """Sort token rows by the median of their V vector (paper §III-B3)."""
+    med = np.median(np.asarray(qv), axis=1)
+    return np.argsort(med, kind="stable")
+
+
+def median_repack_jnp(qv: jnp.ndarray) -> jnp.ndarray:
+    """In-graph V-median repacking: jit/TPU-friendly (argsort + gather)."""
+    med = jnp.median(qv, axis=-1)
+    return jnp.argsort(med, axis=-1, stable=True)
+
+
+def _pack_cost(mins: np.ndarray, maxs: np.ndarray, count: int) -> int:
+    """Bit cost of one pack given per-dim running min/max ([D] each)."""
+    return int(bits_required(maxs - mins).sum()) * count
+
+
+def greedy_repack(q: np.ndarray, pack_size: int) -> np.ndarray:
+    """Algorithm 1: greedy repacking for bit-packing.
+
+    q: [N, D] quantized integers (the vectors being grouped — K, V, or the
+    concatenation [K|V] for joint optimization).
+
+    Returns perm [N] — concatenation of emitted packs.
+
+    Incremental cost uses vectorized candidate evaluation: for pack state
+    (running per-dim min/max), candidate j's marginal cost is
+    sum_d bits(max(max_d, q_jd) - min(min_d, q_jd)) - current_bits, evaluated
+    for all remaining j at once (O(R·D) per selection → O(N²D) total, as the
+    paper states).
+    """
+    q = np.asarray(q, dtype=np.int64)
+    n, d = q.shape
+    assert n % pack_size == 0
+    remaining = np.arange(n)
+    order: list[int] = []
+    while remaining.size:
+        rq = q[remaining]
+        centroid = rq.mean(axis=0)
+        seed_pos = int(np.argmin(((rq - centroid) ** 2).sum(axis=1)))
+        cur_min = rq[seed_pos].copy()
+        cur_max = rq[seed_pos].copy()
+        pack = [int(remaining[seed_pos])]
+        remaining = np.delete(remaining, seed_pos)
+        while len(pack) < pack_size and remaining.size:
+            rq = q[remaining]
+            cand_min = np.minimum(cur_min, rq)  # [R, D]
+            cand_max = np.maximum(cur_max, rq)
+            cost = bits_required(cand_max - cand_min).sum(axis=1)
+            j = int(np.argmin(cost))
+            cur_min = cand_min[j]
+            cur_max = cand_max[j]
+            pack.append(int(remaining[j]))
+            remaining = np.delete(remaining, j)
+        order.extend(pack)
+    return np.asarray(order)
+
+
+REPACKERS = {
+    "none": lambda qk, qv, pack_size: identity_repack(qk, pack_size),
+    "greedy_k": lambda qk, qv, pack_size: greedy_repack(qk, pack_size),
+    "greedy_v": lambda qk, qv, pack_size: greedy_repack(qv, pack_size),
+    "greedy_joint": lambda qk, qv, pack_size: greedy_repack(
+        np.concatenate([qk, qv], axis=1), pack_size
+    ),
+    "median_v": lambda qk, qv, pack_size: median_repack(qv, pack_size),
+}
+
+
+def repack(qk: np.ndarray, qv: np.ndarray, pack_size: int, mode: str) -> np.ndarray:
+    """Compute the joint K/V row permutation for ``mode``."""
+    try:
+        fn = REPACKERS[mode]
+    except KeyError:
+        raise ValueError(f"unknown repacking mode {mode!r}; one of {list(REPACKERS)}")
+    return fn(qk, qv, pack_size)

@@ -1,0 +1,401 @@
+"""Static-shape tiered packing — the TPU COMPUTE-tier format (DESIGN.md §3).
+
+The paper's per-pack adaptive widths produce variable-length buffers that
+Mosaic/XLA cannot address statically. We keep the adaptive-width *win* while
+making every buffer static:
+
+* Channels of each (kv-head) are **bucketed into width tiers** (e.g. 1/2/4/8
+  bits). Bucket membership is a per-head channel permutation computed from
+  calibration statistics (the prefill KV). Permuting K channels is absorbed
+  by permuting q (free); permuting V channels is undone by inverse-permuting
+  the attention output (free).
+* Within a tier, values are packed at the tier width into dense uint32 words
+  along the context dimension — statically shaped, appendable at 64-token
+  block granularity.
+* **Shift-packs**: each pack of 8 stores an int8 ``min`` and a 2-bit
+  ``shift``; values are stored as ``(q - min) >> shift`` so a pack whose
+  local range exceeds the tier width degrades gracefully (error bound
+  scales by 2^shift) instead of overflowing. Four shifts share one uint8.
+
+Layout (channels-major — matches both the packing direction and the decode
+mat-vec access pattern, so no transpose is ever materialized):
+
+  payload[t] : u32 [..., C_t, L*w_t/32]
+  mins[t]    : i8  [..., C_t, L/pack]
+  shifts[t]  : u8  [..., C_t, ceil(L/pack/4)]
+
+Per-token quantization metadata (scale, zero — fp32 here, counted as fp16 in
+CR accounting) lives next to the buffers and is folded into the mat-vec
+(see kernels/ref.py) rather than applied during decompression.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..utils import bits_required_jnp, cdiv, pytree_dataclass
+
+Array = jax.Array
+
+PACK = 8  # values per pack (paper Fig. 13: 8/16 optimal; 8 aligns with u32 at <=4b)
+MAX_SHIFT = 3
+
+
+@dataclasses.dataclass(frozen=True)
+class TierSpec:
+    """Static tier layout for one cache tensor (K or V).
+
+    widths: ascending bit widths, each in {0,1,2,4,8,16} (must divide 32 or be 0).
+    counts: channels per tier; sums to head_dim. Multiples of 8 recommended
+      (VREG sublane alignment) and of the TP shard count.
+    """
+
+    widths: tuple[int, ...] = (2, 4, 8)
+    counts: tuple[int, ...] = (32, 64, 32)
+    pack_size: int = PACK
+
+    def __post_init__(self):
+        for w in self.widths:
+            assert w == 0 or 32 % w == 0, f"width {w} must divide 32"
+        assert len(self.widths) == len(self.counts)
+        assert tuple(sorted(self.widths)) == tuple(self.widths)
+
+    @property
+    def head_dim(self) -> int:
+        return sum(self.counts)
+
+    def words_per_token(self, tier: int) -> float:
+        return self.widths[tier] / 32.0
+
+    def payload_words(self, tier: int, n_tokens: int) -> int:
+        return n_tokens * self.widths[tier] // 32 if self.widths[tier] else 0
+
+    def avg_bits_per_value(self) -> float:
+        """Payload + pack metadata bits per value (excl. token meta)."""
+        d = self.head_dim
+        payload = sum(w * c for w, c in zip(self.widths, self.counts)) / d
+        meta = (8 + 2) / self.pack_size  # i8 min + 2b shift per pack
+        return payload + meta
+
+    @staticmethod
+    def for_head_dim(head_dim: int, widths=(2, 4, 8), fracs=(0.25, 0.5, 0.25)):
+        assert abs(sum(fracs) - 1.0) < 1e-6
+        counts = [int(round(f * head_dim / 8)) * 8 for f in fracs[:-1]]
+        counts.append(head_dim - sum(counts))
+        return TierSpec(widths=tuple(widths), counts=tuple(counts))
+
+
+@pytree_dataclass(meta_fields=("width", "pack_size"))
+class TierBuffer:
+    payload: Array  # u32 [..., C_t, L*w/32]
+    mins: Array  # i8  [..., C_t, L/pack]
+    shifts: Array  # u8  [..., C_t, ceil(L/pack/4)]
+    width: int
+    pack_size: int
+
+
+@pytree_dataclass(meta_fields=("spec",))
+class TieredCache:
+    """One compressed cache tensor (K or V of one layer stack).
+
+    Leading dims of every array are [..., (layers?) B, H_kv].
+    """
+
+    tiers: tuple[TierBuffer, ...]
+    chan_perm: Array  # i32 [..., H_kv, D] position -> original channel
+    scale: Array  # f32 [..., B, H_kv, L] per-token quant scale
+    zero: Array  # f32 [..., B, H_kv, L]
+    spec: TierSpec
+
+    @property
+    def capacity(self) -> int:
+        return self.scale.shape[-1]
+
+
+# ---------------------------------------------------------------------------
+# Packing / unpacking primitives (pure jnp, static shapes)
+# ---------------------------------------------------------------------------
+
+
+def pack_words(stored: Array, width: int) -> Array:
+    """Pack integer values (already < 2**width) along the last dim into u32.
+
+    stored: [..., L] -> u32 [..., L*width/32].
+    """
+    if width == 0:
+        return jnp.zeros(stored.shape[:-1] + (0,), jnp.uint32)
+    vpw = 32 // width
+    *lead, L = stored.shape
+    assert L % vpw == 0
+    s = stored.astype(jnp.uint32).reshape(*lead, L // vpw, vpw)
+    offsets = (jnp.arange(vpw, dtype=jnp.uint32) * width).astype(jnp.uint32)
+    return jnp.sum(s << offsets, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_words(words: Array, width: int, n: int) -> Array:
+    """Inverse of pack_words: u32 [..., n*width/32] -> i32 [..., n]."""
+    if width == 0:
+        return jnp.zeros(words.shape[:-1] + (n,), jnp.int32)
+    vpw = 32 // width
+    offsets = (jnp.arange(vpw, dtype=jnp.uint32) * width).astype(jnp.uint32)
+    mask = jnp.uint32(2**width - 1)
+    vals = (words[..., None] >> offsets) & mask
+    return vals.reshape(*words.shape[:-1], n).astype(jnp.int32)
+
+
+def pack_shift_fields(shifts: Array) -> Array:
+    """Pack 2-bit shift fields, 4 per uint8. shifts: [..., P] -> u8 [..., ceil(P/4)]."""
+    *lead, P = shifts.shape
+    pad = (-P) % 4
+    s = jnp.pad(shifts, [(0, 0)] * len(lead) + [(0, pad)]).astype(jnp.uint32)
+    s = s.reshape(*lead, (P + pad) // 4, 4)
+    offsets = jnp.arange(4, dtype=jnp.uint32) * 2
+    return jnp.sum(s << offsets, axis=-1, dtype=jnp.uint32).astype(jnp.uint8)
+
+
+def unpack_shift_fields(packed: Array, P: int) -> Array:
+    idx = jnp.arange(P)
+    word = jnp.take(packed.astype(jnp.int32), idx // 4, axis=-1)
+    return (word >> (2 * (idx % 4))) & 3
+
+
+def pack_tier(q: Array, width: int, pack_size: int = PACK) -> TierBuffer:
+    """Pack quantized integers of one tier's channels.
+
+    q: i32 [..., C_t, L] channels-major. Returns a TierBuffer.
+    """
+    *lead, C, L = q.shape
+    assert L % pack_size == 0
+    P = L // pack_size
+    qp = q.reshape(*lead, C, P, pack_size)
+    mins = qp.min(axis=-1)  # [..., C, P]
+    rng = qp.max(axis=-1) - mins
+    needed = bits_required_jnp(rng)
+    shift = jnp.clip(needed - width, 0, MAX_SHIFT)
+    stored = (qp - mins[..., None]) >> shift[..., None]
+    # Clamp in case needed - width > MAX_SHIFT (outlier beyond tier budget;
+    # bounded by construction when the top tier width >= ceil(log2(levels))).
+    stored = jnp.minimum(stored, (1 << width) - 1 if width else 0)
+    payload = pack_words(stored.reshape(*lead, C, L), width)
+    return TierBuffer(
+        payload=payload,
+        mins=mins.astype(jnp.int8),
+        shifts=pack_shift_fields(shift),
+        width=width,
+        pack_size=pack_size,
+    )
+
+
+def unpack_tier(buf: TierBuffer, L: int) -> Array:
+    """Reconstruct quantized integers: i32 [..., C_t, L] (approx if shifted)."""
+    pack_size = buf.pack_size
+    P = L // pack_size
+    stored = unpack_words(buf.payload, buf.width, L)
+    *lead, C, _ = stored.shape
+    stored = stored.reshape(*lead, C, P, pack_size)
+    shift = unpack_shift_fields(buf.shifts, P)[..., None]  # [..., C, P, 1]
+    mins = buf.mins.astype(jnp.int32)[..., None]
+    # mid-rise reconstruction of dropped low bits
+    half = jnp.where(shift > 0, (1 << jnp.maximum(shift - 1, 0)), 0)
+    q = (stored << shift) + half + mins
+    return q.reshape(*lead, C, L)
+
+
+# ---------------------------------------------------------------------------
+# Channel tier assignment (calibration)
+# ---------------------------------------------------------------------------
+
+
+def required_channel_widths(q: Array, pack_size: int = PACK) -> Array:
+    """Max per-pack width needed by each channel.
+
+    q: i32 [..., C, L] -> i32 [..., C].
+    """
+    *lead, C, L = q.shape
+    qp = q.reshape(*lead, C, L // pack_size, pack_size)
+    rng = qp.max(axis=-1) - qp.min(axis=-1)
+    return bits_required_jnp(rng).max(axis=-1)
+
+
+def assign_channel_tiers(widths: Array, spec: TierSpec) -> Array:
+    """Channel permutation: ascending required width fills tiers in order.
+
+    widths: i32 [..., D] -> perm i32 [..., D]; perm[i] = original channel at
+    packed position i. Positions [0, counts[0]) belong to tier 0, etc.
+    """
+    return jnp.argsort(widths, axis=-1, stable=True)
+
+
+def choose_tier_spec(
+    widths,
+    candidates: tuple[int, ...] = (1, 2, 4, 8),
+    pack_size: int = PACK,
+    align: int = 8,
+    slack: int = 0,
+) -> TierSpec:
+    """Pick STATIC tier widths/counts from calibrated channel widths.
+
+    Host-side (numpy): called once at engine build from a calibration pass,
+    before the decode step is compiled — the TPU analogue of the paper's
+    per-model empirical configuration (§IV-B). The returned spec is static
+    so every compiled buffer shape is fixed.
+
+    widths: i32 [..., D] required per-channel widths (leading dims = heads/
+      batches are pooled worst-case per channel RANK, so every head can fill
+      each tier without shift when slack=0).
+    slack: allow channels needing up to ``width + slack`` bits into a tier
+      (absorbed by shift-packs at 2^slack error growth) — trades accuracy
+      for compression like the paper's rel-scale knob.
+    """
+    w = np.asarray(widths)
+    D = w.shape[-1]
+    rank_w = np.sort(w.reshape(-1, D), axis=1).max(axis=0)  # worst head per rank
+    need = int(rank_w.max())
+    cands = [c for c in candidates if c < need + 1] or [candidates[0]]
+    top = min([c for c in candidates if c >= need] or [max(candidates)])
+    if top not in cands:
+        cands.append(top)
+    specs: list[tuple[int, int]] = []
+    offs = 0
+    for c in cands[:-1]:
+        n = int((rank_w <= c + slack).sum())
+        n = (n // align) * align
+        take = max(0, n - offs)
+        if take:
+            specs.append((c, take))
+            offs += take
+    if D - offs:
+        specs.append((cands[-1], D - offs))
+    return TierSpec(
+        widths=tuple(c for c, _ in specs),
+        counts=tuple(n for _, n in specs),
+        pack_size=pack_size,
+    )
+
+
+def chan_inverse_perm(perm: Array) -> Array:
+    D = perm.shape[-1]
+    inv = jnp.zeros_like(perm)
+    return jnp.put_along_axis(
+        inv, perm, jnp.broadcast_to(jnp.arange(D), perm.shape), axis=-1, inplace=False
+    )
+
+
+# ---------------------------------------------------------------------------
+# Whole-cache helpers
+# ---------------------------------------------------------------------------
+
+
+def split_tiers(x: Array, spec: TierSpec, axis: int = -2):
+    """Split a channels-major array into per-tier chunks along ``axis``."""
+    sizes = np.cumsum(spec.counts)[:-1]
+    return jnp.split(x, sizes, axis=axis)
+
+
+def pack_tiered(
+    q_chan_major: Array,
+    chan_perm: Array,
+    scale: Array,
+    zero: Array,
+    spec: TierSpec,
+) -> TieredCache:
+    """Pack a full quantized tensor into a TieredCache.
+
+    q_chan_major: i32 [..., H_kv, D, L] (original channel order).
+    chan_perm:    i32 [..., H_kv, D] from assign_channel_tiers.
+    scale, zero:  f32 [..., H_kv, L].
+    """
+    # permute channels into tier order
+    qp = jnp.take_along_axis(q_chan_major, chan_perm[..., None], axis=-2)
+    tiers = tuple(
+        pack_tier(chunk, w, spec.pack_size)
+        for chunk, w in zip(split_tiers(qp, spec), spec.widths)
+    )
+    return TieredCache(
+        tiers=tiers, chan_perm=chan_perm, scale=scale, zero=zero, spec=spec
+    )
+
+
+def unpack_tiered(cache: TieredCache) -> Array:
+    """i32 [..., H_kv, D, L] in TIER order (apply chan_perm to undo)."""
+    L = cache.capacity
+    return jnp.concatenate([unpack_tier(t, L) for t in cache.tiers], axis=-2)
+
+
+def dequantize_tiered(cache: TieredCache, dtype=jnp.float32) -> Array:
+    """Dense [..., H_kv, D, L] in ORIGINAL channel order (oracle path)."""
+    q = unpack_tiered(cache).astype(jnp.float32)
+    x = q * cache.scale[..., None, :] + cache.zero[..., None, :]
+    inv = chan_inverse_perm(cache.chan_perm)
+    return jnp.take_along_axis(x, inv[..., None], axis=-2).astype(dtype)
+
+
+def tiered_bits_per_value(spec: TierSpec, head_dim: int | None = None) -> float:
+    """Compute-tier bits/value incl. pack + token metadata (for CR tables)."""
+    d = head_dim or spec.head_dim
+    return spec.avg_bits_per_value() + 32.0 / d  # fp16 scale+zero per (token, head)
+
+
+def alloc_tiered(
+    batch: int, h_kv: int, capacity: int, spec: TierSpec, lead: tuple[int, ...] = ()
+) -> TieredCache:
+    """Preallocate an empty TieredCache (zeros) with static capacity."""
+    P = capacity // spec.pack_size
+    tiers = tuple(
+        TierBuffer(
+            payload=jnp.zeros(
+                (*lead, batch, h_kv, c, spec.payload_words(i, capacity)), jnp.uint32
+            ),
+            mins=jnp.zeros((*lead, batch, h_kv, c, P), jnp.int8),
+            shifts=jnp.zeros((*lead, batch, h_kv, c, cdiv(P, 4)), jnp.uint8),
+            width=w,
+            pack_size=spec.pack_size,
+        )
+        for i, (w, c) in enumerate(zip(spec.widths, spec.counts))
+    )
+    D = spec.head_dim
+    return TieredCache(
+        tiers=tiers,
+        chan_perm=jnp.broadcast_to(jnp.arange(D, dtype=jnp.int32), (*lead, batch, h_kv, D)),
+        scale=jnp.ones((*lead, batch, h_kv, capacity), jnp.float32),
+        zero=jnp.zeros((*lead, batch, h_kv, capacity), jnp.float32),
+        spec=spec,
+    )
+
+
+def append_block(cache: TieredCache, block: TieredCache, offset: Array) -> TieredCache:
+    """Seamless append: write a packed block at token ``offset`` (multiple of
+    the block length). Static shapes; offset is a traced scalar."""
+    spec = cache.spec
+    Lb = block.capacity
+    new_tiers = []
+    for t, b in zip(cache.tiers, block.tiers):
+        w = t.width
+        word_off = offset * w // 32 if w else 0
+        pk_off = offset // spec.pack_size
+        payload = (
+            jax.lax.dynamic_update_slice_in_dim(t.payload, b.payload, word_off, axis=-1)
+            if w
+            else t.payload
+        )
+        mins = jax.lax.dynamic_update_slice_in_dim(t.mins, b.mins, pk_off, axis=-1)
+        shifts = jax.lax.dynamic_update_slice_in_dim(
+            t.shifts, b.shifts, pk_off // 4, axis=-1
+        )
+        new_tiers.append(
+            TierBuffer(payload=payload, mins=mins, shifts=shifts, width=w,
+                       pack_size=t.pack_size)
+        )
+    scale = jax.lax.dynamic_update_slice_in_dim(cache.scale, block.scale, offset, axis=-1)
+    zero = jax.lax.dynamic_update_slice_in_dim(cache.zero, block.zero, offset, axis=-1)
+    return TieredCache(
+        tiers=tuple(new_tiers),
+        chan_perm=cache.chan_perm,
+        scale=scale,
+        zero=zero,
+        spec=spec,
+    )

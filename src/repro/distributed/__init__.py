@@ -1,0 +1,13 @@
+from .sharding import (  # noqa: F401
+    batch_specs,
+    cache_specs,
+    constrain,
+    dp_axes,
+    opt_state_specs,
+    param_specs,
+    set_active_mesh,
+    spec_with_fallback,
+    to_named,
+)
+from .grad_compress import GradCompressConfig, roundtrip_grads  # noqa: F401
+from .fault import CheckpointPolicy, StragglerMonitor, downscale_plan  # noqa: F401

@@ -1,0 +1,270 @@
+"""Sharding rule engine: logical dims -> mesh axes, divisibility-aware.
+
+Params, optimizer state, batches and decode caches get PartitionSpecs from
+path-based rules. Strategy:
+
+  * batch        -> ('pod', 'data')     (DP; falls back to replicate if B
+                                          doesn't divide, e.g. long_500k B=1)
+  * heads / d_ff / vocab / experts / lru width -> 'model'  (TP/EP)
+  * cache context dim -> 'model'        (context parallelism for decode —
+                                          the compressed KV cache itself is
+                                          sharded, which the paper never
+                                          attempts; softmax crosses shards
+                                          via GSPMD-inserted all-reduce)
+  * optimizer moments -> additionally ZeRO-1-sharded over 'data' on the
+                         first free divisible dim.
+
+Every rule is divisibility-checked against the mesh; a dim that doesn't
+divide its axis is replicated (or the axis moves to the next preferred
+dim), so ANY (arch × mesh) pair lowers — the fallback is part of the
+engine, not ad-hoc per config.
+"""
+from __future__ import annotations
+
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _fits(dim: int, mesh: Mesh, axes) -> bool:
+    n = _axis_size(mesh, axes)
+    return n > 1 and dim % n == 0
+
+
+def spec_with_fallback(shape, want, mesh: Mesh) -> P:
+    """want: per-dim desired axes (str | tuple | None). Drops non-dividing."""
+    out = []
+    used: set[str] = set()
+    for dim, ax in zip(shape, want):
+        if ax is None:
+            out.append(None)
+            continue
+        axs = (ax,) if isinstance(ax, str) else tuple(ax)
+        if any(a in used for a in axs) or not _fits(dim, mesh, axs):
+            out.append(None)
+            continue
+        used.update(axs)
+        out.append(ax if isinstance(ax, str) else tuple(axs))
+    return P(*out)
+
+
+# ---------------------------------------------------------------------------
+# parameter rules (matched on the LAST path component name)
+# ---------------------------------------------------------------------------
+
+# each entry: list of per-dim preferred axes for the leaf's TRAILING dims;
+# leading (stacked-layer) dims are padded with None automatically.
+_PARAM_RULES: list[tuple[str, tuple]] = [
+    (r"^embed$", ("model", None)),
+    (r"^head$", (None, "model")),
+    (r"^(wq|wk|wv|wg|wr|w_in|w_gate_branch)$", (None, "model")),
+    (r"^(wo|w_out)$", ("model", None)),
+    (r"^(w_gate|w_up)$", (None, "model")),       # dense mlp [D, F]
+    (r"^(w_down)$", ("model", None)),            # dense mlp [F, D]
+    (r"^cm_wk$", (None, "model")),
+    (r"^cm_wv$", ("model", None)),
+    (r"^cm_wr$", (None, "model")),
+    (r"^(lru_wa|lru_wx)$", (None, "model")),
+    (r"^conv_w$", (None, "model")),
+    (r"^router$", (None, None)),
+    (r"^(wA|wB|mu|u|w0|lru_lambda)$", None),     # replicate small/odd leaves
+    (r"(ln|norm)", None),                        # all norms replicated
+]
+
+# MoE expert tensors are 3D [E, D, Fe] / [E, Fe, D]: prefer experts axis,
+# fall back to the Fe axis if E doesn't divide (qwen2-moe E=60).
+_MOE_RULES: list[tuple[str, tuple]] = [
+    (r"^(w_gate|w_up)$", ("model", None, ("model",))),
+    (r"^w_down$", ("model", ("model",), None)),
+]
+
+
+def _path_names(path) -> list[str]:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "name"):
+            out.append(str(p.name))
+        else:
+            out.append(str(p))
+    return out
+
+
+def _match_param(names: list[str], ndim: int, mesh: Mesh, shape) -> P:
+    leaf = names[-1]
+    rules = _PARAM_RULES
+    if ndim == 3 and leaf in ("w_gate", "w_up", "w_down") and "mlp" in names:
+        # stacked-layer dense mlp [L, D, F] is also 3D; disambiguate by
+        # trying expert rules first only when BOTH trailing dims large —
+        # expert tensors are [E, D, Fe]; stacked dense are [L, D, F].
+        pass  # handled by trailing-dim padding below
+    for pat, want in rules:
+        if re.search(pat, leaf):
+            if want is None:
+                return P(*([None] * ndim))
+            # try expert-style 3D match for moe leaves
+            if len(want) < ndim:
+                pad = ndim - len(want)
+                full = (None,) * pad + tuple(want)
+            else:
+                full = tuple(want[-ndim:])
+            # MoE: expert tensors are [E, D, Fe] unstacked (ndim 3, not under
+            # a stacked 'layers' scan) or [L, E, D, Fe] stacked (ndim 4).
+            # Dense stacked mlp is [L, D, F] (ndim 3 UNDER 'layers') — its
+            # leading dim is the scan axis and must NOT be sharded, or every
+            # scan iteration gathers the full stack.
+            is_expert = ndim >= 4 or (ndim == 3 and "layers" not in names)
+            if (
+                leaf in ("w_gate", "w_up", "w_down")
+                and is_expert
+                and len(want) == 2
+                and _fits(shape[-3], mesh, "model")
+                and not any(isinstance(a, str) for a in full[:-2])
+            ):
+                # expert dim gets 'model'; drop model from trailing dims
+                full = (
+                    (None,) * (ndim - 3)
+                    + ("model",)
+                    + tuple(None if a == "model" else a for a in want)
+                )
+            return spec_with_fallback(shape, full, mesh)
+    return P(*([None] * ndim))
+
+
+def param_specs(params, mesh: Mesh):
+    """Pytree of PartitionSpec matching ``params``."""
+
+    def f(path, leaf):
+        names = _path_names(path)
+        return _match_param(names, leaf.ndim, mesh, leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(f, params)
+
+
+def opt_state_specs(params, mesh: Mesh):
+    """ZeRO-1: moments take the param spec + 'data' on the first free dim."""
+    p_specs = param_specs(params, mesh)
+
+    def zero(leaf, spec: P):
+        parts = list(spec) + [None] * (leaf.ndim - len(spec))
+        if "data" in mesh.axis_names:
+            for i, (dim, ax) in enumerate(zip(leaf.shape, parts)):
+                if ax is None and _fits(dim, mesh, "data"):
+                    parts[i] = "data"
+                    break
+        return P(*parts)
+
+    moments = jax.tree_util.tree_map(zero, params, p_specs)
+    from ..training.optimizer import OptState
+
+    return OptState(mu=moments, nu=moments, step=P())
+
+
+# ---------------------------------------------------------------------------
+# batch / cache rules
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(batch: dict, mesh: Mesh):
+    dp = dp_axes(mesh)
+
+    def f(leaf):
+        want = [dp] + [None] * (leaf.ndim - 1)
+        return spec_with_fallback(leaf.shape, want, mesh)
+
+    return jax.tree_util.tree_map(f, batch)
+
+
+_CTX_LAST = {"payload", "mins", "shifts", "scale", "zero"}  # context dim last
+
+
+def cache_specs(cache, mesh: Mesh, n_lead: int = 1):
+    """Decode-cache specs. n_lead: stacked leading dims before batch (layers).
+
+    Rules: batch dim -> DP axes; compressed-context dim -> 'model'
+    (context parallelism); residual/raw context stays local; everything
+    divisibility-checked.
+    """
+    dp = dp_axes(mesh)
+
+    def f(path, leaf):
+        names = _path_names(path)
+        leaf_name = names[-1]
+        nd = leaf.ndim
+        want: list = [None] * nd
+        if leaf_name in ("n_comp", "n_resid", "pos", "step"):
+            return P(*want)
+        # how many leading stacked dims (layers/groups/2-subblocks)?
+        lead = min(n_lead + (1 if "rec" in names or "tail" in names else 0), nd - 1)
+        if leaf_name in ("tail_lru_h", "tail_conv"):
+            lead = 1
+        if nd > lead:
+            want[lead] = dp  # batch dim
+        if leaf_name in _CTX_LAST and nd >= lead + 2:
+            want[-1] = "model"
+        elif leaf_name in ("raw_k", "raw_v") and nd >= lead + 3:
+            want[-2] = "model"
+        elif leaf_name in ("S",) and nd >= lead + 3:
+            want[lead + 1] = "model"  # rwkv heads
+        elif leaf_name in ("lru_h",) and nd >= lead + 2:
+            want[-1] = "model"  # lru width
+        elif leaf_name in ("conv",) and nd >= lead + 3:
+            want[-1] = "model"
+        return spec_with_fallback(leaf.shape, want, mesh)
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def to_named(tree_specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree_specs,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# in-graph logical constraints (sequence parallelism etc.)
+# ---------------------------------------------------------------------------
+
+_ACTIVE_MESH: Optional[Mesh] = None
+
+
+def set_active_mesh(mesh: Optional[Mesh]) -> None:
+    global _ACTIVE_MESH
+    _ACTIVE_MESH = mesh
+
+
+def constrain(x, *axes):
+    """with_sharding_constraint by axis names; no-op without an active mesh.
+
+    Used inside model forwards to pin the residual stream to
+    (batch=DP, seq='model') — sequence parallelism that keeps rematted
+    activations within HBM at 4k×256 global.
+    """
+    mesh = _ACTIVE_MESH
+    if mesh is None:
+        return x
+    dp = dp_axes(mesh)
+    resolved = [dp if a == "batch" else a for a in axes]
+    spec = spec_with_fallback(x.shape, resolved, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for computation-aware decompression (paper §III-C).
+
+Each kernel has a pure-jnp oracle in ref.py; ops.py dispatches between the
+``"xla"`` (oracle, CPU default) and ``"pallas"`` (explicit kernels) backends.
+"""
+from .ops import (  # noqa: F401
+    dense_decode_attention,
+    merge_partials,
+    packed_decode_attention,
+    packed_qk_scores,
+    packed_weighted_v,
+)

@@ -1,0 +1,78 @@
+"""Fused K decompress + q·Kᵀ Pallas kernel (paper Fig. 8, TPU-adapted).
+
+One ``pallas_call`` per width tier covers ALL (batch × kv-head) rows and all
+context tiles in a single launch — the TPU analogue of the paper's
+single-kernel decompression (§III-B4): grid = (B·H_kv, L/TL).
+
+Each grid cell decodes a [C_t, TL] integer tile from packed u32 words in
+VMEM and contracts it with the [G, C_t] query slice on the MXU, producing
+the [G, TL] integer-score tile. Per-token (scale, zero) are folded outside
+as rank-1 corrections (see kernels/ref.py docstring) so decompressed data
+never exists outside VMEM/VREGs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pallas_utils import tpu_params
+from .unpack import decode_tier_tile
+
+Array = jax.Array
+
+DEFAULT_TILE_L = 256
+
+
+def _kernel(payload_ref, mins_ref, shifts_ref, q_ref, out_ref, *, width, pack):
+    vals = decode_tier_tile(
+        payload_ref[0], mins_ref[0], shifts_ref[0], width, pack
+    )  # [C, TL] f32
+    q = q_ref[0]  # [G, C] f32
+    out_ref[0] = jax.lax.dot_general(
+        q, vals, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def kpack_tier_scores(
+    payload: Array,
+    mins: Array,
+    shifts: Array,
+    q: Array,
+    *,
+    width: int,
+    pack_size: int,
+    tile_l: int = DEFAULT_TILE_L,
+    interpret: bool = True,
+) -> Array:
+    """Integer score contribution of one tier.
+
+    payload: u32 [BH, C, L*width/32]   mins: i8 [BH, C, L/pack]
+    shifts:  u8  [BH, C, ceil(L/pack/4)]  q: f32 [BH, G, C] (tier channel slice)
+    Returns si f32 [BH, G, L].
+    """
+    BH, C, Wl = payload.shape
+    G = q.shape[1]
+    L = Wl * (32 // width)
+    assert L % tile_l == 0 and tile_l % (pack_size * 4) == 0
+    nL = L // tile_l
+    tWl = tile_l * width // 32
+    tP = tile_l // pack_size
+
+    grid = (BH, nL)
+    return pl.pallas_call(
+        functools.partial(_kernel, width=width, pack=pack_size),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, C, tWl), lambda b, l: (b, 0, l)),
+            pl.BlockSpec((1, C, tP), lambda b, l: (b, 0, l)),
+            pl.BlockSpec((1, C, tP // 4), lambda b, l: (b, 0, l)),
+            pl.BlockSpec((1, G, C), lambda b, l: (b, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, G, tile_l), lambda b, l: (b, 0, l)),
+        out_shape=jax.ShapeDtypeStruct((BH, G, L), jnp.float32),
+        interpret=interpret,
+        **tpu_params(("parallel", "parallel"), interpret),
+    )(payload, mins, shifts, q)

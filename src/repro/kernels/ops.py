@@ -1,0 +1,146 @@
+"""Public jit'd wrappers over the computation-aware decompression kernels.
+
+Backend dispatch:
+  * ``"xla"``    — pure-jnp path (kernels/ref.py). XLA still fuses
+    decode+matvec, and the cache bytes read from HBM are the compressed
+    bytes, so the paper's bandwidth argument holds; this is the default on
+    CPU and the path the production dry-run lowers.
+  * ``"pallas"`` — explicit Pallas kernels (interpret=True on CPU,
+    compiled on TPU): single-launch fused decode attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.tiered import TieredCache, chan_inverse_perm
+from . import ref
+from .kpack_matvec import kpack_tier_scores
+from .packed_attention import fused_packed_attention
+from .vpack_matvec import vpack_tier_out
+
+Array = jax.Array
+
+NEG_INF = ref.NEG_INF
+
+
+def packed_qk_scores(
+    q: Array,
+    kc: TieredCache,
+    sm_scale: float = 1.0,
+    *,
+    backend: str = "xla",
+    tile_l: int = 256,
+    interpret: bool = True,
+) -> Array:
+    """q·Kᵀ over the compressed K cache. q: [B,H,D] -> scores [B,H,L]."""
+    if backend == "xla":
+        return ref.kpack_scores_ref(q, kc, sm_scale)
+    B, H, D = q.shape
+    h_kv = kc.scale.shape[-2]
+    G = H // h_kv
+    BH = B * h_kv
+    L = kc.capacity
+    qg = q.astype(jnp.float32).reshape(B, h_kv, G, D)
+    qp = jnp.take_along_axis(qg, kc.chan_perm[:, :, None, :], axis=-1)
+    qf = qp.reshape(BH, G, D)
+    flat = lambda a: a.reshape(BH, *a.shape[2:])
+    si = jnp.zeros((BH, G, L), jnp.float32)
+    off = 0
+    for t, c in zip(kc.tiers, kc.spec.counts):
+        si = si + kpack_tier_scores(
+            flat(t.payload), flat(t.mins), flat(t.shifts), qf[..., off : off + c],
+            width=t.width, pack_size=t.pack_size, tile_l=tile_l, interpret=interpret,
+        )
+        off += c
+    qsum = jnp.sum(qf, axis=-1, keepdims=True)
+    scores = si * flat(kc.scale)[:, None, :] + qsum * flat(kc.zero)[:, None, :]
+    return (scores * sm_scale).reshape(B, H, L)
+
+
+def packed_weighted_v(
+    w: Array,
+    vc: TieredCache,
+    *,
+    backend: str = "xla",
+    tile_l: int = 256,
+    interpret: bool = True,
+) -> Array:
+    """w·V over the compressed V cache. w: [B,H,L] -> out [B,H,D]."""
+    if backend == "xla":
+        return ref.vpack_out_ref(w, vc)
+    B, H, L = w.shape
+    h_kv = vc.scale.shape[-2]
+    G = H // h_kv
+    BH = B * h_kv
+    flat = lambda a: a.reshape(BH, *a.shape[2:])
+    wf = w.astype(jnp.float32).reshape(BH, G, L)
+    ws = wf * flat(vc.scale)[:, None, :]
+    parts = [
+        vpack_tier_out(
+            flat(t.payload), flat(t.mins), flat(t.shifts), ws,
+            width=t.width, pack_size=t.pack_size, tile_l=tile_l, interpret=interpret,
+        )
+        for t in vc.tiers
+    ]
+    out = jnp.concatenate(parts, axis=-1)  # [BH, G, Dv] tier order
+    zterm = jnp.einsum("bgl,bl->bg", wf, flat(vc.zero))[..., None]
+    out = out + zterm
+    out = out.reshape(B, h_kv, G, -1)
+    inv = chan_inverse_perm(vc.chan_perm)
+    out = jnp.take_along_axis(out, inv[:, :, None, :], axis=-1)
+    return out.reshape(B, H, -1)
+
+
+def _residual_partials(q, resid_k, resid_v, n_resid, sm_scale):
+    """LSE partials (o_unnorm, m, l) of attention over the residual buffer."""
+    B, H, D = q.shape
+    h_kv = resid_k.shape[1]
+    R = resid_k.shape[2]
+    qg = q.astype(jnp.float32).reshape(B, h_kv, H // h_kv, D)
+    s = jnp.einsum("bhgd,bhrd->bhgr", qg, resid_k.astype(jnp.float32)) * sm_scale
+    mask = (jnp.arange(R) < n_resid)[None, None, None, :]
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhgr,bhrd->bhgd", p, resid_v.astype(jnp.float32))
+    return o.reshape(B, H, D), m.reshape(B, H), l.reshape(B, H)
+
+
+def merge_partials(o1, m1, l1, o2, m2, l2):
+    """Log-sum-exp merge of two unnormalized attention partials."""
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)[..., None]
+    a2 = jnp.exp(m2 - m)[..., None]
+    denom = l1[..., None] * a1 + l2[..., None] * a2
+    return (o1 * a1 + o2 * a2) / jnp.maximum(denom, 1e-30)
+
+
+def packed_decode_attention(
+    q: Array,
+    kc: TieredCache,
+    vc: TieredCache,
+    resid_k: Array,
+    resid_v: Array,
+    n_comp: Array,
+    n_resid: Array,
+    sm_scale: float,
+    *,
+    backend: str = "xla",
+    tile_l: int = 256,
+    interpret: bool = True,
+) -> Array:
+    """Full decode attention over [compressed | residual] regions."""
+    if backend == "xla":
+        return ref.packed_decode_attention_ref(
+            q, kc, vc, resid_k, resid_v, n_comp, n_resid, sm_scale
+        )
+    o_c, m_c, l_c = fused_packed_attention(
+        q, kc, vc, n_comp, sm_scale, tile_l=tile_l, interpret=interpret
+    )
+    o_r, m_r, l_r = _residual_partials(q, resid_k, resid_v, n_resid, sm_scale)
+    return merge_partials(o_c, m_c, l_c, o_r, m_r, l_r)
+
+
+dense_decode_attention = ref.dense_decode_attention_ref

@@ -1,0 +1,232 @@
+"""Single-launch fused decode attention over the compressed KV cache.
+
+This is the paper's headline co-design (§III-C) adapted to TPU: ONE
+``pallas_call`` decodes every K and V tier tile, computes the masked
+softmax online (flash-style running max/sum), and accumulates the
+weighted-V output — decompressed data and attention scores never leave
+VMEM/VREGs; nothing is written back to HBM except the [G, D] output and
+three [G] statistics used to merge with the full-precision residual
+buffer via log-sum-exp (the deterministic TPU replacement for the paper's
+fp32 ``atomicAdd`` partial sums).
+
+Grid = (B·H_kv, L/TL): grid dim 0 parallel over heads/batch, dim 1
+sequential over context tiles (the flash recurrence).
+
+Inputs are generated programmatically from the K/V tier specs, so any
+TierSpec combination lowers to a single kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from ..core.tiered import TieredCache
+from .pallas_utils import tpu_params
+from .unpack import decode_tier_tile
+
+Array = jax.Array
+
+NEG_INF = -1e30
+DEFAULT_TILE_L = 256
+
+
+def _fused_kernel(
+    *refs,
+    nk: int,
+    nv: int,
+    k_widths,
+    v_widths,
+    k_offs,
+    v_offs,
+    pack: int,
+    sm_scale: float,
+    tile_l: int,
+):
+    """refs layout: [k_payload*nk, k_mins*nk, k_shifts*nk, kscale, kzero,
+    v_payload*nv, v_mins*nv, v_shifts*nv, vscale, vzero, q, n_comp,
+    acc_out, zsum_out, m_out, l_out]."""
+    i = 0
+    k_pay = refs[i : i + nk]; i += nk
+    k_min = refs[i : i + nk]; i += nk
+    k_shf = refs[i : i + nk]; i += nk
+    kscale_ref, kzero_ref = refs[i], refs[i + 1]; i += 2
+    v_pay = refs[i : i + nv]; i += nv
+    v_min = refs[i : i + nv]; i += nv
+    v_shf = refs[i : i + nv]; i += nv
+    vscale_ref, vzero_ref = refs[i], refs[i + 1]; i += 2
+    q_ref, n_ref = refs[i], refs[i + 1]; i += 2
+    acc_ref, zsum_ref, m_ref, l_ref = refs[i : i + 4]
+
+    pid = pl.program_id(1)
+
+    @pl.when(pid == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        zsum_ref[...] = jnp.zeros_like(zsum_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0]  # [G, D] in K-tier channel order
+
+    # ---- K: integer scores for this tile --------------------------------
+    si = None
+    for t in range(nk):
+        vals = decode_tier_tile(
+            k_pay[t][0], k_min[t][0], k_shf[t][0], k_widths[t], pack
+        )  # [Ck_t, TL]
+        qs = q[:, k_offs[t] : k_offs[t + 1]]  # [G, Ck_t]
+        d = jax.lax.dot_general(
+            qs, vals, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        si = d if si is None else si + d  # [G, TL]
+    qsum = jnp.sum(q, axis=-1, keepdims=True)  # [G, 1]
+    scores = (si * kscale_ref[0][None, :] + qsum * kzero_ref[0][None, :]) * sm_scale
+
+    gidx = pid * tile_l + jnp.arange(tile_l)
+    valid = (gidx < n_ref[0, 0]).astype(jnp.float32)[None, :]  # [1, TL]
+    scores = jnp.where(valid > 0, scores, NEG_INF)
+
+    # ---- online softmax --------------------------------------------------
+    m_prev = m_ref[0]  # [G]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)  # [G]
+    p = jnp.exp(scores - m_new[:, None]) * valid  # [G, TL]
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p, axis=-1)
+    m_ref[0] = m_new
+
+    # ---- V: weighted accumulation ----------------------------------------
+    ws = p * vscale_ref[0][None, :]  # fold per-token scale into weights
+    acc_ref[0] *= alpha[:, None]
+    for t in range(nv):
+        vals = decode_tier_tile(
+            v_pay[t][0], v_min[t][0], v_shf[t][0], v_widths[t], pack
+        )  # [Cv_t, TL]
+        d = jax.lax.dot_general(
+            ws, vals, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [G, Cv_t]
+        acc_ref[0, :, v_offs[t] : v_offs[t + 1]] += d
+    zsum_ref[0] = zsum_ref[0] * alpha + jnp.sum(p * vzero_ref[0][None, :], axis=-1)
+
+
+def fused_packed_attention(
+    q: Array,
+    kc: TieredCache,
+    vc: TieredCache,
+    n_comp: Array,
+    sm_scale: float,
+    *,
+    tile_l: int = DEFAULT_TILE_L,
+    interpret: bool = True,
+):
+    """Compressed-region attention partials in ONE kernel launch.
+
+    q: f32 [B, H, D] in ORIGINAL channel order. Returns
+    (o_unnorm [B,H,Dv] in original channel order, m [B,H], l [B,H]) —
+    log-sum-exp partials for merging with the residual buffer.
+    """
+    from ..core.tiered import chan_inverse_perm
+
+    B, H, D = q.shape
+    h_kv = kc.scale.shape[-2]
+    G = H // h_kv
+    BH = B * h_kv
+    L = kc.capacity
+    assert L % tile_l == 0 and tile_l % (kc.spec.pack_size * 4) == 0
+    nL = L // tile_l
+    pack = kc.spec.pack_size
+    Dv = vc.spec.head_dim
+
+    # absorb the K channel permutation into q (free — paper §III-B3)
+    qg = q.astype(jnp.float32).reshape(B, h_kv, G, D)
+    qp = jnp.take_along_axis(qg, kc.chan_perm[:, :, None, :], axis=-1)
+
+    flat = lambda a: a.reshape(BH, *a.shape[2:])
+    k_pay = [flat(t.payload) for t in kc.tiers]
+    k_min = [flat(t.mins) for t in kc.tiers]
+    k_shf = [flat(t.shifts) for t in kc.tiers]
+    v_pay = [flat(t.payload) for t in vc.tiers]
+    v_min = [flat(t.mins) for t in vc.tiers]
+    v_shf = [flat(t.shifts) for t in vc.tiers]
+    kscale, kzero = flat(kc.scale), flat(kc.zero)
+    vscale, vzero = flat(vc.scale), flat(vc.zero)
+    qf = qp.reshape(BH, G, D)
+    n_arr = jnp.full((1, 1), 0, jnp.int32) + n_comp.astype(jnp.int32)
+
+    k_widths = tuple(t.width for t in kc.tiers)
+    v_widths = tuple(t.width for t in vc.tiers)
+    k_offs = (0, *[sum(kc.spec.counts[: i + 1]) for i in range(len(kc.spec.counts))])
+    v_offs = (0, *[sum(vc.spec.counts[: i + 1]) for i in range(len(vc.spec.counts))])
+
+    tP = tile_l // pack
+
+    def tier_specs(cs, widths):
+        sp = []
+        for c, w in zip(cs, widths):
+            sp.append(pl.BlockSpec((1, c, tile_l * w // 32), lambda b, l: (b, 0, l)))
+        for c in cs:
+            sp.append(pl.BlockSpec((1, c, tP), lambda b, l: (b, 0, l)))
+        for c in cs:
+            sp.append(pl.BlockSpec((1, c, tP // 4), lambda b, l: (b, 0, l)))
+        return sp
+
+    scale_spec = pl.BlockSpec((1, tile_l), lambda b, l: (b, l))
+    in_specs = (
+        tier_specs(kc.spec.counts, k_widths)
+        + [scale_spec, scale_spec]
+        + tier_specs(vc.spec.counts, v_widths)
+        + [scale_spec, scale_spec]
+        + [
+            pl.BlockSpec((1, G, D), lambda b, l: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, l: (0, 0)),
+        ]
+    )
+    out_specs = [
+        pl.BlockSpec((1, G, Dv), lambda b, l: (b, 0, 0)),
+        pl.BlockSpec((1, G), lambda b, l: (b, 0)),
+        pl.BlockSpec((1, G), lambda b, l: (b, 0)),
+        pl.BlockSpec((1, G), lambda b, l: (b, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((BH, G, Dv), jnp.float32),
+        jax.ShapeDtypeStruct((BH, G), jnp.float32),
+        jax.ShapeDtypeStruct((BH, G), jnp.float32),
+        jax.ShapeDtypeStruct((BH, G), jnp.float32),
+    ]
+
+    kernel = functools.partial(
+        _fused_kernel,
+        nk=len(kc.tiers),
+        nv=len(vc.tiers),
+        k_widths=k_widths,
+        v_widths=v_widths,
+        k_offs=k_offs,
+        v_offs=v_offs,
+        pack=pack,
+        sm_scale=sm_scale,
+        tile_l=tile_l,
+    )
+    acc, zsum, m, lsum = pl.pallas_call(
+        kernel,
+        grid=(BH, nL),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+        **tpu_params(("parallel", "arbitrary"), interpret),
+    )(
+        *k_pay, *k_min, *k_shf, kscale, kzero,
+        *v_pay, *v_min, *v_shf, vscale, vzero, qf, n_arr,
+    )
+
+    o = acc + zsum[..., None]  # zero-term correction (all channels)
+    o = o.reshape(B, h_kv, G, Dv)
+    inv = chan_inverse_perm(vc.chan_perm)
+    o = jnp.take_along_axis(o, inv[:, :, None, :], axis=-1)
+    return (
+        o.reshape(B, H, Dv),
+        m.reshape(B, H),
+        lsum.reshape(B, H),
+    )

@@ -1,0 +1,17 @@
+"""Shared Pallas plumbing (TPU compiler params with interpret fallback)."""
+from __future__ import annotations
+
+
+def tpu_params(dimension_semantics: tuple[str, ...], interpret: bool) -> dict:
+    """CompilerParams for TPU lowering; empty under interpret mode."""
+    if interpret:
+        return {}
+    try:
+        from jax.experimental.pallas import tpu as pltpu
+
+        cp = getattr(pltpu, "CompilerParams", None) or getattr(
+            pltpu, "TPUCompilerParams"
+        )
+        return {"compiler_params": cp(dimension_semantics=dimension_semantics)}
+    except Exception:  # pragma: no cover - non-TPU build
+        return {}

@@ -1,0 +1,208 @@
+"""Context-parallel fused decode attention (beyond-paper, §Perf H1).
+
+The compressed cache is sharded along the CONTEXT dim over 'model'. Under
+plain GSPMD, the decode step's softmax/weighted-V force enormous
+reshards (measured 8.4e10 collective bytes/step/device on qwen3-32b —
+GSPMD even emits 'involuntary full rematerialization' warnings). But the
+fused attention already produces log-sum-exp PARTIALS (o, m, l) — exactly
+the right thing to merge ACROSS context shards too:
+
+  each 'model' shard runs the fused kernel over its local context slice
+  -> psum-merge the [B, H, D]+[B, H] partials (a few hundred KB)
+  -> add the residual-buffer partial.
+
+Same math (merge_partials is associative), ~1000× less wire traffic.
+
+The decode-append flush also becomes shard-local: a 64-token block lands
+entirely inside one context shard (block | shard sizes), so the owner
+masks the write and everyone else no-ops — no cross-shard DUS.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..core.cache import LayerKVCache
+from ..core.tiered import TierBuffer, TieredCache
+from . import ops, ref
+
+Array = jax.Array
+
+
+def _local_cache_partials(q, kc: TieredCache, vc: TieredCache, n_comp,
+                          sm_scale: float, axis: str):
+    """Fused attention partials over THIS shard's context slice."""
+    idx = jax.lax.axis_index(axis)
+    L_loc = kc.capacity  # local capacity inside shard_map
+    start = idx * L_loc
+    n_local = jnp.clip(n_comp - start, 0, L_loc)
+    s = ref.kpack_scores_ref(q, kc, sm_scale)  # [B, H, L_loc]
+    mask = jnp.arange(L_loc)[None, None, :] < n_local
+    s = jnp.where(mask, s, ref.NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = ref.vpack_out_ref(p, vc)
+    # vpack zero-term used unmasked p=0 rows fine (p already masked)
+    return o, m, l
+
+
+def _local_dense_partials(q, raw_k, raw_v, n_comp, sm_scale: float, axis: str):
+    """Policy='none' variant: dense scores over the local context slice."""
+    idx = jax.lax.axis_index(axis)
+    B, H, D = q.shape
+    h_kv = raw_k.shape[1]
+    L_loc = raw_k.shape[2]
+    start = idx * L_loc
+    n_local = jnp.clip(n_comp - start, 0, L_loc)
+    qg = q.astype(jnp.float32).reshape(B, h_kv, H // h_kv, D)
+    s = jnp.einsum("bhgd,bhld->bhgl", qg, raw_k.astype(jnp.float32)) * sm_scale
+    s = s.reshape(B, H, L_loc)
+    mask = jnp.arange(L_loc)[None, None, :] < n_local
+    s = jnp.where(mask, s, ref.NEG_INF)
+    m = jnp.max(s, axis=-1)
+    p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    pg = p.reshape(B, h_kv, H // h_kv, L_loc)
+    o = jnp.einsum("bhgl,bhld->bhgd", pg, raw_v.astype(jnp.float32))
+    return o.reshape(B, H, D), m, l
+
+
+def _append_token_local(cache_l: LayerKVCache, k_new, v_new, axis: str,
+                        n_shards: int, ring: bool):
+    """Shard-local decode append: the 64-token flush block lands in exactly
+    one context shard (block | shard size); the owner masks the write."""
+    from ..core.cache import compress_block
+
+    cfg = cache_l.cfg
+    R = cfg.residual
+
+    def write(c):
+        rk = jax.lax.dynamic_update_slice_in_dim(
+            c.resid_k, k_new.astype(c.resid_k.dtype), c.n_resid, axis=-2)
+        rv = jax.lax.dynamic_update_slice_in_dim(
+            c.resid_v, v_new.astype(c.resid_v.dtype), c.n_resid, axis=-2)
+        return dataclasses.replace(c, resid_k=rk, resid_v=rv,
+                                   n_resid=c.n_resid + 1)
+
+    def flush(c):
+        blk_k = c.resid_k[..., : cfg.block, :]
+        blk_v = c.resid_v[..., : cfg.block, :]
+        idx = jax.lax.axis_index(axis)
+        if cfg.policy == "none":
+            L_loc = c.raw_k.shape[-2]
+            g_off = (c.n_comp % (L_loc * n_shards)) if ring else c.n_comp
+            owner = (g_off // L_loc) == idx
+            off = jnp.clip(g_off - idx * L_loc, 0, L_loc - cfg.block)
+            new_rk = jax.lax.dynamic_update_slice_in_dim(
+                c.raw_k, blk_k, off, axis=-2)
+            new_rv = jax.lax.dynamic_update_slice_in_dim(
+                c.raw_v, blk_v, off, axis=-2)
+            c = dataclasses.replace(
+                c,
+                raw_k=jnp.where(owner, new_rk, c.raw_k),
+                raw_v=jnp.where(owner, new_rv, c.raw_v),
+            )
+        else:
+            from ..core.cache import append_block
+
+            L_loc = c.k.capacity
+            g_off = (c.n_comp % (L_loc * n_shards)) if ring else c.n_comp
+            owner = (g_off // L_loc) == idx
+            off = jnp.clip(g_off - idx * L_loc, 0, L_loc - cfg.block)
+            kc, vc = compress_block(blk_k, blk_v, cfg, c.k.chan_perm,
+                                    c.v.chan_perm)
+            nk = append_block(c.k, kc, off)
+            nv = append_block(c.v, vc, off)
+            sel = lambda a, b: jax.tree_util.tree_map(
+                lambda x, y: jnp.where(owner, x, y), a, b)
+            c = dataclasses.replace(c, k=sel(nk, c.k), v=sel(nv, c.v))
+        rk = jnp.roll(c.resid_k, -cfg.block, axis=-2)
+        rv = jnp.roll(c.resid_v, -cfg.block, axis=-2)
+        return dataclasses.replace(c, resid_k=rk, resid_v=rv,
+                                   n_comp=c.n_comp + cfg.block,
+                                   n_resid=c.n_resid - cfg.block)
+
+    cache_l = jax.lax.cond(cache_l.n_resid >= R, flush, lambda c: c, cache_l)
+    return write(cache_l)
+
+
+def _cache_specs_local(cache, mesh, dp, axis: str):
+    from ..distributed.sharding import spec_with_fallback
+
+    ctx_last = {"payload", "mins", "shifts", "scale", "zero"}
+
+    def f(path, leaf):
+        name = str(getattr(path[-1], "key", getattr(path[-1], "name", path[-1])))
+        nd = leaf.ndim
+        want: list = [None] * nd
+        if name in ("n_comp", "n_resid"):
+            return spec_with_fallback(leaf.shape, want, mesh)
+        if nd >= 2:
+            want[0] = dp  # batch
+        if name in ctx_last and nd >= 2:
+            want[-1] = axis
+        elif name in ("raw_k", "raw_v") and nd >= 3:
+            want[-2] = axis
+        return spec_with_fallback(leaf.shape, want, mesh)
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def context_parallel_decode_step(
+    q: Array,
+    k_new: Array,
+    v_new: Array,
+    cache: LayerKVCache,
+    sm_scale: float,
+    mesh,
+    *,
+    axis: str = "model",
+    ring: bool = False,
+) -> tuple[Array, LayerKVCache]:
+    """Append one token + fused decode attention, context-parallel.
+
+    q: [B, H, D]; k_new/v_new: [B, H_kv, 1, D]. The cache context dim is
+    sharded over ``axis``; partials merge with log-sum-exp psums (a few
+    hundred KB) instead of GSPMD reshards (§Perf H1)."""
+    from ..distributed.sharding import dp_axes, spec_with_fallback
+
+    dp = dp_axes(mesh)
+    n_shards = mesh.shape[axis]
+    q_spec = spec_with_fallback(q.shape, [dp, None, None], mesh)
+    kv_spec = spec_with_fallback(k_new.shape, [dp, None, None, None], mesh)
+    c_specs = _cache_specs_local(cache, mesh, dp, axis)
+
+    def local(q_l, k_l, v_l, cache_l: LayerKVCache):
+        cache_l = _append_token_local(cache_l, k_l, v_l, axis, n_shards, ring)
+        n_valid = cache_l.n_comp
+        if ring:
+            cap = (cache_l.raw_k.shape[-2] if cache_l.cfg.policy == "none"
+                   else cache_l.k.capacity)
+            n_valid = jnp.minimum(n_valid, cap * n_shards)
+        if cache_l.cfg.policy == "none":
+            o_c, m_c, l_c = _local_dense_partials(
+                q_l, cache_l.raw_k, cache_l.raw_v, n_valid, sm_scale, axis)
+        else:
+            o_c, m_c, l_c = _local_cache_partials(
+                q_l, cache_l.k, cache_l.v, n_valid, sm_scale, axis)
+        # merge context-shard partials: tiny [B,H,D]+[B,H] exchanges
+        m_g = jax.lax.pmax(m_c, axis)
+        scale_ = jnp.exp(m_c - m_g)
+        o_g = jax.lax.psum(o_c * scale_[..., None], axis)
+        l_g = jax.lax.psum(l_c * scale_, axis)
+        o_r, m_r, l_r = ops._residual_partials(
+            q_l, cache_l.resid_k, cache_l.resid_v, cache_l.n_resid, sm_scale)
+        out = ops.merge_partials(o_g, m_g, l_g, o_r, m_r, l_r)
+        return out, cache_l
+
+    return jax.shard_map(
+        local, mesh=mesh,
+        in_specs=(q_spec, kv_spec, kv_spec, c_specs),
+        out_specs=(q_spec, c_specs),
+        check_vma=False,
+    )(q, k_new, v_new, cache)

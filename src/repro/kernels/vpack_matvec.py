@@ -1,0 +1,76 @@
+"""Fused w·V decompress + matvec Pallas kernel (paper Fig. 11, TPU-adapted).
+
+Dot products run along the context dimension — the same direction V is
+bit-packed — so each decoded [C_t, TL] tile contracts immediately against
+the [G, TL] weight tile. The paper's fp32 ``atomicAdd`` partial sums become
+sequential accumulation over the context grid dimension into the output
+block (deterministic; grid dim 1 is "arbitrary" = sequential on TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .pallas_utils import tpu_params
+from .unpack import decode_tier_tile
+
+Array = jax.Array
+
+DEFAULT_TILE_L = 256
+
+
+def _kernel(payload_ref, mins_ref, shifts_ref, w_ref, out_ref, *, width, pack):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    vals = decode_tier_tile(
+        payload_ref[0], mins_ref[0], shifts_ref[0], width, pack
+    )  # [C, TL]
+    w = w_ref[0]  # [G, TL]
+    out_ref[0] += jax.lax.dot_general(
+        w, vals, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+
+def vpack_tier_out(
+    payload: Array,
+    mins: Array,
+    shifts: Array,
+    w: Array,
+    *,
+    width: int,
+    pack_size: int,
+    tile_l: int = DEFAULT_TILE_L,
+    interpret: bool = True,
+) -> Array:
+    """One tier's weighted-V output (tier channel order, scale pre-folded).
+
+    payload: u32 [BH, C, L*width/32]; w: f32 [BH, G, L] (weights*scale).
+    Returns out f32 [BH, G, C].
+    """
+    BH, C, Wl = payload.shape
+    G = w.shape[1]
+    L = Wl * (32 // width)
+    assert L % tile_l == 0 and tile_l % (pack_size * 4) == 0
+    nL = L // tile_l
+    tWl = tile_l * width // 32
+    tP = tile_l // pack_size
+
+    return pl.pallas_call(
+        functools.partial(_kernel, width=width, pack=pack_size),
+        grid=(BH, nL),
+        in_specs=[
+            pl.BlockSpec((1, C, tWl), lambda b, l: (b, 0, l)),
+            pl.BlockSpec((1, C, tP), lambda b, l: (b, 0, l)),
+            pl.BlockSpec((1, C, tP // 4), lambda b, l: (b, 0, l)),
+            pl.BlockSpec((1, G, tile_l), lambda b, l: (b, 0, l)),
+        ],
+        out_specs=pl.BlockSpec((1, G, C), lambda b, l: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, G, C), jnp.float32),
+        interpret=interpret,
+        **tpu_params(("parallel", "arbitrary"), interpret),
+    )(payload, mins, shifts, w)

@@ -1,0 +1,200 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+# ^ MUST precede every other import (jax locks device count on first init).
+
+_DOC = """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, without allocating real data:
+  * compiled.memory_analysis()  — per-device bytes (proves it fits)
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for §Roofline
+  * collective bytes parsed from the post-SPMD HLO text
+and writes one JSON per cell under experiments/dryrun/.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-32b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh multi
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+
+from ..configs import ARCHS, ASSIGNED, SHAPES, shape_applicable
+from .mesh import make_production_mesh
+from .specs import build_cell
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "../../../experiments/dryrun")
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:\w+\[[\d,]*\][^ )]*(?:,\s*)?)+)\)?\s*"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes of every collective op in post-SPMD HLO."""
+    per_op: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        op = m.group(2)
+        n = 0
+        for dt, dims in _SHAPE_RE.findall(m.group(1)):
+            if dt not in _DTYPE_BYTES:
+                continue
+            size = 1
+            for d in dims.split(","):
+                if d:
+                    size *= int(d)
+            n += size * _DTYPE_BYTES[dt]
+        per_op[op] = per_op.get(op, 0) + n
+    per_op["total"] = sum(per_op.values())
+    return per_op
+
+
+def run_cell(arch_name: str, shape_name: str, multi_pod: bool,
+             policy: str = "packkv") -> dict:
+    arch = ARCHS[arch_name]
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    rec: dict = {
+        "arch": arch_name, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "n_devices": mesh.size, "policy": policy,
+    }
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, policy=policy)
+    with mesh:
+        from ..distributed.sharding import set_active_mesh
+
+        set_active_mesh(mesh)
+        try:
+            jitted = jax.jit(
+                cell.step_fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+                donate_argnums=cell.donate_argnums,
+            )
+            lowered = jitted.lower(*cell.args)
+            rec["lower_s"] = round(time.time() - t0, 1)
+            t1 = time.time()
+            compiled = lowered.compile()
+            rec["compile_s"] = round(time.time() - t1, 1)
+            try:
+                ma = compiled.memory_analysis()
+                rec["memory"] = {
+                    k: int(getattr(ma, k))
+                    for k in (
+                        "argument_size_in_bytes", "output_size_in_bytes",
+                        "temp_size_in_bytes", "generated_code_size_in_bytes",
+                    )
+                    if hasattr(ma, k)
+                }
+                print(f"[{cell.name}] memory_analysis: {rec['memory']}")
+            except Exception as e:  # CPU backend may not implement it
+                rec["memory"] = {"error": str(e)}
+            try:
+                ca = compiled.cost_analysis()
+                ca = ca[0] if isinstance(ca, (list, tuple)) else ca
+                rec["cost"] = {
+                    "flops": float(ca.get("flops", -1)),
+                    "bytes_accessed": float(ca.get("bytes accessed", -1)),
+                    "optimal_seconds": float(ca.get("optimal_seconds", -1)),
+                }
+                print(f"[{cell.name}] cost_analysis: {rec['cost']}")
+            except Exception as e:
+                rec["cost"] = {"error": str(e)}
+            hlo = compiled.as_text()
+            rec["collectives"] = collective_bytes(hlo)
+            rec["hlo_lines"] = hlo.count("\n")
+            # loop-aware cost model (scan bodies × trip counts) — the
+            # numbers §Roofline actually uses (XLA's cost_analysis counts
+            # while bodies once; see benchmarks/hlo_cost.py)
+            try:
+                import sys
+
+                sys.path.insert(0, os.path.join(os.path.dirname(__file__),
+                                                "../../.."))
+                from benchmarks.hlo_cost import analyze
+
+                rec["loop_cost"] = analyze(hlo)
+                print(f"[{cell.name}] loop-aware: "
+                      f"flops={rec['loop_cost']['flops']:.3e} "
+                      f"bytes={rec['loop_cost']['bytes']:.3e} "
+                      f"coll={rec['loop_cost']['collectives']['total']:.3e}")
+            except Exception as e:
+                rec["loop_cost"] = {"error": str(e)}
+            rec["status"] = "ok"
+        except Exception as e:
+            rec["status"] = "fail"
+            rec["error"] = f"{type(e).__name__}: {e}"
+            rec["traceback"] = traceback.format_exc()[-3000:]
+        finally:
+            set_active_mesh(None)
+    rec["total_s"] = round(time.time() - t0, 1)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"], default="single")
+    ap.add_argument("--policy", default="packkv",
+                    choices=["packkv", "none", "kivi"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cells = []
+    arch_list = ASSIGNED if args.all or args.arch is None else [args.arch]
+    shape_list = list(SHAPES) if args.all or args.shape is None else [args.shape]
+    for a in arch_list:
+        for s in shape_list:
+            ok, why = shape_applicable(ARCHS[a], SHAPES[s])
+            if ok:
+                cells.append((a, s))
+            else:
+                print(f"SKIP {a}×{s}: {why}")
+
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for a, s in cells:
+        for mp in meshes:
+            tag = f"{a}_{s}_{'multi' if mp else 'single'}_{args.policy}"
+            rec = run_cell(a, s, mp, args.policy)
+            with open(os.path.join(args.out, tag + ".json"), "w") as f:
+                json.dump(rec, f, indent=1)
+            status = rec["status"].upper()
+            if status != "OK":
+                n_fail += 1
+                print(f"{status} {tag}: {rec.get('error')}")
+            else:
+                print(
+                    f"OK {tag}: lower {rec['lower_s']}s compile {rec['compile_s']}s "
+                    f"flops={rec['cost'].get('flops'):.3e} "
+                    f"coll={rec['collectives']['total']:.3e}B"
+                )
+    print(f"dry-run finished: {len(cells) * len(meshes) - n_fail} ok, {n_fail} failed")
+    return 1 if n_fail else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

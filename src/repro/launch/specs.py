@@ -1,0 +1,176 @@
+"""Per-cell step functions + ShapeDtypeStruct input specs + shardings.
+
+``build_cell(arch, shape, mesh)`` returns everything the dry-run needs to
+``jit(...).lower(...).compile()`` one (architecture × input-shape × mesh)
+cell WITHOUT allocating any real data: abstract params/opt/cache via
+jax.eval_shape, abstract batches via ShapeDtypeStruct, and PartitionSpecs
+from the divisibility-aware rule engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ArchConfig, ShapeCfg, shape_applicable
+from ..core.cache import PackKVConfig
+from ..core.tiered import TierSpec
+from ..distributed import sharding as shd
+from ..models import get_model
+from ..models import transformer as tfm
+from ..training.optimizer import OptConfig, init_opt_state
+from ..training.train import make_train_step
+
+
+def default_pack_cfg(arch: ArchConfig, policy: str = "packkv") -> PackKVConfig:
+    """Static dry-run compression config (calibration picks specs at real
+    engine build; the dry-run uses the default 2/4/8 tier split)."""
+    hd = arch.hd
+    return PackKVConfig(
+        policy=policy,
+        k_spec_static=TierSpec.for_head_dim(hd) if policy == "packkv" else None,
+        v_spec_static=TierSpec.for_head_dim(hd) if policy == "packkv" else None,
+    )
+
+
+def batch_struct(arch: ArchConfig, shape: ShapeCfg, *, with_labels: bool) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    d: dict[str, Any] = {}
+    if arch.input_mode == "tokens":
+        d["tokens"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+    elif arch.input_mode == "frames":
+        d["frames"] = jax.ShapeDtypeStruct((B, S, arch.d_model), jnp.bfloat16)
+    else:  # tokens_patches — patches are part of the context budget
+        d["tokens"] = jax.ShapeDtypeStruct((B, S - arch.n_patches), jnp.int32)
+        d["patches"] = jax.ShapeDtypeStruct(
+            (B, arch.n_patches, arch.d_model), jnp.bfloat16
+        )
+    if with_labels:
+        n_lab = S - (arch.n_patches if arch.input_mode == "tokens_patches" else 0)
+        d["labels"] = jax.ShapeDtypeStruct((B, n_lab), jnp.int32)
+    return d
+
+
+@dataclasses.dataclass
+class Cell:
+    name: str
+    step_fn: Any
+    args: tuple  # abstract (ShapeDtypeStruct pytrees)
+    in_shardings: tuple
+    out_shardings: Any
+    donate_argnums: tuple = ()
+
+
+def _named(tree, mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), tree, is_leaf=lambda x: isinstance(x, P)
+    )
+
+
+def build_cell(arch: ArchConfig, shape: ShapeCfg, mesh, *,
+               policy: str = "packkv", backend: str = "xla",
+               grad_accum: int = 0) -> Cell:
+    ok, why = shape_applicable(arch, shape)
+    if not ok:
+        raise ValueError(f"{arch.name} × {shape.name} skipped: {why}")
+    api = get_model(arch)
+    key = jax.random.PRNGKey(0)
+    params_abs = jax.eval_shape(lambda k: api.init(k, arch), key)
+    p_specs = shd.param_specs(params_abs, mesh)
+    dp = shd.dp_axes(mesh)
+    pack_cfg = default_pack_cfg(arch, policy)
+
+    if shape.kind == "train":
+        opt_abs = jax.eval_shape(lambda: init_opt_state(params_abs))
+        o_specs = shd.opt_state_specs(params_abs, mesh)
+        batch = batch_struct(arch, shape, with_labels=True)
+        b_specs = shd.batch_specs(batch, mesh)
+        if grad_accum == 0:  # auto: deeper microbatching for >10B models
+            grad_accum = 8 if arch.param_count() > 1e10 else 4
+        step = make_train_step(
+            api, arch, OptConfig(), grad_accum=grad_accum,
+            param_pspecs=p_specs, accum_pspecs=o_specs.mu,
+        )
+        metric_specs = {"loss": P(), "grad_norm": P(), "step": P()}
+        return Cell(
+            name=f"{arch.name}×{shape.name}",
+            step_fn=step,
+            args=(params_abs, opt_abs, batch),
+            in_shardings=(_named(p_specs, mesh), _named(o_specs, mesh),
+                          _named(b_specs, mesh)),
+            out_shardings=(_named(p_specs, mesh), _named(o_specs, mesh),
+                           _named(metric_specs, mesh)),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        batch = batch_struct(arch, shape, with_labels=False)
+        b_specs = shd.batch_specs(batch, mesh)
+        if arch.family == "encoder":
+            step = partial(tfm.encode, cfg=arch)
+            out_spec = shd.spec_with_fallback(
+                (shape.global_batch, shape.seq_len, arch.d_model),
+                [dp, "model", None], mesh,
+            )
+            return Cell(
+                name=f"{arch.name}×{shape.name}",
+                step_fn=lambda params, batch: step(params, batch=batch),
+                args=(params_abs, batch),
+                in_shardings=(_named(p_specs, mesh), _named(b_specs, mesh)),
+                out_shardings=NamedSharding(mesh, out_spec),
+            )
+        capacity = _capacity(arch, shape)
+        step = lambda params, batch: api.prefill(
+            params, arch, pack_cfg, capacity, batch
+        )
+        cache_abs = jax.eval_shape(
+            lambda: api.alloc_cache(arch, pack_cfg, shape.global_batch, capacity)
+        )
+        c_specs = shd.cache_specs(cache_abs, mesh)
+        logits_spec = shd.spec_with_fallback(
+            (shape.global_batch, arch.vocab), [dp, "model"], mesh
+        )
+        return Cell(
+            name=f"{arch.name}×{shape.name}",
+            step_fn=step,
+            args=(params_abs, batch),
+            in_shardings=(_named(p_specs, mesh), _named(b_specs, mesh)),
+            out_shardings=(NamedSharding(mesh, logits_spec), _named(c_specs, mesh)),
+        )
+
+    # decode
+    capacity = _capacity(arch, shape)
+    cache_abs = jax.eval_shape(
+        lambda: api.alloc_cache(arch, pack_cfg, shape.global_batch, capacity)
+    )
+    c_specs = shd.cache_specs(cache_abs, mesh)
+    token = jax.ShapeDtypeStruct((shape.global_batch, 1), jnp.int32)
+    t_spec = shd.spec_with_fallback(token.shape, [dp, None], mesh)
+    logits_spec = shd.spec_with_fallback(
+        (shape.global_batch, arch.vocab), [dp, "model"], mesh
+    )
+    step = lambda params, cache, token: api.decode_step(
+        params, arch, cache, token, backend=backend
+    )
+    return Cell(
+        name=f"{arch.name}×{shape.name}",
+        step_fn=step,
+        args=(params_abs, cache_abs, token),
+        in_shardings=(_named(p_specs, mesh), _named(c_specs, mesh),
+                      NamedSharding(mesh, t_spec)),
+        out_shardings=(NamedSharding(mesh, logits_spec), _named(c_specs, mesh)),
+        donate_argnums=(1,),
+    )
+
+
+def _capacity(arch: ArchConfig, shape: ShapeCfg) -> int:
+    """Compressed-region capacity for serving cells."""
+    if arch.family == "hybrid_rglru":
+        return arch.window  # windowed cache; RG-LRU state is O(1)
+    if arch.family == "rwkv6":
+        return 64  # unused (state-based)
+    return shape.seq_len

@@ -1,0 +1,114 @@
+"""Training launcher: data stream -> jitted train_step -> checkpoints.
+
+Runs real steps on CPU with smoke/small configs; on a TPU fleet the same
+script runs under the production mesh (--mesh prod). Fault tolerance:
+  * atomic checkpoints every --ckpt-every steps (AsyncCheckpointer)
+  * --resume restores the latest COMMITted checkpoint + data-stream state
+  * StragglerMonitor flags slow steps; after `patience` consecutive flags
+    it requests an elastic downscale plan (logged; the surrounding fleet
+    controller would enact it and re-launch with --resume).
+
+Example (quickstart-scale):
+  PYTHONPATH=src python -m repro.launch.train --arch smollm-135m --smoke \
+      --steps 20 --batch 8 --seq 256 --ckpt-dir /tmp/ckpt
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from ..checkpoint import AsyncCheckpointer, latest_step, restore
+from ..configs import get_arch
+from ..data import ShardedTokenStream
+from ..distributed import StragglerMonitor, downscale_plan
+from ..distributed import sharding as shd
+from ..models import get_model
+from ..training import OptConfig, init_opt_state
+from ..training.train import make_train_step
+from .mesh import make_debug_mesh, make_production_mesh
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--schedule", default="cosine", choices=["cosine", "wsd", "constant"])
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=20)
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--mesh", default="debug", choices=["debug", "prod", "prod-multi"])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch, smoke=args.smoke)
+    if cfg.input_mode != "tokens":
+        raise SystemExit(f"{args.arch}: train launcher supports token archs; "
+                         "see examples/ for frames/patches training")
+    api = get_model(cfg)
+    opt_cfg = OptConfig(lr=args.lr, schedule=args.schedule,
+                        total_steps=args.steps, warmup_steps=max(args.steps // 10, 1))
+
+    mesh = {
+        "debug": lambda: make_debug_mesh(),
+        "prod": lambda: make_production_mesh(),
+        "prod-multi": lambda: make_production_mesh(multi_pod=True),
+    }[args.mesh]()
+
+    stream = ShardedTokenStream(
+        vocab=cfg.vocab, batch_per_host=args.batch, seq=args.seq, seed=args.seed
+    )
+
+    key = jax.random.PRNGKey(args.seed)
+    params = api.init(key, cfg)
+    opt_state = init_opt_state(params)
+    start_step = 0
+    ckpt = AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if args.resume and args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            (params, opt_state), extra = restore(
+                args.ckpt_dir, last, (params, opt_state)
+            )
+            stream.restore(extra["stream"])
+            start_step = last
+            print(f"resumed from step {last}")
+
+    step_fn = jax.jit(make_train_step(api, cfg, opt_cfg, args.grad_accum),
+                      donate_argnums=(0, 1))
+    monitor = StragglerMonitor()
+    shd.set_active_mesh(mesh if mesh.size > 1 else None)
+
+    with mesh:
+        for step in range(start_step, args.steps):
+            batch = stream.next_batch()
+            batch = {k: jax.numpy.asarray(v) for k, v in batch.items()}
+            monitor.start()
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            loss = float(metrics["loss"])
+            verdict = monitor.stop()
+            if verdict == "exclude":
+                plan = downscale_plan(tuple(mesh.devices.shape), "exclude-straggler")
+                print(f"straggler exclusion requested: {plan}")
+            if step % 5 == 0 or step == args.steps - 1:
+                print(f"step {step}: loss={loss:.4f} "
+                      f"gnorm={float(metrics['grad_norm']):.3f} [{verdict}]")
+            if ckpt and (step + 1) % args.ckpt_every == 0:
+                ckpt.submit(step + 1, (params, opt_state),
+                            {"stream": stream.state()})
+    if ckpt:
+        ckpt.close()
+    shd.set_active_mesh(None)
+    print("training done")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

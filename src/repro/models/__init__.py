@@ -1,0 +1,1 @@
+from .registry import ModelApi, get_model  # noqa: F401

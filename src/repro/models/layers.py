@@ -1,0 +1,214 @@
+"""Shared neural-net layers (functional, pytree params, bf16-friendly).
+
+Conventions:
+  * params are nested dicts of jnp arrays; init fns take a jax PRNG key.
+  * compute dtype bf16, accumulation/normalization in f32.
+  * attention memory is bounded by double-chunked flash attention (pure
+    lax.scan — no Pallas needed at train time; decode uses the PackKV
+    fused kernels from repro.kernels).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# basics
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.bfloat16) -> Array:
+    std = 1.0 / math.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype=jnp.bfloat16) -> Array:
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x: Array, w: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def swiglu(x: Array, w_gate: Array, w_up: Array, w_down: Array) -> Array:
+    g = jnp.dot(x, w_gate)
+    u = jnp.dot(x, w_up)
+    return jnp.dot(jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u, w_down)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float = 1e4) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 1e4) -> Array:
+    """x: [..., S, Dh]; positions: [S] or broadcastable to x[..., S]."""
+    Dh = x.shape[-1]
+    freqs = rope_freqs(Dh, theta)  # [Dh/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, Dh/2]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# flash attention (training/prefill) — double-chunked, O(S·chunk) memory
+# ---------------------------------------------------------------------------
+
+
+def flash_attention(
+    q: Array,
+    k: Array,
+    v: Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    sm_scale: float | None = None,
+) -> Array:
+    """Memory-bounded attention with GQA broadcast.
+
+    q: [B, Hq, S, Dh]; k, v: [B, Hkv, S, Dh]. window>0 = sliding-window
+    (local) attention of that width; causal applies the usual lower-
+    triangular mask. Returns [B, Hq, S, Dh].
+    """
+    B, Hq, S, Dh = q.shape
+    Hkv = k.shape[1]
+    G = Hq // Hkv
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(Dh)
+    qc = min(q_chunk, S)
+    kc = min(kv_chunk, S)
+    assert S % qc == 0 and S % kc == 0
+    nq, nk = S // qc, S // kc
+
+    qg = q.reshape(B, Hkv, G, S, Dh)
+    # [nq, B, Hkv, G, qc, Dh]
+    q_ch = jnp.moveaxis(qg.reshape(B, Hkv, G, nq, qc, Dh), 3, 0)
+    k_ch = jnp.moveaxis(k.reshape(B, Hkv, nk, kc, Dh), 2, 0)
+    v_ch = jnp.moveaxis(v.reshape(B, Hkv, nk, kc, Dh), 2, 0)
+
+    q_pos_base = jnp.arange(nq) * qc
+    kv_pos_base = jnp.arange(nk) * kc
+
+    def one_q_chunk(carry, xs):
+        qi, qpb = xs  # [B,Hkv,G,qc,Dh], scalar
+        qpos = qpb + jnp.arange(qc)  # [qc]
+
+        def inner(acc, ys):
+            ki, vi, kpb = ys
+            m_p, l_p, o_p = acc
+            kpos = kpb + jnp.arange(kc)  # [kc]
+            s = jnp.einsum(
+                "bhgqd,bhkd->bhgqk", qi.astype(jnp.float32), ki.astype(jnp.float32)
+            ) * scale
+            mask = jnp.ones((qc, kc), bool)
+            if causal:
+                mask &= qpos[:, None] >= kpos[None, :]
+            if window:
+                mask &= qpos[:, None] - kpos[None, :] < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_n = jnp.maximum(m_p, s.max(-1))
+            alpha = jnp.exp(m_p - m_n)
+            p = jnp.exp(s - m_n[..., None])
+            p = jnp.where(mask, p, 0.0)
+            l_n = l_p * alpha + p.sum(-1)
+            o_n = o_p * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vi.astype(jnp.float32)
+            )
+            return (m_n, l_n, o_n), None
+
+        m0 = jnp.full((B, Hkv, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, qc), jnp.float32)
+        o0 = jnp.zeros((B, Hkv, G, qc, Dh), jnp.float32)
+        # remat each kv-chunk: backward recomputes the [*, qc, kc] score
+        # tile instead of saving one per (q-chunk × kv-chunk) pair — drops
+        # peak training memory by ~nq·nk× (see EXPERIMENTS.md §Perf M1)
+        (m, l, o), _ = jax.lax.scan(
+            jax.checkpoint(inner), (m0, l0, o0), (k_ch, v_ch, kv_pos_base)
+        )
+        out = o / jnp.maximum(l[..., None], 1e-30)
+        return carry, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(one_q_chunk, None, (q_ch, q_pos_base))
+    # outs: [nq, B, Hkv, G, qc, Dh] -> [B, Hq, S, Dh]
+    outs = jnp.moveaxis(outs, 0, 3).reshape(B, Hkv, G, S, Dh)
+    return outs.reshape(B, Hq, S, Dh)
+
+
+# ---------------------------------------------------------------------------
+# attention block params
+# ---------------------------------------------------------------------------
+
+
+def attention_init(key, d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                   qk_norm: bool = False, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], d_model, n_heads * head_dim, dtype),
+        "wk": dense_init(ks[1], d_model, n_kv * head_dim, dtype),
+        "wv": dense_init(ks[2], d_model, n_kv * head_dim, dtype),
+        "wo": dense_init(ks[3], n_heads * head_dim, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = rmsnorm_init(head_dim, dtype)
+        p["k_norm"] = rmsnorm_init(head_dim, dtype)
+    return p
+
+
+def qkv_proj(p: dict, x: Array, n_heads: int, n_kv: int, head_dim: int,
+             positions: Array, rope_theta: float = 1e4, qk_norm: bool = False,
+             use_rope: bool = True):
+    """x: [B, S, D] -> q [B,H,S,Dh], k/v [B,Hkv,S,Dh] (k rotated, cache-ready)."""
+    B, S, _ = x.shape
+    q = jnp.dot(x, p["wq"]).reshape(B, S, n_heads, head_dim).transpose(0, 2, 1, 3)
+    k = jnp.dot(x, p["wk"]).reshape(B, S, n_kv, head_dim).transpose(0, 2, 1, 3)
+    v = jnp.dot(x, p["wv"]).reshape(B, S, n_kv, head_dim).transpose(0, 2, 1, 3)
+    if qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+def mlp_init(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(ks[0], d_model, d_ff, dtype),
+        "w_up": dense_init(ks[1], d_model, d_ff, dtype),
+        "w_down": dense_init(ks[2], d_ff, d_model, dtype),
+    }
+
+
+def mlp_apply(p: dict, x: Array) -> Array:
+    return swiglu(x, p["w_gate"], p["w_up"], p["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: Array, labels: Array) -> Array:
+    """Mean cross-entropy. logits [..., V] f32-upcast, labels [...] int."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(lf, axis=-1)
+    gold = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - gold)

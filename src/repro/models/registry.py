@@ -1,0 +1,102 @@
+"""Model registry: one uniform functional interface over all families.
+
+ModelApi:
+  init(key, cfg) -> params
+  forward_train(params, cfg, batch) -> (logits, aux)
+  loss_fn(params, cfg, batch) -> scalar loss
+  prefill(params, cfg, pack_cfg, capacity, batch) -> (last_logits, cache)
+  decode_step(params, cfg, cache, token, backend=...) -> (logits, cache)
+  alloc_cache(cfg, pack_cfg, batch, capacity) -> cache pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from .layers import softmax_xent
+from . import rglru, rwkv6, transformer
+
+AUX_WEIGHT = 0.01  # MoE load-balance loss weight
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    init: Callable
+    forward_train: Callable
+    loss_fn: Callable
+    prefill: Callable
+    decode_step: Callable
+    alloc_cache: Callable
+
+
+def _make_loss(forward_train):
+    def loss_fn(params, cfg: ArchConfig, batch):
+        from ..distributed.sharding import constrain
+
+        logits, aux = forward_train(params, cfg, batch)
+        if cfg.input_mode == "tokens_patches":
+            logits = logits[:, cfg.n_patches :]  # loss on the text positions
+        # f32 logits are the largest training activation; pin them to
+        # (batch=DP, seq='model') so no device holds a full-vocab ×
+        # full-seq copy (EXPERIMENTS.md §Perf M2)
+        logits = constrain(logits, "batch", "model", None)
+        return softmax_xent(logits, batch["labels"]) + AUX_WEIGHT * aux
+
+    return loss_fn
+
+
+def _transformer_api() -> ModelApi:
+    return ModelApi(
+        init=transformer.init_params,
+        forward_train=transformer.forward_train,
+        loss_fn=_make_loss(transformer.forward_train),
+        prefill=transformer.prefill,
+        decode_step=transformer.decode_step,
+        alloc_cache=transformer.alloc_cache,
+    )
+
+
+def _rwkv_api() -> ModelApi:
+    return ModelApi(
+        init=rwkv6.init_params,
+        forward_train=rwkv6.forward_train,
+        loss_fn=_make_loss(rwkv6.forward_train),
+        prefill=rwkv6.prefill,
+        decode_step=rwkv6.decode_step,
+        alloc_cache=lambda cfg, pack_cfg, batch, capacity: rwkv6.alloc_state(
+            cfg, batch
+        ),
+    )
+
+
+def _rglru_api() -> ModelApi:
+    return ModelApi(
+        init=rglru.init_params,
+        forward_train=rglru.forward_train,
+        loss_fn=_make_loss(rglru.forward_train),
+        prefill=rglru.prefill,
+        decode_step=rglru.decode_step,
+        alloc_cache=lambda cfg, pack_cfg, batch, capacity: rglru.alloc_state(
+            cfg, pack_cfg, batch
+        ),
+    )
+
+
+_FAMILIES = {
+    "dense": _transformer_api,
+    "moe": _transformer_api,
+    "encoder": _transformer_api,
+    "vlm": _transformer_api,
+    "rwkv6": _rwkv_api,
+    "hybrid_rglru": _rglru_api,
+}
+
+
+def get_model(cfg: ArchConfig) -> ModelApi:
+    try:
+        return _FAMILIES[cfg.family]()
+    except KeyError:
+        raise ValueError(f"unknown family {cfg.family!r}") from None

@@ -1,0 +1,372 @@
+"""RecurrentGemma / Griffin (arXiv:2402.19427): RG-LRU + local attention, 1:2.
+
+Layer pattern: groups of (recurrent, recurrent, attention), each sub-layer
+followed by an MLP. 38 layers = 12 scanned groups + 2 trailing recurrent
+blocks. The local-attention layers carry a PackKV-compressed sliding-window
+cache (ring-buffer append — valid by decode-attention permutation
+invariance); RG-LRU layers carry O(1) state, so ``long_500k`` decodes with
+a bounded memory footprint.
+
+Recurrent block: x -> [linear -> causal depthwise conv(4) -> RG-LRU] ⊙
+gelu(linear) -> linear. RG-LRU: a_t = exp(-8·softplus(Λ)·r_t),
+h_t = a_t ⊙ h_{t-1} + sqrt(1-a_t²) ⊙ (i_t ⊙ x_t).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core.cache import (
+    PackKVConfig,
+    alloc_layer_cache,
+    append_token,
+    prefill_cache,
+)
+from ..kernels import dense_decode_attention, packed_decode_attention
+from ..utils import pytree_dataclass
+from .layers import (
+    attention_init,
+    dense_init,
+    flash_attention,
+    mlp_apply,
+    mlp_init,
+    qkv_proj,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+Array = jax.Array
+
+CONV_W = 4
+LRU_C = 8.0
+
+
+@pytree_dataclass
+class RGState:
+    """Decode state. Grouped leaves are stacked [n_groups, ...]."""
+
+    lru_h: Array  # f32 [n_groups, 2, B, R]
+    conv: Array  # bf16 [n_groups, 2, B, CONV_W-1, R]
+    cache: object  # LayerKVCache stacked [n_groups, ...] (window capacity)
+    tail_lru_h: Array  # f32 [n_tail, B, R]
+    tail_conv: Array  # bf16 [n_tail, B, CONV_W-1, R]
+    pos: Array  # i32 []
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def _rec_block_init(key, cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    R = cfg.lru_dim or D
+    ks = jax.random.split(key, 7)
+    return {
+        "ln": rmsnorm_init(D),
+        "w_in": dense_init(ks[0], D, R),
+        "w_gate_branch": dense_init(ks[1], D, R),
+        "conv_w": (jax.random.normal(ks[2], (CONV_W, R)) * 0.1).astype(jnp.bfloat16),
+        "lru_wa": dense_init(ks[3], R, R, jnp.float32),
+        "lru_wx": dense_init(ks[4], R, R, jnp.float32),
+        "lru_lambda": jax.random.uniform(ks[5], (R,), jnp.float32, 0.4, 0.9),
+        "w_out": dense_init(ks[6], R, D),
+        "mlp_ln": rmsnorm_init(D),
+        "mlp": mlp_init(jax.random.fold_in(key, 7), D, cfg.d_ff),
+    }
+
+
+def _attn_block_init(key, cfg: ArchConfig) -> dict:
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln": rmsnorm_init(cfg.d_model),
+        "attn": attention_init(k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd),
+        "mlp_ln": rmsnorm_init(cfg.d_model),
+        "mlp": mlp_init(k2, cfg.d_model, cfg.d_ff),
+    }
+
+
+def _group_init(key, cfg: ArchConfig) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "rec": jax.vmap(lambda k: _rec_block_init(k, cfg))(jnp.stack([k1, k2])),
+        "attn": _attn_block_init(k3, cfg),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    n_groups, n_tail = divmod(cfg.n_layers, 3)
+    ks = jax.random.split(key, 4)
+    gkeys = jax.random.split(ks[0], n_groups)
+    tkeys = jax.random.split(ks[1], max(n_tail, 1))
+    return {
+        "groups": jax.vmap(lambda k: _group_init(k, cfg))(gkeys),
+        "tail": jax.vmap(lambda k: _rec_block_init(k, cfg))(tkeys[:n_tail])
+        if n_tail
+        else None,
+        "embed": (jax.random.normal(ks[2], (cfg.vocab, cfg.d_model)) * 0.02).astype(
+            jnp.bfloat16
+        ),
+        "final_ln": rmsnorm_init(cfg.d_model),
+        "head": dense_init(ks[3], cfg.d_model, cfg.vocab),
+    }
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU + conv
+# ---------------------------------------------------------------------------
+
+
+def _causal_conv_seq(w: Array, x: Array, x_hist: Array):
+    """Depthwise causal conv via shifted adds. x: [B,T,R]; x_hist: [B,CONV_W-1,R]."""
+    xp = jnp.concatenate([x_hist, x], axis=1)  # [B, T+3, R]
+    T = x.shape[1]
+    y = sum(w[i] * jax.lax.dynamic_slice_in_dim(xp, i, T, 1) for i in range(CONV_W))
+    return y, xp[:, -(CONV_W - 1) :]  # new history
+
+
+def _rg_lru_seq(p: dict, x: Array, h0: Array):
+    """x: [B,T,R] f32-gated LRU scan; returns (y [B,T,R], h_final [B,R])."""
+    xf = x.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["lru_wa"])
+    i = jax.nn.sigmoid(xf @ p["lru_wx"])
+    log_a = -LRU_C * jax.nn.softplus(p["lru_lambda"]) * r  # [B,T,R]
+    a = jnp.exp(log_a)
+    gx = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (i * xf)
+
+    def step(h, inp):
+        a_t, gx_t = inp
+        h = a_t * h + gx_t
+        return h, h
+
+    aT = jnp.moveaxis(a, 1, 0)
+    gT = jnp.moveaxis(gx, 1, 0)
+    h, ys = jax.lax.scan(step, h0, (aT, gT))
+    return jnp.moveaxis(ys, 0, 1), h
+
+
+def _rec_block_seq(p: dict, cfg: ArchConfig, h: Array, conv_hist: Array, h0: Array):
+    """Full recurrent residual block over a sequence."""
+    x = rmsnorm(h, p["ln"])
+    y1 = x @ p["w_in"]
+    y2 = jax.nn.gelu((x @ p["w_gate_branch"]).astype(jnp.float32)).astype(h.dtype)
+    y1, new_hist = _causal_conv_seq(p["conv_w"], y1, conv_hist)
+    y1, h_fin = _rg_lru_seq(p, y1, h0)
+    out = (y1.astype(h.dtype) * y2) @ p["w_out"]
+    h = h + out
+    h = h + mlp_apply(p["mlp"], rmsnorm(h, p["mlp_ln"]))
+    return h, new_hist, h_fin
+
+
+def _attn_block_seq(p: dict, cfg: ArchConfig, h: Array, positions: Array):
+    x = rmsnorm(h, p["ln"])
+    q, k, v = qkv_proj(
+        p["attn"], x, cfg.n_heads, cfg.n_kv_heads, cfg.hd, positions, cfg.rope_theta
+    )
+    attn = flash_attention(q, k, v, causal=True, window=cfg.window)
+    B, S, _ = h.shape
+    attn = attn.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.hd)
+    h = h + jnp.dot(attn.astype(h.dtype), p["attn"]["wo"])
+    h = h + mlp_apply(p["mlp"], rmsnorm(h, p["mlp_ln"]))
+    return h, (k, v)
+
+
+# ---------------------------------------------------------------------------
+# train / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def _zeros_states(cfg: ArchConfig, B: int):
+    R = cfg.lru_dim or cfg.d_model
+    return (
+        jnp.zeros((B, CONV_W - 1, R), jnp.bfloat16),
+        jnp.zeros((B, R), jnp.float32),
+    )
+
+
+def forward_train(params: dict, cfg: ArchConfig, batch: dict):
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    h = params["embed"][tokens]
+    positions = jnp.arange(T)
+    conv0, h0 = _zeros_states(cfg, B)
+
+    def group_body(hh, gp):
+        for r in range(2):
+            rp = jax.tree_util.tree_map(lambda a: a[r], gp["rec"])
+            hh, _, _ = _rec_block_seq(rp, cfg, hh, conv0, h0)
+        hh, _ = _attn_block_seq(gp["attn"], cfg, hh, positions)
+        return hh, None
+
+    from ..distributed.sharding import constrain
+
+    block = jax.checkpoint(group_body)
+
+    def wrapped(c, x):
+        hh, y = block(c, x)
+        return constrain(hh, "batch", "model", None), y
+
+    h, _ = jax.lax.scan(wrapped, h, params["groups"])
+    if params["tail"] is not None:
+        n_tail = jax.tree_util.tree_leaves(params["tail"])[0].shape[0]
+        for t in range(n_tail):
+            tp = jax.tree_util.tree_map(lambda a: a[t], params["tail"])
+            h, _, _ = _rec_block_seq(tp, cfg, h, conv0, h0)
+    h = rmsnorm(h, params["final_ln"])
+    return jnp.dot(h, params["head"]).astype(jnp.float32), jnp.zeros((), jnp.float32)
+
+
+def alloc_state(cfg: ArchConfig, pack_cfg: PackKVConfig, batch: int) -> RGState:
+    n_groups, n_tail = divmod(cfg.n_layers, 3)
+    R = cfg.lru_dim or cfg.d_model
+    W = cfg.window
+    one_cache = lambda _: alloc_layer_cache(
+        pack_cfg, batch, cfg.n_kv_heads, cfg.hd, W
+    )
+    return RGState(
+        lru_h=jnp.zeros((n_groups, 2, batch, R), jnp.float32),
+        conv=jnp.zeros((n_groups, 2, batch, CONV_W - 1, R), jnp.bfloat16),
+        cache=jax.vmap(one_cache)(jnp.arange(n_groups)),
+        tail_lru_h=jnp.zeros((n_tail, batch, R), jnp.float32),
+        tail_conv=jnp.zeros((n_tail, batch, CONV_W - 1, R), jnp.bfloat16),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill(params: dict, cfg: ArchConfig, pack_cfg: PackKVConfig, capacity: int,
+            batch: dict):
+    """capacity is ignored for the windowed cache (window is the capacity)."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    W = cfg.window
+    h = params["embed"][tokens]
+    positions = jnp.arange(T)
+    conv0, h0 = _zeros_states(cfg, B)
+    Wc = min(T, W)  # tokens that land in the window cache (static)
+
+    def group_body(hh, gp):
+        states = []
+        for r in range(2):
+            rp = jax.tree_util.tree_map(lambda a: a[r], gp["rec"])
+            hh, hist, hf = _rec_block_seq(rp, cfg, hh, conv0, h0)
+            states.append((hist, hf))
+        hh, (k, v) = _attn_block_seq(gp["attn"], cfg, hh, positions)
+        cache_l = alloc_layer_cache(pack_cfg, B, cfg.n_kv_heads, cfg.hd, W)
+        cache_l = prefill_cache(cache_l, k[..., -Wc:, :], v[..., -Wc:, :])
+        lru = jnp.stack([states[0][1], states[1][1]])
+        conv = jnp.stack([states[0][0], states[1][0]])
+        return hh, (lru, conv, cache_l)
+
+    h, (lru, conv, cache) = jax.lax.scan(group_body, h, params["groups"])
+    n_tail = cfg.n_layers % 3
+    tails_l, tails_c = [], []
+    for t in range(n_tail):
+        tp = jax.tree_util.tree_map(lambda a: a[t], params["tail"])
+        h, hist, hf = _rec_block_seq(tp, cfg, h, conv0, h0)
+        tails_l.append(hf)
+        tails_c.append(hist)
+    hl = rmsnorm(h[:, -1:], params["final_ln"])
+    logits = jnp.dot(hl, params["head"])[:, 0].astype(jnp.float32)
+    state = RGState(
+        lru_h=lru, conv=conv, cache=cache,
+        tail_lru_h=jnp.stack(tails_l) if n_tail else jnp.zeros((0, B, cfg.lru_dim or cfg.d_model), jnp.float32),
+        tail_conv=jnp.stack(tails_c) if n_tail else jnp.zeros((0, B, CONV_W - 1, cfg.lru_dim or cfg.d_model), jnp.bfloat16),
+        pos=jnp.int32(T),
+    )
+    return logits, state
+
+
+def _rec_block_step(p: dict, cfg: ArchConfig, h: Array, conv_hist: Array, h0: Array):
+    """One-token recurrent block. h: [B, D]."""
+    x = rmsnorm(h, p["ln"])
+    y1 = x @ p["w_in"]  # [B, R]
+    y2 = jax.nn.gelu((x @ p["w_gate_branch"]).astype(jnp.float32)).astype(h.dtype)
+    xp = jnp.concatenate([conv_hist, y1[:, None]], axis=1)  # [B, CONV_W, R]
+    yc = jnp.einsum("cr,bcr->br", p["conv_w"], xp)
+    new_hist = xp[:, 1:]
+    xf = yc.astype(jnp.float32)
+    r = jax.nn.sigmoid(xf @ p["lru_wa"])
+    i = jax.nn.sigmoid(xf @ p["lru_wx"])
+    a = jnp.exp(-LRU_C * jax.nn.softplus(p["lru_lambda"]) * r)
+    hn = a * h0 + jnp.sqrt(jnp.maximum(1 - a * a, 1e-12)) * (i * xf)
+    out = (hn.astype(h.dtype) * y2) @ p["w_out"]
+    h = h + out
+    h = h + mlp_apply(p["mlp"], rmsnorm(h, p["mlp_ln"]))
+    return h, new_hist, hn
+
+
+def decode_step(params: dict, cfg: ArchConfig, cache: RGState, token: Array,
+                *, backend: str = "xla"):
+    """One decode token with windowed PackKV attention caches."""
+    state = cache  # uniform arg name across families (registry contract)
+    B = token.shape[0]
+    W = cfg.window
+    h = params["embed"][token[:, 0]]  # [B, D]
+    pos = state.pos
+    positions = pos + jnp.arange(1)
+    sm_scale = 1.0 / (cfg.hd ** 0.5)
+
+    def group_body(hh, xs):
+        gp, lru, conv, cache_l = xs
+        new_lru, new_conv = [], []
+        for r in range(2):
+            rp = jax.tree_util.tree_map(lambda a: a[r], gp["rec"])
+            hh, hist, hf = _rec_block_step(rp, cfg, hh, conv[r], lru[r])
+            new_lru.append(hf)
+            new_conv.append(hist)
+        x = rmsnorm(hh, gp["attn"]["ln"])
+        q, k, v = qkv_proj(
+            gp["attn"]["attn"], x[:, None], cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            positions, cfg.rope_theta,
+        )
+        qd = q[:, :, 0]
+        from ..distributed.sharding import _ACTIVE_MESH as mesh
+
+        n_sh = mesh.shape.get("model", 1) if mesh is not None else 1
+        if n_sh > 1 and W % n_sh == 0 and (W // n_sh) % cache_l.cfg.block == 0:
+            from ..kernels.sharded import context_parallel_decode_step
+
+            attn, cache_l = context_parallel_decode_step(
+                qd, k, v, cache_l, sm_scale, mesh, ring=True
+            )
+        elif cache_l.cfg.policy == "none":
+            cache_l = append_token(cache_l, k, v, ring=True)
+            n_valid = jnp.minimum(cache_l.n_comp, W)
+            attn = dense_decode_attention(
+                qd, cache_l.raw_k, cache_l.raw_v, cache_l.resid_k, cache_l.resid_v,
+                n_valid, cache_l.n_resid, sm_scale,
+            )
+        else:
+            cache_l = append_token(cache_l, k, v, ring=True)
+            n_valid = jnp.minimum(cache_l.n_comp, W)
+            attn = packed_decode_attention(
+                qd, cache_l.k, cache_l.v, cache_l.resid_k, cache_l.resid_v,
+                n_valid, cache_l.n_resid, sm_scale, backend=backend,
+            )
+        attn = attn.reshape(B, cfg.n_heads * cfg.hd)
+        hh = hh + attn.astype(hh.dtype) @ gp["attn"]["attn"]["wo"]
+        hh = hh + mlp_apply(gp["attn"]["mlp"], rmsnorm(hh, gp["attn"]["mlp_ln"]))
+        return hh, (jnp.stack(new_lru), jnp.stack(new_conv), cache_l)
+
+    h, (lru, conv, cache) = jax.lax.scan(
+        group_body, h, (params["groups"], state.lru_h, state.conv, state.cache)
+    )
+    n_tail = state.tail_lru_h.shape[0]
+    tails_l, tails_c = [], []
+    for t in range(n_tail):
+        tp = jax.tree_util.tree_map(lambda a: a[t], params["tail"])
+        h, hist, hf = _rec_block_step(tp, cfg, h, state.tail_conv[t], state.tail_lru_h[t])
+        tails_l.append(hf)
+        tails_c.append(hist)
+    hl = rmsnorm(h, params["final_ln"])
+    logits = jnp.dot(hl, params["head"]).astype(jnp.float32)
+    new_state = RGState(
+        lru_h=lru, conv=conv, cache=cache,
+        tail_lru_h=jnp.stack(tails_l) if n_tail else state.tail_lru_h,
+        tail_conv=jnp.stack(tails_c) if n_tail else state.tail_conv,
+        pos=pos + 1,
+    )
+    return logits, new_state

@@ -1,0 +1,309 @@
+"""RWKV-6 "Finch" (arXiv:2404.05892): linear RNN with data-dependent decay.
+
+PackKV is INAPPLICABLE here (DESIGN.md §4): decode state is O(1) in context
+length — a per-head [N, N] matrix — so there is no growing KV cache to
+compress. The arch is implemented without the technique; its fixed-size
+WKV state can optionally round-trip through the paper's quantizer
+(``state_rel_scale``), which is a beyond-paper extra, not the contribution.
+
+Faithful-enough simplifications (recorded here): static channel mixing
+coefficients for r/k/v/g token-shift interpolation; the defining Finch
+feature — LoRA data-dependent decay w_t — is kept exactly:
+``w_t = exp(-exp(w0 + tanh(x_w A) B))``.
+
+Recurrence per head (k, v, r ∈ R^N, state S ∈ R^{N×N}):
+  y_t = (S_{t-1} + diag(u) k_tᵀ v_t)ᵀ r_t
+  S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..utils import pytree_dataclass
+from .layers import dense_init, rmsnorm, rmsnorm_init, softmax_xent
+
+Array = jax.Array
+
+LORA_RANK = 64
+WKV_CHUNK = 64  # remat chunk length for the sequential WKV scan (§Perf M3)
+CHUNK_C = 16  # chunked matmul-form WKV chunk length (§Perf H2)
+# per-step decay clamp for the factorized form: C/2·|MIN_LOGW| = 32 keeps
+# every factor exponent f32-safe with no pair-weight distortion (decays
+# faster than e^-4/step are fully forgotten in <3 steps anyway)
+MIN_LOGW = -4.0
+_EXP_CLIP = 40.0  # belt-and-braces on factor exponents (inert given clamp)
+
+
+@pytree_dataclass
+class RwkvState:
+    """Decode state: [n_layers, ...] stacked."""
+
+    S: Array  # f32 [n_layers, B, H, N, N] wkv state
+    tm_x: Array  # bf16 [n_layers, B, D] last token (time-mix shift)
+    cm_x: Array  # bf16 [n_layers, B, D] last token (channel-mix shift)
+    pos: Array  # i32 []
+
+
+def init_layer(key, cfg: ArchConfig) -> dict:
+    D = cfg.d_model
+    H = cfg.wkv_heads or cfg.n_heads
+    N = D // H
+    ks = jax.random.split(key, 10)
+    return {
+        "ln1": rmsnorm_init(D),
+        "ln2": rmsnorm_init(D),
+        "mu": (jax.random.uniform(ks[0], (5, D)) * 0.5 + 0.25).astype(jnp.bfloat16),
+        "w0": jnp.zeros((D,), jnp.float32) - 6.0,  # slow default decay
+        "wA": dense_init(ks[1], D, LORA_RANK, jnp.float32),
+        "wB": (jax.random.normal(ks[2], (LORA_RANK, D)) * 0.01).astype(jnp.float32),
+        "u": (jax.random.normal(ks[3], (H, N)) * 0.1).astype(jnp.float32),
+        "wr": dense_init(ks[4], D, D),
+        "wk": dense_init(ks[5], D, D),
+        "wv": dense_init(ks[6], D, D),
+        "wg": dense_init(ks[7], D, D),
+        "wo": dense_init(ks[8], D, D),
+        "ln_x": rmsnorm_init(D),
+        # channel mix
+        "cm_wk": dense_init(ks[9], D, cfg.d_ff),
+        "cm_wv": dense_init(jax.random.fold_in(key, 99), cfg.d_ff, D),
+        "cm_wr": dense_init(jax.random.fold_in(key, 98), D, D),
+    }
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    k0, k1, k2 = jax.random.split(key, 3)
+    layer_keys = jax.random.split(k0, cfg.n_layers)
+    return {
+        "layers": jax.vmap(lambda k: init_layer(k, cfg))(layer_keys),
+        "embed": (jax.random.normal(k1, (cfg.vocab, cfg.d_model)) * 0.02).astype(
+            jnp.bfloat16
+        ),
+        "final_ln": rmsnorm_init(cfg.d_model),
+        "head": dense_init(k2, cfg.d_model, cfg.vocab),
+    }
+
+
+def _decay(p: dict, xw: Array) -> Array:
+    """Data-dependent decay w_t in (0, 1). xw: [..., D] -> [..., D] f32."""
+    lora = jnp.tanh(xw.astype(jnp.float32) @ p["wA"]) @ p["wB"]
+    return jnp.exp(-jnp.exp(p["w0"] + lora))
+
+
+def _wkv_chunked(r, k, v, w, u, S0):
+    """Chunked matmul-form WKV (§Perf H2): the exact recurrence
+      y_t = r_t·(S_{t-1} + diag(u) k_tᵀ v_t);  S_t = diag(w_t) S_{t-1} + k_tᵀ v_t
+    evaluated per CHUNK_C-token chunk as three matmuls, so the [N,N] state
+    is read/written once per chunk (÷C HBM traffic) and the per-step VPU
+    elementwise work becomes MXU matmuls.
+
+    Factorization: with lp = cumsum(log w), the cross-token weight
+    exp(lp_{t-1} - lp_s) splits as exp(lp_{t-1} - ρ)·exp(ρ - lp_s) around
+    the mid-chunk reference ρ; clamping log w >= MIN_LOGW bounds both
+    factors' exponents by C/2·|MIN_LOGW| < 88 (f32-safe). Verified against
+    the sequential scan in tests/test_rwkv_chunked.py.
+
+    r,k,v,w: [B,T,H,N] (w = decay in (0,1)); u: [H,N]; S0: [B,H,N,N].
+    Returns (y [B,T,H,N], S_final).
+    """
+    B, T, H, N = r.shape
+    C = CHUNK_C
+    assert T % C == 0
+    tm = lambda a: jnp.moveaxis(a, 1, 0).reshape(T // C, C, B, H, N)
+    rs, ks, vs = tm(r), tm(k), tm(v)
+    lws = tm(jnp.maximum(jnp.log(jnp.maximum(w, 1e-38)), MIN_LOGW))
+    mask = jnp.tril(jnp.ones((C, C)), -1)  # strict lower: s < t
+
+    def chunk(S, inp):
+        rc, kc, vc, lw = inp  # [C,B,H,N]
+        lp = jnp.cumsum(lw, axis=0)  # [C,B,H,N]
+        lp_prev = jnp.concatenate([jnp.zeros_like(lp[:1]), lp[:-1]], axis=0)
+        rho = lp[C // 2]  # [B,H,N]
+        W1 = rc * jnp.exp(jnp.clip(lp_prev - rho, -_EXP_CLIP, _EXP_CLIP))
+        W2 = kc * jnp.exp(jnp.clip(rho - lp, -_EXP_CLIP, _EXP_CLIP))
+        scores = jnp.einsum("tbhn,sbhn->bhts", W1, W2)
+        scores = scores * mask[None, None]
+        y_intra = jnp.einsum("bhts,sbhm->tbhm", scores, vc)
+        y_S0 = jnp.einsum("tbhn,bhnm->tbhm", rc * jnp.exp(lp_prev), S)
+        y_diag = jnp.sum(rc * u[None, None] * kc, -1, keepdims=True) * vc
+        decay_end = jnp.exp(lp[-1])  # [B,H,N]
+        S_new = decay_end[..., :, None] * S + jnp.einsum(
+            "tbhn,tbhm->bhnm", kc * jnp.exp(lp[-1][None] - lp), vc
+        )
+        return S_new, y_S0 + y_intra + y_diag
+
+    S, ys = jax.lax.scan(chunk, S0, (rs, ks, vs, lws))
+    y = ys.reshape(T, B, H, N)
+    return jnp.moveaxis(y, 0, 1), S
+
+
+def _time_mix_seq(p: dict, cfg: ArchConfig, x: Array, x_prev: Array, S0: Array):
+    """Sequential WKV over [B, S, D]; returns (y, S_final, last_x)."""
+    B, T, D = x.shape
+    H = cfg.wkv_heads or cfg.n_heads
+    N = D // H
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)  # shifted
+    mu = p["mu"]
+    mix = lambda i: x + mu[i] * (xs - x)
+    xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+    r = (xr @ p["wr"]).reshape(B, T, H, N).astype(jnp.float32)
+    k = (xk @ p["wk"]).reshape(B, T, H, N).astype(jnp.float32)
+    v = (xv @ p["wv"]).reshape(B, T, H, N).astype(jnp.float32)
+    g = jax.nn.silu((xg @ p["wg"]).astype(jnp.float32))
+    w = _decay(p, xw).reshape(B, T, H, N)  # [B,T,H,N]
+    u = p["u"]  # [H, N]
+
+    def step(S, inp):
+        r_t, k_t, v_t, w_t = inp  # [B,H,N] each
+        kv = k_t[..., :, None] * v_t[..., None, :]  # [B,H,N,N]
+        y = jnp.einsum("bhn,bhnm->bhm", r_t, S + u[None, :, :, None] * kv)
+        S = w_t[..., :, None] * S + kv
+        return S, y
+
+    if T % CHUNK_C == 0:
+        # chunked matmul form (§Perf H2): state r/w once per chunk
+        y4, S = _wkv_chunked(r, k, v, w, u, S0)
+        y = y4.reshape(B, T, D)
+    else:
+        rs, ks_, vs, ws = (jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
+        # chunked remat fallback: saving S per step costs T·|S| at backward
+        # peak (34 GB at 4k×16 local batch); checkpoint WKV_CHUNK-step
+        # chunks instead (§Perf M3).
+        C = WKV_CHUNK if T % WKV_CHUNK == 0 else 1
+        if C > 1:
+            chunked = lambda a: a.reshape(T // C, C, *a.shape[1:])
+            rs, ks_, vs, ws = (chunked(a) for a in (rs, ks_, vs, ws))
+
+            @jax.checkpoint
+            def chunk_step(S, inp):
+                return jax.lax.scan(step, S, inp)
+
+            S, ys = jax.lax.scan(chunk_step, S0, (rs, ks_, vs, ws))
+            ys = ys.reshape(T, *ys.shape[2:])
+        else:
+            S, ys = jax.lax.scan(step, S0, (rs, ks_, vs, ws))
+        y = jnp.moveaxis(ys, 0, 1).reshape(B, T, D)  # [B,T,D]
+    y = rmsnorm(y.astype(x.dtype), p["ln_x"]) * g.astype(x.dtype)
+    return (y @ p["wo"]), S, x[:, -1]
+
+
+def _channel_mix_seq(p: dict, x: Array, x_prev: Array):
+    xs = jnp.concatenate([x_prev[:, None], x[:, :-1]], axis=1)
+    xk = x + 0.5 * (xs - x)
+    xr = x + 0.5 * (xs - x)
+    kk = jnp.square(jax.nn.relu((xk @ p["cm_wk"]).astype(jnp.float32))).astype(x.dtype)
+    return jax.nn.sigmoid((xr @ p["cm_wr"]).astype(jnp.float32)).astype(x.dtype) * (
+        kk @ p["cm_wv"]
+    ), x[:, -1]
+
+
+def forward_train(params: dict, cfg: ArchConfig, batch: dict):
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    D = cfg.d_model
+    H = cfg.wkv_heads or cfg.n_heads
+    N = D // H
+    h = params["embed"][tokens]
+
+    def body(hh, lp):
+        z = jnp.zeros((B, D), hh.dtype)
+        S0 = jnp.zeros((B, H, N, N), jnp.float32)
+        y, _, _ = _time_mix_seq(lp, cfg, rmsnorm(hh, lp["ln1"]), z, S0)
+        hh = hh + y
+        c, _ = _channel_mix_seq(lp, rmsnorm(hh, lp["ln2"]), z)
+        return hh + c, None
+
+    from ..distributed.sharding import constrain
+
+    def wrapped(hh, lp):
+        hh, y = jax.checkpoint(body)(hh, lp)
+        return constrain(hh, "batch", "model", None), y
+
+    h, _ = jax.lax.scan(wrapped, h, params["layers"])
+    h = rmsnorm(h, params["final_ln"])
+    return jnp.dot(h, params["head"]).astype(jnp.float32), jnp.zeros((), jnp.float32)
+
+
+def alloc_state(cfg: ArchConfig, batch: int) -> RwkvState:
+    D = cfg.d_model
+    H = cfg.wkv_heads or cfg.n_heads
+    N = D // H
+    L = cfg.n_layers
+    return RwkvState(
+        S=jnp.zeros((L, batch, H, N, N), jnp.float32),
+        tm_x=jnp.zeros((L, batch, D), jnp.bfloat16),
+        cm_x=jnp.zeros((L, batch, D), jnp.bfloat16),
+        pos=jnp.zeros((), jnp.int32),
+    )
+
+
+def prefill(params: dict, cfg: ArchConfig, pack_cfg, capacity, batch: dict):
+    """Run the prompt through the recurrence; state is the 'cache'."""
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    D = cfg.d_model
+    H = cfg.wkv_heads or cfg.n_heads
+    N = D // H
+    h = params["embed"][tokens]
+
+    def body(hh, lp):
+        z = jnp.zeros((B, D), hh.dtype)
+        S0 = jnp.zeros((B, H, N, N), jnp.float32)
+        xin = rmsnorm(hh, lp["ln1"])
+        y, S, tm_x = _time_mix_seq(lp, cfg, xin, z, S0)
+        hh = hh + y
+        xc = rmsnorm(hh, lp["ln2"])
+        c, cm_x = _channel_mix_seq(lp, xc, z)
+        return hh + c, (S, tm_x, cm_x)
+
+    h, (S, tm_x, cm_x) = jax.lax.scan(body, h, params["layers"])
+    hl = rmsnorm(h[:, -1:], params["final_ln"])
+    logits = jnp.dot(hl, params["head"])[:, 0].astype(jnp.float32)
+    return logits, RwkvState(S=S, tm_x=tm_x, cm_x=cm_x, pos=jnp.int32(T))
+
+
+def decode_step(params: dict, cfg: ArchConfig, cache: RwkvState, token: Array,
+                *, backend: str = "xla"):
+    """One decode token. token [B, 1] -> (logits [B, V], state)."""
+    state = cache  # uniform arg name across families (registry contract)
+    B = token.shape[0]
+    D = cfg.d_model
+    H = cfg.wkv_heads or cfg.n_heads
+    N = D // H
+    h = params["embed"][token[:, 0]]  # [B, D]
+
+    def body(hh, xs):
+        lp, S, tm_x, cm_x = xs
+        xin = rmsnorm(hh, lp["ln1"])
+        mu = lp["mu"]
+        mix = lambda i: xin + mu[i] * (tm_x - xin)
+        xr, xk, xv, xw, xg = (mix(i) for i in range(5))
+        r = (xr @ lp["wr"]).reshape(B, H, N).astype(jnp.float32)
+        k = (xk @ lp["wk"]).reshape(B, H, N).astype(jnp.float32)
+        v = (xv @ lp["wv"]).reshape(B, H, N).astype(jnp.float32)
+        g = jax.nn.silu((xg @ lp["wg"]).astype(jnp.float32))
+        w = _decay(lp, xw).reshape(B, H, N)
+        kv = k[..., :, None] * v[..., None, :]
+        y = jnp.einsum("bhn,bhnm->bhm", r, S + lp["u"][None, :, :, None] * kv)
+        S = w[..., :, None] * S + kv
+        y = y.reshape(B, D)
+        y = rmsnorm(y.astype(hh.dtype), lp["ln_x"]) * g.astype(hh.dtype).reshape(B, D)
+        hh = hh + y @ lp["wo"]
+        xc = rmsnorm(hh, lp["ln2"])
+        xkc = xc + 0.5 * (cm_x - xc)
+        xrc = xc + 0.5 * (cm_x - xc)
+        kk = jnp.square(jax.nn.relu((xkc @ lp["cm_wk"]).astype(jnp.float32))).astype(
+            xc.dtype
+        )
+        c = jax.nn.sigmoid((xrc @ lp["cm_wr"]).astype(jnp.float32)).astype(xc.dtype) * (
+            kk @ lp["cm_wv"]
+        )
+        return hh + c, (S, xin, xc)
+
+    h, (S, tm_x, cm_x) = jax.lax.scan(
+        body, h, (params["layers"], state.S, state.tm_x, state.cm_x)
+    )
+    hl = rmsnorm(h, params["final_ln"])
+    logits = jnp.dot(hl, params["head"]).astype(jnp.float32)
+    return logits, RwkvState(S=S, tm_x=tm_x, cm_x=cm_x, pos=state.pos + 1)

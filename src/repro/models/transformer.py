@@ -1,0 +1,259 @@
+"""Dense transformer family (llama-style): minitron, smollm, minicpm,
+qwen3 (+qk_norm), hubert (encoder mode, frame inputs), internvl2 (VLM:
+patch-prefix inputs).
+
+scan-over-layers with stacked params (compile-time O(1) in depth); train
+forward uses double-chunked flash attention + remat; decode runs the
+PackKV computation-aware decompression path per layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..distributed.sharding import constrain
+from ..core.cache import (
+    LayerKVCache,
+    PackKVConfig,
+    alloc_layer_cache,
+    append_token,
+    prefill_cache,
+)
+from ..kernels import dense_decode_attention, packed_decode_attention
+from .layers import (
+    attention_init,
+    dense_init,
+    flash_attention,
+    mlp_apply,
+    mlp_init,
+    qkv_proj,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def init_layer(key, cfg: ArchConfig) -> dict:
+    from .moe import moe_init
+
+    k1, k2 = jax.random.split(key)
+    return {
+        "ln1": rmsnorm_init(cfg.d_model),
+        "attn": attention_init(
+            k1, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd, cfg.qk_norm
+        ),
+        "ln2": rmsnorm_init(cfg.d_model),
+        "mlp": moe_init(k2, cfg) if cfg.family == "moe" else mlp_init(
+            k2, cfg.d_model, cfg.d_ff
+        ),
+    }
+
+
+def _apply_mlp(cfg: ArchConfig, layer_params: dict, h: Array):
+    """SwiGLU or MoE MLP on the normalized hidden; returns (out, aux)."""
+    from .moe import moe_apply
+
+    if cfg.family == "moe":
+        return moe_apply(layer_params["mlp"], h, cfg)
+    return mlp_apply(layer_params["mlp"], h), jnp.zeros((), jnp.float32)
+
+
+def init_params(key, cfg: ArchConfig) -> dict:
+    keys = jax.random.split(key, 3)
+    layer_keys = jax.random.split(keys[0], cfg.n_layers)
+    layers = jax.vmap(lambda k: init_layer(k, cfg))(layer_keys)
+    params = {
+        "layers": layers,
+        "final_ln": rmsnorm_init(cfg.d_model),
+        "head": dense_init(keys[1], cfg.d_model, cfg.vocab),
+    }
+    if cfg.input_mode in ("tokens", "tokens_patches"):
+        params["embed"] = (
+            jax.random.normal(keys[2], (cfg.vocab, cfg.d_model), jnp.float32) * 0.02
+        ).astype(jnp.bfloat16)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward pieces
+# ---------------------------------------------------------------------------
+
+
+def _embed_inputs(params: dict, cfg: ArchConfig, batch: dict) -> Array:
+    """Resolve input modality to hidden states [B, S, D]."""
+    if cfg.input_mode == "tokens":
+        return params["embed"][batch["tokens"]]
+    if cfg.input_mode == "frames":  # audio stub: precomputed frame embeddings
+        return batch["frames"].astype(jnp.bfloat16)
+    if cfg.input_mode == "tokens_patches":  # VLM stub: patch-embedding prefix
+        tok = params["embed"][batch["tokens"]]
+        return jnp.concatenate([batch["patches"].astype(tok.dtype), tok], axis=1)
+    raise ValueError(cfg.input_mode)
+
+
+def _block_train(cfg: ArchConfig, p: dict, h: Array, positions: Array):
+    hn = rmsnorm(h, p["ln1"])
+    q, k, v = qkv_proj(
+        p["attn"], hn, cfg.n_heads, cfg.n_kv_heads, cfg.hd, positions,
+        cfg.rope_theta, cfg.qk_norm, cfg.use_rope,
+    )
+    # sequence-parallel attention layout (§Perf H3): q stays seq-sharded,
+    # k/v are all-gathered ONCE per layer (they're Hkv·S·hd — small under
+    # GQA); every flash tile is then shard-local. Without the pins GSPMD
+    # bounces activations between layouts per kv-chunk (measured 825 GB of
+    # collectives per step on minitron train).
+    q = constrain(q, "batch", None, "model", None)
+    k = constrain(k, "batch", None, None, None)
+    v = constrain(v, "batch", None, None, None)
+    attn = flash_attention(q, k, v, causal=cfg.causal, window=cfg.window)
+    B, S, _ = h.shape
+    attn = attn.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.hd)
+    h = h + jnp.dot(attn.astype(h.dtype), p["attn"]["wo"])
+    m, aux = _apply_mlp(cfg, p, rmsnorm(h, p["ln2"]))
+    return h + m, aux
+
+
+def forward_train(params: dict, cfg: ArchConfig, batch: dict):
+    """Full-sequence forward -> (logits [B, S, V] f32, aux loss scalar)."""
+    h = _embed_inputs(params, cfg, batch)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+
+    block = jax.checkpoint(lambda hh, pp: _block_train(cfg, pp, hh, positions))
+
+    def body(carry, layer_params):
+        hh, aux = carry
+        hh, a = block(hh, layer_params)
+        # sequence parallelism: rematted residual stream sharded over 'model'
+        hh = constrain(hh, "batch", "model", None)
+        return (hh, aux + a), None
+
+    (h, aux), _ = jax.lax.scan(body, (h, jnp.zeros((), jnp.float32)), params["layers"])
+    h = rmsnorm(h, params["final_ln"])
+    return jnp.dot(h, params["head"]).astype(jnp.float32), aux / cfg.n_layers
+
+
+def encode(params: dict, cfg: ArchConfig, batch: dict) -> Array:
+    """Encoder-only forward to final hidden states [B, S, D] (hubert's
+    'prefill' — there is no KV cache for an encoder)."""
+    h = _embed_inputs(params, cfg, batch)
+    S = h.shape[1]
+    positions = jnp.arange(S)
+    block = jax.checkpoint(lambda hh, pp: _block_train(cfg, pp, hh, positions))
+
+    def body(hh, layer_params):
+        hh, _ = block(hh, layer_params)
+        return constrain(hh, "batch", "model", None), None
+
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return rmsnorm(h, params["final_ln"])
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+
+def alloc_cache(cfg: ArchConfig, pack_cfg: PackKVConfig, batch: int, capacity: int):
+    """Stacked per-layer caches [n_layers, ...]."""
+    one = lambda _: alloc_layer_cache(
+        pack_cfg, batch, cfg.n_kv_heads, cfg.hd, capacity
+    )
+    return jax.vmap(one)(jnp.arange(cfg.n_layers))
+
+
+def prefill(params: dict, cfg: ArchConfig, pack_cfg: PackKVConfig, capacity: int,
+            batch: dict):
+    """Process the prompt; returns (last-token logits [B, V], stacked cache)."""
+    h = _embed_inputs(params, cfg, batch)
+    B, S, _ = h.shape
+    positions = jnp.arange(S)
+
+    def body(hh, layer_params):
+        hn = rmsnorm(hh, layer_params["ln1"])
+        q, k, v = qkv_proj(
+            layer_params["attn"], hn, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            positions, cfg.rope_theta, cfg.qk_norm, cfg.use_rope,
+        )
+        attn = flash_attention(q, k, v, causal=cfg.causal, window=cfg.window)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.hd)
+        hh = hh + jnp.dot(attn.astype(hh.dtype), layer_params["attn"]["wo"])
+        m, _ = _apply_mlp(cfg, layer_params, rmsnorm(hh, layer_params["ln2"]))
+        hh = hh + m
+        cache_l = alloc_layer_cache(pack_cfg, B, cfg.n_kv_heads, cfg.hd, capacity)
+        cache_l = prefill_cache(cache_l, k, v)  # compress-as-you-prefill
+        return hh, cache_l
+
+    h, cache = jax.lax.scan(body, h, params["layers"])
+    h = rmsnorm(h[:, -1:], params["final_ln"])
+    logits = jnp.dot(h, params["head"])[:, 0].astype(jnp.float32)
+    return logits, cache
+
+
+def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,
+                *, backend: str = "xla"):
+    """One decode token. token: [B, 1] int32. Returns (logits [B,V], cache)."""
+    h = params["embed"][token] if cfg.input_mode != "frames" else token
+    B = h.shape[0]
+    pos = cache.n_comp[0] + cache.n_resid[0]  # same across layers
+    positions = pos + jnp.arange(1)
+    sm_scale = 1.0 / (cfg.hd ** 0.5)
+
+    from ..distributed.sharding import _ACTIVE_MESH as mesh
+
+    def _use_cp(cache_l) -> bool:
+        if mesh is None or "model" not in mesh.axis_names:
+            return False
+        n = mesh.shape["model"]
+        cap = (cache_l.raw_k.shape[-2] if cache_l.cfg.policy == "none"
+               else cache_l.k.capacity)
+        return n > 1 and cap % n == 0 and (cap // n) % cache_l.cfg.block == 0
+
+    def body(hh, xs):
+        layer_params, cache_l = xs
+        hn = rmsnorm(hh, layer_params["ln1"])
+        q, k, v = qkv_proj(
+            layer_params["attn"], hn, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            positions, cfg.rope_theta, cfg.qk_norm, cfg.use_rope,
+        )
+        qd = q[:, :, 0]  # [B, H, Dh]
+        if _use_cp(cache_l):
+            # context-parallel fused decode (§Perf H1): LSE partial merge
+            # across context shards instead of GSPMD reshards
+            from ..kernels.sharded import context_parallel_decode_step
+
+            attn, cache_l = context_parallel_decode_step(
+                qd, k, v, cache_l, sm_scale, mesh
+            )
+        elif cache_l.cfg.policy == "none":
+            cache_l = append_token(cache_l, k, v)
+            attn = dense_decode_attention(
+                qd, cache_l.raw_k, cache_l.raw_v, cache_l.resid_k, cache_l.resid_v,
+                cache_l.n_comp, cache_l.n_resid, sm_scale,
+            )
+        else:
+            cache_l = append_token(cache_l, k, v)
+            attn = packed_decode_attention(
+                qd, cache_l.k, cache_l.v, cache_l.resid_k, cache_l.resid_v,
+                cache_l.n_comp, cache_l.n_resid, sm_scale, backend=backend,
+            )
+        attn = attn.reshape(B, 1, cfg.n_heads * cfg.hd)
+        hh = hh + jnp.dot(attn.astype(hh.dtype), layer_params["attn"]["wo"])
+        m, _ = _apply_mlp(cfg, layer_params, rmsnorm(hh, layer_params["ln2"]))
+        hh = hh + m
+        return hh, cache_l
+
+    h, cache = jax.lax.scan(body, h, (params["layers"], cache))
+    h = rmsnorm(h[:, -1:], params["final_ln"])
+    logits = jnp.dot(h, params["head"])[:, 0].astype(jnp.float32)
+    return logits, cache

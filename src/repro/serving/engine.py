@@ -1,0 +1,157 @@
+"""Serving engine: calibration, jitted prefill/decode, wave-batched requests.
+
+Build sequence (mirrors a production bring-up):
+  1. CALIBRATE — run a short prefill with the uncompressed policy, collect
+     raw K/V, pick static TierSpecs (core.cache.calibrate_specs). This is
+     the paper's per-model configuration sweep (§IV-B) done once at engine
+     build, before compilation.
+  2. COMPILE — jit prefill + decode with the calibrated PackKVConfig.
+  3. SERVE — requests are grouped into waves (batched prefill, batched
+     greedy decode to completion). Finished rows keep decoding with their
+     output masked — the uniform-length contract the compressed cache's
+     shared block structure relies on. Continuous (per-slot) batching
+     would need per-row n_comp; recorded as future work in DESIGN.md.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ArchConfig
+from ..core.cache import PackKVConfig, calibrate_specs
+from ..models import get_model
+
+Array = jax.Array
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    capacity: int = 4096  # compressed-region token capacity
+    max_batch: int = 8
+    backend: str = "xla"  # xla | pallas
+    calibrate: bool = True
+    calib_tokens: int = 192  # multiple of the 64-token block
+
+
+class Engine:
+    def __init__(self, cfg: ArchConfig, params, pack_cfg: PackKVConfig,
+                 ecfg: EngineConfig):
+        self.cfg = cfg
+        self.params = params
+        self.ecfg = ecfg
+        self.api = get_model(cfg)
+        self.pack_cfg = (
+            self._calibrate(pack_cfg) if (
+                ecfg.calibrate
+                and pack_cfg.policy == "packkv"
+                and cfg.family not in ("rwkv6",)
+            ) else pack_cfg
+        )
+        self._prefill = jax.jit(
+            partial(self.api.prefill, cfg=cfg, pack_cfg=self.pack_cfg,
+                    capacity=ecfg.capacity)
+        )
+        self._decode = jax.jit(
+            partial(self.api.decode_step, cfg=cfg, backend=ecfg.backend)
+        )
+
+    # -- calibration --------------------------------------------------------
+    def _calibrate(self, pack_cfg: PackKVConfig) -> PackKVConfig:
+        S = self.ecfg.calib_tokens
+        rng = np.random.default_rng(0)
+        B = 1
+        batch = {"tokens": jnp.asarray(rng.integers(0, self.cfg.vocab, (B, S)),
+                                       jnp.int32)}
+        if self.cfg.input_mode == "tokens_patches":
+            batch["patches"] = jnp.asarray(
+                rng.normal(size=(B, self.cfg.n_patches, self.cfg.d_model)),
+                jnp.float32,
+            )
+        none_cfg = dataclasses.replace(pack_cfg, policy="none")
+        cap = max(S + self.cfg.n_patches * (self.cfg.input_mode == "tokens_patches"),
+                  pack_cfg.block)
+        cap = -(-cap // pack_cfg.block) * pack_cfg.block
+        if self.cfg.family == "hybrid_rglru":
+            _, state = self.api.prefill(self.params, self.cfg, none_cfg, cap, batch)
+            cache = state.cache
+            n = min(int(jnp.min(cache.n_comp)), self.cfg.window)
+        else:
+            _, cache = self.api.prefill(self.params, self.cfg, none_cfg, cap, batch)
+            n = int(jnp.min(cache.n_comp))
+        n = (n // pack_cfg.block) * pack_cfg.block
+        if n == 0:
+            return pack_cfg
+        rk, rv = cache.raw_k, cache.raw_v  # [L?, B, H, cap, D]
+        lead = rk.shape[: rk.ndim - 3]
+        D = rk.shape[-1]
+        k = rk.reshape(-1, *rk.shape[-3:])[:, :, :n, :]  # [L*B, H, n, D]
+        v = rv.reshape(-1, *rv.shape[-3:])[:, :, :n, :]
+        return calibrate_specs(k, v, pack_cfg)
+
+    # -- serving ------------------------------------------------------------
+    def prefill(self, batch: dict):
+        return self._prefill(self.params, batch=batch)
+
+    def decode(self, cache, token: Array):
+        return self._decode(self.params, cache=cache, token=token)
+
+    def generate(self, batch: dict, max_new: int, eos_id: int | None = None):
+        """Greedy wave decode. Returns tokens [B, max_new] (masked past EOS)."""
+        logits, cache = self.prefill(batch)
+        B = logits.shape[0]
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        done = jnp.zeros((B,), bool)
+        outs = []
+        for _ in range(max_new):
+            outs.append(np.asarray(tok[:, 0]))
+            if eos_id is not None:
+                done = done | (tok[:, 0] == eos_id)
+                if bool(done.all()):
+                    break
+            logits, cache = self.decode(cache, tok)
+            tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        return np.stack(outs, axis=1), cache
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray  # [S]
+    max_new: int
+    output: np.ndarray | None = None
+
+
+class WaveServer:
+    """Groups queued requests into fixed-size waves and serves each wave
+    with one batched prefill + shared decode loop (left-pad to the wave's
+    max prompt length)."""
+
+    def __init__(self, engine: Engine, pad_id: int = 0):
+        self.engine = engine
+        self.pad_id = pad_id
+        self.queue: list[Request] = []
+        self.done: dict[int, Request] = {}
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def run_wave(self) -> list[Request]:
+        if not self.queue:
+            return []
+        B = self.engine.ecfg.max_batch
+        wave, self.queue = self.queue[:B], self.queue[B:]
+        S = max(len(r.tokens) for r in wave)
+        S = -(-S // 64) * 64  # block-align prompts
+        toks = np.full((len(wave), S), self.pad_id, np.int32)
+        for i, r in enumerate(wave):
+            toks[i, -len(r.tokens):] = r.tokens  # left-pad
+        max_new = max(r.max_new for r in wave)
+        out, _ = self.engine.generate({"tokens": jnp.asarray(toks)}, max_new)
+        for i, r in enumerate(wave):
+            r.output = out[i, : r.max_new]
+            self.done[r.rid] = r
+        return wave

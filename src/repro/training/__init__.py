@@ -1,0 +1,2 @@
+from .optimizer import OptConfig, OptState, adamw_update, init_opt_state, make_schedule  # noqa: F401
+from .train import init_training, make_train_step  # noqa: F401

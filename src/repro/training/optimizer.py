@@ -1,0 +1,108 @@
+"""AdamW + LR schedules (cosine, WSD) — no external optimizer dependency.
+
+WSD (warmup-stable-decay) is MiniCPM's schedule (arXiv:2404.06395), wired
+to the minicpm-2b config's training preset.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from ..utils import pytree_dataclass
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    schedule: str = "cosine"  # cosine | wsd | constant
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1  # WSD: fraction of steps in the final decay
+
+
+@pytree_dataclass
+class OptState:
+    mu: object  # first moment (f32, param-shaped pytree)
+    nu: object  # second moment
+    step: Array  # i32 []
+
+
+def make_schedule(cfg: OptConfig) -> Callable[[Array], Array]:
+    w, T = cfg.warmup_steps, cfg.total_steps
+
+    def cosine(step):
+        warm = step / jnp.maximum(w, 1)
+        prog = jnp.clip((step - w) / jnp.maximum(T - w, 1), 0.0, 1.0)
+        return cfg.lr * jnp.where(
+            step < w, warm, 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        )
+
+    def wsd(step):
+        decay_start = int(T * (1 - cfg.decay_frac))
+        warm = step / jnp.maximum(w, 1)
+        dec = 1.0 - jnp.clip(
+            (step - decay_start) / jnp.maximum(T - decay_start, 1), 0.0, 1.0
+        )
+        stable = jnp.where(step < decay_start, 1.0, dec)
+        return cfg.lr * jnp.where(step < w, warm, stable)
+
+    def constant(step):
+        return jnp.asarray(cfg.lr)
+
+    return {"cosine": cosine, "wsd": wsd, "constant": constant}[cfg.schedule]
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params
+    )
+    return OptState(mu=zeros, nu=jax.tree_util.tree_map(jnp.copy, zeros),
+                    step=jnp.zeros((), jnp.int32))
+
+
+def global_norm(tree) -> Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+    )
+
+
+def adamw_update(grads, state: OptState, params, cfg: OptConfig):
+    """One AdamW step with global-norm clipping; returns (params, state, gnorm)."""
+    sched = make_schedule(cfg)
+    step = state.step + 1
+    lr = sched(step)
+    b1, b2 = cfg.betas
+
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-9))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        mhat = m / (1 - b1 ** step)
+        vhat = v / (1 - b2 ** step)
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps) + cfg.weight_decay * p.astype(
+            jnp.float32
+        )
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = jax.tree_util.tree_leaves(grads)
+    flat_m = jax.tree_util.tree_leaves(state.mu)
+    flat_v = jax.tree_util.tree_leaves(state.nu)
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(mu=new_m, nu=new_v, step=step), gnorm

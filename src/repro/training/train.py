@@ -1,0 +1,101 @@
+"""Train-step builder: loss + grad, microbatch accumulation, AdamW.
+
+``make_train_step(api, cfg, opt_cfg, grad_accum)`` returns a pure function
+``train_step(params, opt_state, batch) -> (params, opt_state, metrics)``
+suitable for jit/pjit. Batches carry the GLOBAL batch dim; gradient
+accumulation splits it into ``grad_accum`` sequential microbatches via
+lax.scan (activation memory / grad_accum, same math).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..models.registry import ModelApi
+from .optimizer import OptConfig, OptState, adamw_update, init_opt_state
+
+Array = jax.Array
+
+
+def _split_micro(batch: dict, accum: int) -> dict:
+    def sp(x):
+        B = x.shape[0]
+        assert B % accum == 0, f"batch {B} % accum {accum}"
+        return x.reshape(accum, B // accum, *x.shape[1:])
+
+    return {k: sp(v) for k, v in batch.items()}
+
+
+def make_train_step(api: ModelApi, cfg: ArchConfig, opt_cfg: OptConfig,
+                    grad_accum: int = 1, param_pspecs=None,
+                    accum_pspecs=None):
+    """param_pspecs: optional PartitionSpec tree matching params. When given,
+    gradients are explicitly pinned to the param sharding — GSPMD does not
+    reliably propagate param sharding into the scan-backward accumulator
+    carries, which otherwise materialize FULL f32 stacked-layer gradients
+    per device (EXPERIMENTS.md §Perf M4).
+
+    accum_pspecs: sharding for the f32 microbatch gradient accumulator
+    (typically the ZeRO-1 moment specs: param specs + 'data' on a free dim)
+    so accumulation at grad_accum>1 costs params/|mesh| instead of
+    params/|model| bytes (§Perf M6)."""
+
+    def loss_fn(params, micro):
+        return api.loss_fn(params, cfg, micro)
+
+    def _pin(grads, pspecs):
+        if pspecs is None:
+            return grads
+        from ..distributed.sharding import _ACTIVE_MESH  # set by launcher
+
+        if _ACTIVE_MESH is None:
+            return grads
+        from jax.sharding import NamedSharding
+
+        return jax.tree_util.tree_map(
+            lambda g, s: jax.lax.with_sharding_constraint(
+                g, NamedSharding(_ACTIVE_MESH, s)
+            ),
+            grads, pspecs,
+        )
+
+    def train_step(params, opt_state: OptState, batch: dict):
+        if grad_accum == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+            grads = _pin(grads, param_pspecs)
+        else:
+            micros = _split_micro(batch, grad_accum)
+            acc_specs = accum_pspecs if accum_pspecs is not None else param_pspecs
+
+            def body(acc, micro):
+                l_acc, g_acc = acc
+                l, g = jax.value_and_grad(loss_fn)(params, micro)
+                g = _pin(g, param_pspecs)
+                g_acc = _pin(
+                    jax.tree_util.tree_map(jnp.add, g_acc, g), acc_specs
+                )
+                return (l_acc + l, g_acc), None
+
+            zero_g = _pin(
+                jax.tree_util.tree_map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params
+                ),
+                acc_specs,
+            )
+            (loss, grads), _ = jax.lax.scan(
+                body, (jnp.zeros(()), zero_g), micros
+            )
+            loss = loss / grad_accum
+            grads = jax.tree_util.tree_map(lambda g: g / grad_accum, grads)
+
+        params, opt_state, gnorm = adamw_update(grads, opt_state, params, opt_cfg)
+        metrics = {"loss": loss, "grad_norm": gnorm, "step": opt_state.step}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def init_training(api: ModelApi, cfg: ArchConfig, key) -> tuple:
+    params = api.init(key, cfg)
+    return params, init_opt_state(params)

@@ -1,0 +1,51 @@
+"""Small shared utilities."""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+def pytree_dataclass(cls=None, *, meta_fields: tuple[str, ...] = ()):
+    """Frozen dataclass registered as a JAX pytree.
+
+    Fields named in ``meta_fields`` are static (hashable aux data); the rest
+    are array children.
+    """
+
+    def wrap(c):
+        c = dataclasses.dataclass(frozen=True)(c)
+        data_fields = tuple(
+            f.name for f in dataclasses.fields(c) if f.name not in meta_fields
+        )
+        jax.tree_util.register_dataclass(
+            c, data_fields=data_fields, meta_fields=meta_fields
+        )
+        return c
+
+    return wrap if cls is None else wrap(cls)
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def tree_bytes(tree) -> int:
+    return sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(tree)
+        if hasattr(x, "dtype")
+    )
+
+
+def bits_required_jnp(rng: jnp.ndarray) -> jnp.ndarray:
+    """ceil(log2(r+1)) for non-negative integer ranges; 0 when r == 0."""
+    r = rng.astype(jnp.float32)
+    return jnp.where(rng > 0, jnp.floor(jnp.log2(jnp.maximum(r, 1.0))) + 1.0, 0.0).astype(
+        jnp.int32
+    )

@@ -1,0 +1,14 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here — smoke tests must see the
+single real CPU device (the 512-device override belongs to dryrun.py only).
+"""
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,60 @@
+"""Invariants 2 & 7: bit-packing is lossless; sizes match analytic model."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bitpack import (
+    bits_required,
+    compression_ratio,
+    pack_block,
+    packed_total_bits,
+    unpack_block,
+)
+
+
+def test_roundtrip_exact(rng):
+    q = rng.integers(0, 11, size=(64, 128))
+    blk = pack_block(q, 8)
+    assert (unpack_block(blk) == q).all()
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    pack=st.sampled_from([2, 4, 8, 16]),
+    hi=st.integers(1, 255),
+)
+@settings(max_examples=30, deadline=None)
+def test_roundtrip_property(seed, pack, hi):
+    r = np.random.default_rng(seed)
+    n = pack * r.integers(1, 6)
+    q = r.integers(0, hi + 1, size=(n, 16))
+    blk = pack_block(q, pack)
+    assert (unpack_block(blk) == q).all()
+
+
+def test_bits_required():
+    assert (bits_required(np.array([0, 1, 2, 3, 4, 7, 8, 255]))
+            == np.array([0, 1, 2, 2, 3, 3, 4, 8])).all()
+
+
+def test_payload_matches_analytic(rng):
+    q = rng.integers(0, 11, size=(64, 32))
+    blk = pack_block(q, 8)
+    # stored payload words cover exactly payload_bits (invariant 7)
+    assert blk.payload_bits <= len(blk.payload) * 32 < blk.payload_bits + 32 + 32
+    assert blk.total_bits() == packed_total_bits(
+        q, 8, axis=0, n_token_meta=0
+    )
+
+
+def test_constant_block_compresses_maximally(rng):
+    q = np.full((64, 32), 7)
+    blk = pack_block(q, 8)
+    assert blk.payload_bits == 0  # width-0 packs: only metadata remains
+    assert (unpack_block(blk) == q).all()
+
+
+def test_cr_improves_with_low_entropy(rng):
+    lo = rng.integers(0, 2, size=(64, 32))  # 1-bit data
+    hi = rng.integers(0, 256, size=(64, 32))  # 8-bit data
+    assert compression_ratio(lo, 8) > compression_ratio(hi, 8) * 2

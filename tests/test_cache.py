@@ -1,0 +1,128 @@
+"""Runtime cache lifecycle: prefill, decode appends, flush, ring mode."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import (
+    PackKVConfig,
+    alloc_layer_cache,
+    append_token,
+    calibrate_specs,
+    prefill_cache,
+)
+from repro.data import synthetic_kv
+from repro.kernels import ops
+from repro.kernels.ref import dense_decode_attention_ref
+
+
+def test_prefill_bookkeeping(rng):
+    cfg = PackKVConfig()
+    cache = alloc_layer_cache(cfg, 1, 2, 128, 256)
+    k = jnp.asarray(synthetic_kv(rng, 1, 2, 130, 128))
+    cache = prefill_cache(cache, k, k)
+    assert int(cache.n_comp) == 128 and int(cache.n_resid) == 2
+
+
+def test_append_until_flush(rng):
+    cfg = PackKVConfig(residual=96)
+    cache = alloc_layer_cache(cfg, 1, 1, 32, 256)
+    k1 = jnp.asarray(synthetic_kv(rng, 1, 1, 64, 32))
+    cache = prefill_cache(cache, k1, k1)
+    assert int(cache.n_comp) == 64 and int(cache.n_resid) == 0
+    step = jax.jit(append_token)
+    for i in range(97):
+        t = jnp.asarray(synthetic_kv(rng, 1, 1, 1, 32))
+        cache = step(cache, t, t)
+    # residual filled to 96 after the 96th append; the 97th flushes a block
+    assert int(cache.n_comp) == 128
+    assert int(cache.n_resid) == 96 - 64 + 1
+
+
+def test_decode_attention_after_appends_matches_dense(rng):
+    """Rebuild the exact token set; compressed decode ≈ dense decode."""
+    cfg = PackKVConfig(residual=96, k_rel_scale=0.02, v_rel_scale=0.02)
+    B, H, D, cap = 1, 2, 64, 256
+    n0, n_steps = 64, 40
+    k0 = jnp.asarray(synthetic_kv(rng, B, H, n0, D))
+    v0 = jnp.asarray(synthetic_kv(rng, B, H, n0, D))
+    cfg = calibrate_specs(k0, v0, cfg, slack=1)
+    cache = alloc_layer_cache(cfg, B, H, D, cap)
+    cache = prefill_cache(cache, k0, v0)
+    ks, vs = [k0], [v0]
+    for i in range(n_steps):
+        kt = jnp.asarray(synthetic_kv(rng, B, H, 1, D))
+        vt = jnp.asarray(synthetic_kv(rng, B, H, 1, D))
+        ks.append(kt)
+        vs.append(vt)
+        cache = append_token(cache, kt, vt)
+    q = jnp.asarray(rng.normal(size=(B, H * 2, D)).astype(np.float32))
+    sm = 1.0 / np.sqrt(D)
+    got = ops.packed_decode_attention(
+        q, cache.k, cache.v, cache.resid_k, cache.resid_v,
+        cache.n_comp, cache.n_resid, sm,
+    )
+    K = jnp.concatenate(ks, axis=2)
+    V = jnp.concatenate(vs, axis=2)
+    pad = jnp.zeros((B, H, cap - K.shape[2], D))
+    want = dense_decode_attention_ref(
+        q, jnp.concatenate([K, pad], 2), jnp.concatenate([V, pad], 2),
+        cache.resid_k * 0, cache.resid_v * 0,
+        jnp.int32(K.shape[2]), jnp.int32(0), sm,
+    )
+    rel = float(jnp.max(jnp.abs(got - want)) / jnp.max(jnp.abs(want)))
+    assert rel < 0.15, rel
+
+
+def test_ring_append_overwrites_oldest(rng):
+    cfg = PackKVConfig(residual=96, repack="none")
+    W = 128  # window capacity (2 blocks)
+    cache = alloc_layer_cache(cfg, 1, 1, 32, W)
+    k0 = jnp.asarray(synthetic_kv(rng, 1, 1, W, 32))
+    cache = prefill_cache(cache, k0, k0)
+    assert int(cache.n_comp) == W
+    step = jax.jit(lambda c, k, v: append_token(c, k, v, ring=True))
+    for i in range(97):  # trigger one ring flush (residual fills at 96)
+        t = jnp.asarray(synthetic_kv(rng, 1, 1, 1, 32))
+        cache = step(cache, t, t)
+    assert int(cache.n_comp) == W + 64  # grows; mask uses min(n_comp, W)
+    # capacity unchanged — the flush wrapped around
+    assert cache.k.capacity == W
+
+
+def test_policy_none_matches_exact(rng):
+    cfg = PackKVConfig(policy="none", residual=96)
+    B, H, D, cap = 1, 1, 32, 128
+    k = jnp.asarray(synthetic_kv(rng, B, H, 64, D))
+    v = jnp.asarray(synthetic_kv(rng, B, H, 64, D))
+    cache = alloc_layer_cache(cfg, B, H, D, cap)
+    cache = prefill_cache(cache, k, v)
+    q = jnp.asarray(rng.normal(size=(B, H, D)).astype(np.float32))
+    got = ops.dense_decode_attention(
+        q, cache.raw_k, cache.raw_v, cache.resid_k, cache.resid_v,
+        cache.n_comp, cache.n_resid, 0.25,
+    )
+    pad = jnp.zeros((B, H, cap - 64, D))
+    want = dense_decode_attention_ref(
+        q, jnp.concatenate([k, pad], 2).astype(jnp.bfloat16),
+        jnp.concatenate([v, pad], 2).astype(jnp.bfloat16),
+        cache.resid_k, cache.resid_v, jnp.int32(64), jnp.int32(0), 0.25,
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3,
+                               atol=1e-3)
+
+
+def test_policy_registry():
+    from repro.core.policy import available, get_policy
+
+    assert {"none", "kivi", "packkv"} <= set(available())
+    p = get_policy("packkv_tight")
+    assert p.k_rel_scale == 0.02
+    p2 = get_policy("packkv", residual=64)
+    assert p2.residual == 64
+    import pytest as _pt
+
+    with _pt.raises(KeyError):
+        get_policy("bogus")

@@ -1,0 +1,78 @@
+"""§Perf H1 correctness: context-parallel decode == single-device decode.
+
+Runs in a subprocess with 8 fake host devices (the 512-device override is
+reserved for dryrun.py; tests keep the main process at 1 device).
+"""
+import json
+import subprocess
+import sys
+
+import pytest
+
+_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs import SMOKES
+from repro.core.cache import PackKVConfig
+from repro.core.tiered import TierSpec
+from repro.models import get_model
+from repro.distributed.sharding import set_active_mesh
+
+cfg = SMOKES["llama2-7b"]
+api = get_model(cfg)
+params = api.init(jax.random.PRNGKey(0), cfg)
+pack = PackKVConfig(
+    residual=96,
+    k_spec_static=TierSpec.for_head_dim(cfg.hd),
+    v_spec_static=TierSpec.for_head_dim(cfg.hd),
+)
+rng = np.random.default_rng(0)
+B, S, cap = 1, 446, 512  # 512/8 = 64 per shard = one block; resid 62 after prefill
+batch = {"tokens": jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)}
+toks = [jnp.asarray(rng.integers(0, cfg.vocab, (B, 1)), jnp.int32)
+        for _ in range(40)]  # crosses a flush boundary (resid 96 -> block 64)
+
+def run(mesh):
+    set_active_mesh(mesh)
+    try:
+        lg, cache = api.prefill(params, cfg, pack, cap, batch)
+        outs = [np.asarray(lg)]
+        for t in toks:
+            lg, cache = api.decode_step(params, cfg, cache, t)
+            outs.append(np.asarray(lg))
+        return np.stack(outs)
+    finally:
+        set_active_mesh(None)
+
+base = run(None)  # single-device plain path
+mesh = jax.make_mesh((1, 8), ("data", "model"))
+with mesh:
+    cp = run(mesh)  # context-parallel path (8 context shards)
+scale = float(np.max(np.abs(base)))
+rel_early = float(np.max(np.abs(base[:2] - cp[:2]))) / scale
+rel_all = float(np.max(np.abs(base - cp))) / scale
+print("RESULT " + json.dumps({"rel_early": rel_early, "rel_all": rel_all}))
+# prefill + first decode step: identical cache contents -> must match to
+# fp noise. From step 2 on, the LSE-merge's different reduction order
+# rounds k/v casts to the NEIGHBOURING bf16 ulp (measured delta exactly
+# 2^-7), which the lossy codec then amplifies chaotically — only coarse
+# trajectory agreement is meaningful there.
+assert rel_early < 1e-3, rel_early
+assert rel_all < 5e-2, rel_all
+"""
+
+
+@pytest.mark.slow
+def test_context_parallel_decode_matches_single_device():
+    r = subprocess.run(
+        [sys.executable, "-c", _CHILD], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        cwd=".", timeout=900,
+    )
+    lines = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")]
+    assert lines, f"child failed:\n{r.stderr[-2000:]}"
+    res = json.loads(lines[0][7:])
+    assert res["rel_early"] < 1e-3 and res["rel_all"] < 5e-2, res

@@ -1,0 +1,87 @@
+"""The roofline instrument itself: HLO cost parser with loop multiplication."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import sys, os
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks.hlo_cost import HloAnalyzer, analyze  # noqa: E402
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_single_matmul_flops():
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    c = _compile(lambda x, y: x @ y, a, b)
+    r = analyze(c.as_text())
+    want = 2 * 64 * 128 * 32
+    assert abs(r["flops"] - want) / want < 0.05, r["flops"]
+
+
+def test_scan_multiplies_flops():
+    a = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+
+    def f(x):
+        def body(c, _):
+            return c @ c, None
+
+        y, _ = jax.lax.scan(body, x, None, length=10)
+        return y
+
+    c = _compile(f, a)
+    r = analyze(c.as_text())
+    want = 10 * 2 * 64 * 64 * 64
+    assert abs(r["flops"] - want) / want < 0.15, r["flops"]
+    assert not r["warnings"]
+
+
+def test_nested_scan_multiplies():
+    a = jax.ShapeDtypeStruct((32, 32), jnp.float32)
+
+    def f(x):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ ci, None
+
+            ci, _ = jax.lax.scan(inner, c, None, length=5)
+            return ci, None
+
+        y, _ = jax.lax.scan(outer, x, None, length=4)
+        return y
+
+    c = _compile(f, a)
+    r = analyze(c.as_text())
+    want = 4 * 5 * 2 * 32**3
+    assert abs(r["flops"] - want) / want < 0.2, r["flops"]
+
+
+def test_bytes_nonzero_and_scaled():
+    a = jax.ShapeDtypeStruct((1024, 1024), jnp.float32)
+    c = _compile(lambda x: (x * 2 + 1).sum(), a)
+    r = analyze(c.as_text())
+    assert r["bytes"] >= 1024 * 1024 * 4  # at least one read of the input
+
+
+def test_flops_scale_with_layers():
+    """The motivating bug: XLA cost_analysis is depth-blind; ours isn't."""
+    import dataclasses
+
+    from repro.configs import SMOKES
+    from repro.models import get_model
+
+    base = SMOKES["llama2-7b"]
+    outs = {}
+    for L in (2, 4):
+        cfg = dataclasses.replace(base, n_layers=L)
+        api = get_model(cfg)
+        params = jax.eval_shape(lambda k: api.init(k, cfg), jax.random.PRNGKey(0))
+        batch = {"tokens": jax.ShapeDtypeStruct((2, 128), jnp.int32)}
+        c = jax.jit(
+            lambda p, b: api.forward_train(p, cfg, b)[0]
+        ).lower(params, batch).compile()
+        outs[L] = analyze(c.as_text())["flops"]
+    assert outs[4] > outs[2] * 1.5, outs

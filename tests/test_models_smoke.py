@@ -1,0 +1,125 @@
+"""Per-arch smoke tests (assignment requirement): reduced config of the
+same family, one forward/train step on CPU, output shapes + no NaNs; plus
+prefill→decode teacher-forcing consistency for the exact-cache policy."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKES, ARCHS, SHAPES, cells, shape_applicable
+from repro.core.cache import PackKVConfig
+from repro.models import get_model
+
+PACK = PackKVConfig(residual=96)
+
+
+def _batch(cfg, rng, B=2, S=128, labels=True):
+    batch = {}
+    if cfg.input_mode == "tokens":
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, S)), jnp.int32)
+        n_lab = S
+    elif cfg.input_mode == "frames":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(B, S, cfg.d_model)).astype(np.float32)
+        )
+        n_lab = S
+    else:
+        Tt = S - cfg.n_patches
+        batch["tokens"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, Tt)), jnp.int32)
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(B, cfg.n_patches, cfg.d_model)).astype(np.float32)
+        )
+        n_lab = Tt
+    if labels:
+        batch["labels"] = jnp.asarray(rng.integers(0, cfg.vocab, (B, n_lab)), jnp.int32)
+    return batch
+
+
+@pytest.mark.parametrize("name", sorted(SMOKES))
+def test_forward_and_loss(name, rng):
+    cfg = SMOKES[name]
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, rng)
+    logits, aux = api.forward_train(params, cfg, batch)
+    assert logits.shape[0] == 2 and logits.shape[-1] == cfg.vocab
+    assert not bool(jnp.isnan(logits).any())
+    loss = api.loss_fn(params, cfg, batch)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize(
+    "name", [n for n, c in sorted(SMOKES.items()) if c.has_decode]
+)
+def test_prefill_decode(name, rng):
+    cfg = SMOKES[name]
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(0), cfg)
+    batch = _batch(cfg, rng, labels=False)
+    logits, cache = api.prefill(params, cfg, PACK, 256, batch)
+    assert logits.shape == (2, cfg.vocab)
+    tok = jnp.asarray(rng.integers(0, cfg.vocab, (2, 1)), jnp.int32)
+    for _ in range(3):
+        logits, cache = api.decode_step(params, cfg, cache, tok)
+        assert logits.shape == (2, cfg.vocab)
+        assert not bool(jnp.isnan(logits).any())
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+
+
+@pytest.mark.parametrize("name", ["llama2-7b", "qwen3-32b", "internvl2-2b"])
+def test_decode_matches_teacher_forcing_exact_cache(name, rng):
+    """policy='none' decode must reproduce train-forward logits exactly
+    (same math, different code path) — validates the serving stack."""
+    cfg = SMOKES[name]
+    api = get_model(cfg)
+    params = api.init(jax.random.PRNGKey(1), cfg)
+    S = 70  # non-block-aligned on purpose
+    batch = _batch(cfg, rng, B=1, S=S, labels=False)
+    full_logits, _ = api.forward_train(params, cfg, batch)
+
+    pack_none = PackKVConfig(policy="none", residual=96)
+    # prefill with all but the last token, then decode it
+    pre = {k: (v[:, :-1] if k == "tokens" else v) for k, v in batch.items()}
+    lg, cache = api.prefill(params, cfg, pack_none, 128, pre)
+    np.testing.assert_allclose(
+        np.asarray(lg), np.asarray(full_logits[:, -2]), rtol=2e-2, atol=2e-2
+    )
+    tok = batch["tokens"][:, -1:]
+    lg2, cache = api.decode_step(params, cfg, cache, tok)
+    np.testing.assert_allclose(
+        np.asarray(lg2), np.asarray(full_logits[:, -1]), rtol=2e-2, atol=2e-2
+    )
+
+
+def test_cell_grid_counts():
+    """DESIGN.md §4: 31 runnable cells, 9 skips, with recorded reasons."""
+    assigned = {k: v for k, v in ARCHS.items() if k != "llama2-7b"}
+    run, skip = cells(assigned)
+    assert len(run) + len(skip) == 40
+    assert len(run) == 31
+    skip_names = {(a, s) for a, s, _ in skip}
+    assert ("hubert-xlarge", "decode_32k") in skip_names
+    assert ("hubert-xlarge", "long_500k") in skip_names
+    assert ("qwen3-32b", "long_500k") in skip_names
+    assert ("rwkv6-1.6b", "long_500k") not in skip_names
+    assert ("recurrentgemma-9b", "long_500k") not in skip_names
+
+
+def test_param_counts_plausible():
+    """Full configs should land near their nameplate sizes."""
+    approx = {
+        "minitron-4b": (4.0e9, 0.4),
+        "smollm-135m": (135e6, 0.3),
+        "qwen3-32b": (32e9, 0.25),
+        "llama2-7b": (6.7e9, 0.15),
+    }
+    for name, (want, tol) in approx.items():
+        got = ARCHS[name].param_count()
+        assert abs(got - want) / want < tol, (name, got)
+    # MoE: active far below total (the assignment's 48L/64e/1408 moonshot
+    # config computes to ~29B total — the assignment dims are authoritative,
+    # not the marketing name)
+    m = ARCHS["moonshot-v1-16b-a3b"]
+    assert m.active_param_count() < 0.25 * m.param_count()

@@ -1,0 +1,79 @@
+"""Invariant 1: quantization error bound |x - deq(q(x))| <= scale/2."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.quantization import (
+    QuantConfig,
+    dequantize,
+    quantize,
+)
+from repro.core.kivi import kivi_cr, kivi_cr_from_rel_scale
+
+
+@pytest.mark.parametrize("rel", [0.01, 0.05, 0.1, 0.2, 0.5])
+@pytest.mark.parametrize("gran", ["token", "channel"])
+def test_error_bound(rng, rel, gran):
+    x = jnp.asarray(rng.normal(size=(2, 2, 128, 64)).astype(np.float32))
+    cfg = QuantConfig(rel_scale=rel, granularity=gran)
+    q, s, z = quantize(x, cfg)
+    deq = dequantize(q, s, z, cfg)
+    # elementwise error <= scale/2 (+fp eps); scale varies per unit
+    if gran == "token":
+        bound = s / 2
+        err = jnp.abs(deq - x)
+        assert bool(jnp.all(err <= bound * 1.001 + 1e-6))
+    else:
+        err = float(jnp.max(jnp.abs(deq - x)))
+        assert err <= float(jnp.max(s)) / 2 * 1.001 + 1e-6
+
+
+@given(
+    rel=st.floats(0.02, 0.5),
+    seed=st.integers(0, 2**16),
+)
+@settings(max_examples=25, deadline=None)
+def test_error_bound_property(rel, seed):
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.normal(0, r.uniform(0.1, 10), size=(4, 64)).astype(np.float32))
+    cfg = QuantConfig(rel_scale=rel)
+    q, s, z = quantize(x, cfg)
+    deq = dequantize(q, s, z, cfg)
+    assert bool(jnp.all(jnp.abs(deq - x) <= s / 2 * 1.001 + 1e-5))
+
+
+def test_integer_range(rng):
+    x = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+    cfg = QuantConfig(rel_scale=0.1)
+    q, _, _ = quantize(x, cfg)
+    assert int(q.min()) >= 0 and int(q.max()) <= cfg.max_q
+
+
+def test_bits_mode(rng):
+    x = jnp.asarray(rng.normal(size=(8, 32)).astype(np.float32))
+    cfg = QuantConfig(bits=2)
+    q, s, z = quantize(x, cfg)
+    assert int(q.max()) <= 3
+    deq = dequantize(q, s, z, cfg)
+    assert bool(jnp.all(jnp.abs(deq - x) <= s / 2 * 1.001 + 1e-6))
+
+
+def test_constant_input_safe():
+    x = jnp.ones((4, 16))
+    cfg = QuantConfig(rel_scale=0.1)
+    q, s, z = quantize(x, cfg)
+    deq = dequantize(q, s, z, cfg)
+    assert bool(jnp.all(deq == x))
+
+
+def test_kivi_cr_paper_numbers():
+    """Paper §III-B2: 2-bit/64 -> 6.4x; 3-bit/64 -> 4.57x; 4-bit/64 -> 3.56x."""
+    assert abs(kivi_cr(2, 64) - 6.4) < 0.01
+    assert abs(kivi_cr(3, 64) - 4.57) < 0.01
+    assert abs(kivi_cr(4, 64) - 3.56) < 0.01
+
+
+def test_kivi_cr_from_rel_scale_monotone():
+    crs = [kivi_cr_from_rel_scale(r) for r in (0.02, 0.05, 0.1, 0.3)]
+    assert all(a <= b for a, b in zip(crs, crs[1:]))

@@ -1,0 +1,127 @@
+"""Compute-tier format: invariants 5, 6, 7 (append equiv, shift-bounded
+error, no silent padding) + calibration guarantees."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.tiered import (
+    TierSpec,
+    alloc_tiered,
+    append_block,
+    assign_channel_tiers,
+    chan_inverse_perm,
+    choose_tier_spec,
+    dequantize_tiered,
+    pack_tier,
+    pack_tiered,
+    pack_words,
+    required_channel_widths,
+    unpack_tier,
+    unpack_words,
+)
+
+
+@given(width=st.sampled_from([1, 2, 4, 8, 16]), seed=st.integers(0, 2**16))
+@settings(max_examples=30, deadline=None)
+def test_pack_words_roundtrip(width, seed):
+    r = np.random.default_rng(seed)
+    L = (32 // width) * r.integers(1, 5)
+    vals = jnp.asarray(r.integers(0, 2**width, size=(3, L)), jnp.int32)
+    w = pack_words(vals, width)
+    out = unpack_words(w, width, L)
+    assert (np.asarray(out) == np.asarray(vals)).all()
+
+
+def test_tier_roundtrip_exact_when_width_sufficient(rng):
+    q = jnp.asarray(rng.integers(0, 11, size=(2, 8, 64)), jnp.int32)  # 4 bits
+    buf = pack_tier(q, width=4)
+    out = unpack_tier(buf, 64)
+    assert (np.asarray(out) == np.asarray(q)).all()
+
+
+def test_tier_shift_bounded_error(rng):
+    """Invariant 6: error <= 2^shift with shift <= 3 (mid-rise halves it).
+
+    Data needing 7 bits in a 4-bit tier -> shift 3 drops the low 3 bits;
+    mid-rise reconstruction bounds |err| by 2^(shift-1) = 4. (Data beyond
+    width+MAX_SHIFT bits saturates instead — calibration with slack<=3
+    guarantees that case never occurs; see choose_tier_spec.)"""
+    q = jnp.asarray(rng.integers(0, 128, size=(2, 8, 64)), jnp.int32)  # 7 bits
+    buf = pack_tier(q, width=4)
+    out = unpack_tier(buf, 64)
+    err = np.abs(np.asarray(out) - np.asarray(q))
+    assert err.max() <= 2 ** 2  # 2^(shift-1)
+
+
+def test_choose_tier_spec_no_shift_on_calibration_data(rng):
+    q = jnp.asarray(rng.integers(0, 11, size=(4, 128, 64)), jnp.int32)
+    w = required_channel_widths(q)
+    spec = choose_tier_spec(w)
+    assert spec.head_dim == 128
+    perm = assign_channel_tiers(w, spec)
+    qp = jnp.take_along_axis(q, perm[..., None], axis=-2)
+    # per-tier widths must cover assigned channels' needs
+    off = 0
+    for width, count in zip(spec.widths, spec.counts):
+        wt = required_channel_widths(qp[:, off : off + count, :])
+        assert int(wt.max()) <= width
+        off += count
+
+
+def test_pack_tiered_dequant_roundtrip(rng):
+    B, H, D, L = 1, 2, 64, 128
+    q = jnp.asarray(rng.integers(0, 11, size=(B, H, D, L)), jnp.int32)
+    w = required_channel_widths(q)
+    spec = choose_tier_spec(w)
+    perm = assign_channel_tiers(w, spec)
+    scale = jnp.ones((B, H, L)) * 0.5
+    zero = jnp.zeros((B, H, L)) - 1.0
+    tc = pack_tiered(q, perm, scale, zero, spec)
+    deq = dequantize_tiered(tc)
+    want = np.asarray(q, np.float32) * 0.5 - 1.0
+    np.testing.assert_allclose(np.asarray(deq), want, atol=1e-6)
+
+
+def test_append_block_equals_concat(rng):
+    """Invariant 5: decode(append(A,B)) == concat(decode(A), decode(B))."""
+    B, H, D, Lb = 1, 1, 32, 64
+    spec = TierSpec(widths=(4,), counts=(32,))
+    cache = alloc_tiered(B, H, 2 * Lb, spec)
+    perm = cache.chan_perm
+    qs = []
+    for i in range(2):
+        q = jnp.asarray(rng.integers(0, 11, size=(B, H, D, Lb)), jnp.int32)
+        qs.append(q)
+        blk = pack_tiered(q, perm, jnp.ones((B, H, Lb)), jnp.zeros((B, H, Lb)), spec)
+        cache = append_block(cache, blk, jnp.int32(i * Lb))
+    out = dequantize_tiered(cache)
+    want = np.concatenate([np.asarray(q, np.float32) for q in qs], axis=-1)
+    np.testing.assert_allclose(np.asarray(out), want, atol=1e-6)
+
+
+def test_no_silent_padding(rng):
+    """Invariant 7: buffer sizes match the analytic layout exactly."""
+    spec = TierSpec(widths=(2, 4, 8), counts=(32, 64, 32))
+    cache = alloc_tiered(2, 4, 256, spec)
+    for t, (w, c) in zip(cache.tiers, zip(spec.widths, spec.counts)):
+        assert t.payload.shape == (2, 4, c, 256 * w // 32)
+        assert t.mins.shape == (2, 4, c, 256 // 8)
+        assert t.shifts.shape == (2, 4, c, 256 // 8 // 4)
+
+
+def test_chan_inverse_perm(rng):
+    perm = jnp.asarray(np.stack([rng.permutation(16) for _ in range(3)]))
+    inv = chan_inverse_perm(perm)
+    eye = jnp.take_along_axis(perm, inv, axis=-1)
+    assert (np.asarray(eye) == np.arange(16)).all()
+
+
+def test_tier_spec_validation():
+    with pytest.raises(AssertionError):
+        TierSpec(widths=(3,), counts=(8,))  # 3 doesn't divide 32
+    with pytest.raises(AssertionError):
+        TierSpec(widths=(4, 2), counts=(8, 8))  # not ascending
