@@ -10,6 +10,7 @@ import sys
 import time
 
 from . import (
+    bench_continuous,
     bench_grad_compress,
     bench_k_compression,
     bench_pack_size,
@@ -29,6 +30,7 @@ BENCHES = {
     "fig1516_throughput": bench_throughput.main,
     "fig17_scaling": bench_scaling.main,
     "beyond_grad_compress": bench_grad_compress.main,
+    "beyond_continuous_batching": bench_continuous.main,
 }
 
 

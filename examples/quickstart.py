@@ -42,7 +42,7 @@ def main():
     # 2. prefill: quantize + V-median repack + bit-pack, block by block
     cache = alloc_layer_cache(cfg, B, H_kv, D, capacity)
     cache = prefill_cache(cache, k, v)
-    print(f"compressed {int(cache.n_comp)} tokens; {int(cache.n_resid)} in the "
+    print(f"compressed {int(cache.n_comp[0])} tokens; {int(cache.n_resid[0])} in the "
           f"fp16 residual buffer")
 
     # 3. seamless appending during decode

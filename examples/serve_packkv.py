@@ -1,9 +1,10 @@
 """Serve a small model with batched requests through the PackKV engine.
 
 Builds two engines over the same weights — uncompressed and PackKV —
-serves the same wave of requests through both, and reports the agreement
-rate and cache memory. This is the paper's deployment story end-to-end:
-calibration -> compile -> wave-batched serving with compressed decode.
+serves the same requests through both via the continuous slot scheduler,
+and reports the agreement rate and scheduler stats. This is the paper's
+deployment story end-to-end: calibration -> compile -> slot-scheduled
+serving with compressed decode (see docs/serving.md).
 
 Run:  PYTHONPATH=src python examples/serve_packkv.py
 """
@@ -17,7 +18,7 @@ from repro.configs import get_arch
 from repro.core.cache import PackKVConfig
 from repro.core.tiered import tiered_bits_per_value
 from repro.models import get_model
-from repro.serving import Engine, EngineConfig, Request, WaveServer
+from repro.serving import Engine, EngineConfig, Request, SlotServer
 
 
 def main():
@@ -44,13 +45,14 @@ def main():
 
     outs = {}
     for name, eng in (("uncompressed", e_none), ("packkv", e_pack)):
-        srv = WaveServer(eng)
+        srv = SlotServer(eng)
         for r in reqs:
             srv.submit(dataclasses.replace(r))
-        while srv.queue:
-            srv.run_wave()
+        srv.run()
         outs[name] = {r.rid: r.output for r in srv.done.values()}
-        print(f"{name}: served {len(srv.done)} requests")
+        print(f"{name}: served {len(srv.done)} requests "
+              f"(occupancy {srv.stats.occupancy:.2f}, "
+              f"{srv.stats.slot_reuses} slot reuses)")
 
     agree = np.mean([
         (outs["uncompressed"][rid] == outs["packkv"][rid]).mean()

@@ -7,6 +7,12 @@ oldest block is quantized, repacked (in-graph V-median), tier-packed and
 jit-compatible (lax.cond / dynamic_update_slice), so the same code path runs
 under pjit on the production mesh.
 
+Sequence state is **per row**: ``n_comp``/``n_resid`` are ``[B]`` i32
+vectors, every append/flush runs at per-row offsets (vmapped
+``dynamic_update_slice``), and rows flush independently — the substrate for
+continuous (per-slot) batching in ``serving.engine``. ``reset_slot`` and
+``insert_prefill`` recycle one row while the others keep decoding.
+
 Three policies share one pytree layout so serve_step signatures are uniform:
   * ``none``   — raw bf16 cache (the cuBLAS-equivalent baseline).
   * ``kivi``   — integer quantization only (single tier, no adaptive widths).
@@ -28,6 +34,7 @@ from .tiered import (
     TieredCache,
     alloc_tiered,
     append_block,
+    append_block_rows,
     assign_channel_tiers,
     pack_tiered,
     required_channel_widths,
@@ -89,9 +96,13 @@ class LayerKVCache:
     raw_v: Optional[Array]
     resid_k: Array  # bf16 [B, Hkv, R, D]
     resid_v: Array
-    n_comp: Array  # i32 [] tokens in compressed/raw region
-    n_resid: Array  # i32 [] tokens in residual buffer
+    n_comp: Array  # i32 [B] per-row tokens in compressed/raw region
+    n_resid: Array  # i32 [B] per-row tokens in residual buffer
     cfg: PackKVConfig
+
+    @property
+    def capacity(self) -> int:
+        return self.raw_k.shape[-2] if self.cfg.policy == "none" else self.k.capacity
 
 
 def alloc_layer_cache(
@@ -105,7 +116,7 @@ def alloc_layer_cache(
     """Preallocate a cache with static ``capacity`` (compressed region)."""
     R = cfg.residual
     resid = jnp.zeros((batch, h_kv, R, head_dim), dtype)
-    zero_i = jnp.zeros((), jnp.int32)
+    zero_i = jnp.zeros((batch,), jnp.int32)
     if cfg.policy == "none":
         raw = jnp.zeros((batch, h_kv, capacity, head_dim), dtype)
         return LayerKVCache(
@@ -226,6 +237,28 @@ def calibrate_specs(k: Array, v: Array, cfg: PackKVConfig, slack: int = 0):
 
 
 # ---------------------------------------------------------------------------
+# Per-row primitives
+# ---------------------------------------------------------------------------
+
+
+def row_update_tokens(buf: Array, new: Array, starts: Array) -> Array:
+    """Per-row write along the token axis (-2).
+
+    buf: [B, ..., N, D]; new: [B, ..., n, D]; starts: i32 [B].
+    """
+    upd = lambda b, x, s: jax.lax.dynamic_update_slice_in_dim(b, x, s, axis=-2)
+    return jax.vmap(upd)(buf, new.astype(buf.dtype), starts)
+
+
+def select_rows(mask: Array, new, old):
+    """Pytree where: row b takes ``new`` where mask[b] (leaves lead with B)."""
+    def sel(a, b):
+        m = mask.reshape(mask.shape + (1,) * (a.ndim - 1))
+        return jnp.where(m, a, b)
+    return jax.tree_util.tree_map(sel, new, old)
+
+
+# ---------------------------------------------------------------------------
 # Cache update ops
 # ---------------------------------------------------------------------------
 
@@ -271,19 +304,21 @@ def prefill_cache(cache: LayerKVCache, k: Array, v: Array) -> LayerKVCache:
         new,
         resid_k=resid_k,
         resid_v=resid_v,
-        n_comp=jnp.int32(Lb),
-        n_resid=jnp.int32(rem),
+        n_comp=jnp.full((B,), Lb, jnp.int32),
+        n_resid=jnp.full((B,), rem, jnp.int32),
     )
 
 
 def append_token(
     cache: LayerKVCache, k_new: Array, v_new: Array, ring: bool = False
 ) -> LayerKVCache:
-    """Decode-step append. k_new/v_new: [B,H,1,D].
+    """Decode-step append at per-row offsets. k_new/v_new: [B,H,1,D].
 
-    Writes into the residual; when the residual is full, compresses the
-    oldest block and appends it to the compressed region (lax.cond — the
-    amortized O(1) compression cost of paper §III-D).
+    Writes into the residual at each row's own ``n_resid``; rows whose
+    residual is full compress their oldest block and append it to the
+    compressed region at their own ``n_comp`` (lax.cond over "any row needs
+    a flush" — the amortized O(1) compression cost of paper §III-D; the
+    per-row write is masked so rows flush independently).
 
     ring=True: sliding-window mode (recurrentgemma local attention) — the
     compressed region is a circular block buffer of ``capacity`` tokens;
@@ -293,50 +328,120 @@ def append_token(
     """
     cfg = cache.cfg
     R = cfg.residual
-    capacity = (
-        cache.raw_k.shape[-2] if cfg.policy == "none" else cache.k.capacity
-    )
+    capacity = cache.capacity
 
     def write(c: LayerKVCache) -> LayerKVCache:
-        rk = jax.lax.dynamic_update_slice_in_dim(
-            c.resid_k, k_new.astype(c.resid_k.dtype), c.n_resid, axis=-2
-        )
-        rv = jax.lax.dynamic_update_slice_in_dim(
-            c.resid_v, v_new.astype(c.resid_v.dtype), c.n_resid, axis=-2
-        )
+        rk = row_update_tokens(c.resid_k, k_new, c.n_resid)
+        rv = row_update_tokens(c.resid_v, v_new, c.n_resid)
         return dataclasses.replace(c, resid_k=rk, resid_v=rv, n_resid=c.n_resid + 1)
 
     def flush(c: LayerKVCache) -> LayerKVCache:
+        need = c.n_resid >= R  # [B] rows whose residual is full
         blk_k = c.resid_k[..., : cfg.block, :]
         blk_v = c.resid_v[..., : cfg.block, :]
         off = (c.n_comp % capacity) if ring else c.n_comp
         if cfg.policy == "none":
-            raw_k = jax.lax.dynamic_update_slice_in_dim(
-                c.raw_k, blk_k, off, axis=-2
+            raw_k = row_update_tokens(c.raw_k, blk_k, off)
+            raw_v = row_update_tokens(c.raw_v, blk_v, off)
+            c = dataclasses.replace(
+                c,
+                raw_k=select_rows(need, raw_k, c.raw_k),
+                raw_v=select_rows(need, raw_v, c.raw_v),
             )
-            raw_v = jax.lax.dynamic_update_slice_in_dim(
-                c.raw_v, blk_v, off, axis=-2
-            )
-            c = dataclasses.replace(c, raw_k=raw_k, raw_v=raw_v)
         else:
             kc, vc = compress_block(
                 blk_k, blk_v, cfg, c.k.chan_perm, c.v.chan_perm
             )
             c = dataclasses.replace(
                 c,
-                k=append_block(c.k, kc, off),
-                v=append_block(c.v, vc, off),
+                k=select_rows(need, append_block_rows(c.k, kc, off), c.k),
+                v=select_rows(need, append_block_rows(c.v, vc, off), c.v),
             )
-        # shift residual left by one block
+        # shift flushed rows' residual left by one block
         rk = jnp.roll(c.resid_k, -cfg.block, axis=-2)
         rv = jnp.roll(c.resid_v, -cfg.block, axis=-2)
+        step = jnp.where(need, cfg.block, 0).astype(jnp.int32)
         return dataclasses.replace(
             c,
-            resid_k=rk,
-            resid_v=rv,
-            n_comp=c.n_comp + cfg.block,
-            n_resid=c.n_resid - cfg.block,
+            resid_k=select_rows(need, rk, c.resid_k),
+            resid_v=select_rows(need, rv, c.resid_v),
+            n_comp=c.n_comp + step,
+            n_resid=c.n_resid - step,
         )
 
-    cache = jax.lax.cond(cache.n_resid >= R, flush, lambda c: c, cache)
+    cache = jax.lax.cond(jnp.any(cache.n_resid >= R), flush, lambda c: c, cache)
     return write(cache)
+
+
+# ---------------------------------------------------------------------------
+# Per-slot lifecycle (continuous batching)
+# ---------------------------------------------------------------------------
+
+
+def reset_slot(cache: LayerKVCache, slot) -> LayerKVCache:
+    """Free row ``slot``: zero its counters so every cached token is masked.
+
+    Buffer contents are left in place — they are dead bytes (all reads mask
+    with the counters) and the next ``insert_prefill`` overwrites the whole
+    row. Works on a single-layer cache ([B] counters) and on a stacked
+    cache pytree ([n_layers, B] counters — the slot is always the last
+    counter axis). ``slot`` may be traced.
+    """
+    return dataclasses.replace(
+        cache,
+        n_comp=cache.n_comp.at[..., slot].set(0),
+        n_resid=cache.n_resid.at[..., slot].set(0),
+    )
+
+
+def mask_free_slots(cache, active: Array):
+    """Zero the counters of rows where ``active`` is False.
+
+    Free rows ride along in the batched decode step, so each step appends
+    one junk token into them; zeroing their counters right after keeps the
+    "free slot == zero counters" invariant true at rest, bounds the junk to
+    one residual position, and prevents dead rows from ever triggering the
+    flush branch. ``active``: bool [B]; counters may be [B] or stacked
+    [n_layers, B] (broadcasts).
+    """
+    act = jnp.asarray(active).astype(cache.n_comp.dtype)
+    return dataclasses.replace(
+        cache, n_comp=cache.n_comp * act, n_resid=cache.n_resid * act
+    )
+
+
+def insert_row(cache, slot, row_cache):
+    """Scatter batch-row 0 of ``row_cache`` into row ``slot`` of ``cache``.
+
+    Both are LayerKVCache pytrees of identical layout (stacked or flat);
+    ``row_cache`` has batch size 1. Every leaf leads with
+    [(layers,)? B, ...], so the write is a pure tree_map. ``slot`` may be
+    traced (jit-stable single-slot admission).
+    """
+    lead = cache.n_comp.ndim - 1  # 0 flat, 1 stacked
+
+    def put(dst, src):
+        if lead == 0:
+            return dst.at[slot].set(src[0].astype(dst.dtype))
+        return dst.at[:, slot].set(src[:, 0].astype(dst.dtype))
+
+    return jax.tree_util.tree_map(put, cache, row_cache)
+
+
+def insert_prefill(cache: LayerKVCache, slot, k: Array, v: Array) -> LayerKVCache:
+    """Admit one sequence into row ``slot``: compress its prefill K/V
+    ([H, L, D] or [1, H, L, D], static L) and overwrite the row.
+
+    The remaining rows are untouched, so one slot can be recycled while the
+    others keep decoding. Calibration (channel->tier permutation) runs on
+    this sequence's own prefill, exactly as a batch-size-1 ``prefill_cache``
+    would — per-row outputs stay bit-identical to an independent B=1 run.
+    """
+    if k.ndim == 3:
+        k, v = k[None], v[None]
+    cfg = cache.cfg
+    h_kv, _, head_dim = k.shape[-3], k.shape[-2], k.shape[-1]
+    sub = alloc_layer_cache(cfg, 1, h_kv, head_dim, cache.capacity,
+                            dtype=cache.resid_k.dtype)
+    sub = prefill_cache(sub, k, v)
+    return insert_row(cache, slot, sub)

@@ -399,3 +399,15 @@ def append_block(cache: TieredCache, block: TieredCache, offset: Array) -> Tiere
         zero=zero,
         spec=spec,
     )
+
+
+def append_block_rows(
+    cache: TieredCache, block: TieredCache, offsets: Array
+) -> TieredCache:
+    """Per-row ``append_block``: row b's packed block lands at offsets[b].
+
+    cache/block leaves lead with [B, ...]; offsets: i32 [B] (block-aligned,
+    traced). The vmap keeps every shape static while each row writes at its
+    own token offset — the substrate for continuous per-slot batching.
+    """
+    return jax.vmap(append_block)(cache, block, offsets)

@@ -118,7 +118,6 @@ def compressed_psum_mean(grads, cfg: GradCompressConfig, axis: str = "data"):
     quantized payload + per-row metadata; replicas then dequantize-and-mean
     locally. Error feedback is handled by the caller (roundtrip residual).
     """
-    n = jax.lax.axis_size(axis)
 
     def leaf(g):
         q, s, z, _ = compress_leaf(g, cfg, None)

@@ -26,14 +26,23 @@ Array = jax.Array
 DEFAULT_TILE_L = 256
 
 
-def _kernel(payload_ref, mins_ref, shifts_ref, q_ref, out_ref, *, width, pack):
+def _kernel(*refs, width, pack, masked, tile_l):
+    if masked:
+        payload_ref, mins_ref, shifts_ref, q_ref, n_ref, out_ref = refs
+    else:
+        payload_ref, mins_ref, shifts_ref, q_ref, out_ref = refs
+        n_ref = None
     vals = decode_tier_tile(
         payload_ref[0], mins_ref[0], shifts_ref[0], width, pack
     )  # [C, TL] f32
     q = q_ref[0]  # [G, C] f32
-    out_ref[0] = jax.lax.dot_general(
+    out = jax.lax.dot_general(
         q, vals, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
     )
+    if n_ref is not None:
+        gidx = pl.program_id(1) * tile_l + jnp.arange(tile_l)
+        out = jnp.where((gidx < n_ref[0, 0])[None, :], out, 0.0)
+    out_ref[0] = out
 
 
 def kpack_tier_scores(
@@ -44,6 +53,7 @@ def kpack_tier_scores(
     *,
     width: int,
     pack_size: int,
+    n_valid: Array | None = None,
     tile_l: int = DEFAULT_TILE_L,
     interpret: bool = True,
 ) -> Array:
@@ -51,6 +61,8 @@ def kpack_tier_scores(
 
     payload: u32 [BH, C, L*width/32]   mins: i8 [BH, C, L/pack]
     shifts:  u8  [BH, C, ceil(L/pack/4)]  q: f32 [BH, G, C] (tier channel slice)
+    n_valid: optional i32 [BH] per-row valid length — score columns past it
+    are zeroed in-kernel (per-slot batching: dead rows carry garbage packs).
     Returns si f32 [BH, G, L].
     """
     BH, C, Wl = payload.shape
@@ -61,18 +73,25 @@ def kpack_tier_scores(
     tWl = tile_l * width // 32
     tP = tile_l // pack_size
 
+    in_specs = [
+        pl.BlockSpec((1, C, tWl), lambda b, l: (b, 0, l)),
+        pl.BlockSpec((1, C, tP), lambda b, l: (b, 0, l)),
+        pl.BlockSpec((1, C, tP // 4), lambda b, l: (b, 0, l)),
+        pl.BlockSpec((1, G, C), lambda b, l: (b, 0, 0)),
+    ]
+    args = [payload, mins, shifts, q]
+    if n_valid is not None:
+        in_specs.append(pl.BlockSpec((1, 1), lambda b, l: (b, 0)))
+        args.append(n_valid.astype(jnp.int32).reshape(BH, 1))
+
     grid = (BH, nL)
     return pl.pallas_call(
-        functools.partial(_kernel, width=width, pack=pack_size),
+        functools.partial(_kernel, width=width, pack=pack_size,
+                          masked=n_valid is not None, tile_l=tile_l),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, C, tWl), lambda b, l: (b, 0, l)),
-            pl.BlockSpec((1, C, tP), lambda b, l: (b, 0, l)),
-            pl.BlockSpec((1, C, tP // 4), lambda b, l: (b, 0, l)),
-            pl.BlockSpec((1, G, C), lambda b, l: (b, 0, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, G, tile_l), lambda b, l: (b, 0, l)),
         out_shape=jax.ShapeDtypeStruct((BH, G, L), jnp.float32),
         interpret=interpret,
         **tpu_params(("parallel", "parallel"), interpret),
-    )(payload, mins, shifts, q)
+    )(*args)

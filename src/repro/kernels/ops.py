@@ -24,20 +24,39 @@ Array = jax.Array
 NEG_INF = ref.NEG_INF
 
 
+def _rows_to_bh(n: Array | None, B: int, h_kv: int) -> Array | None:
+    """Broadcast scalar/[B] valid counts to the kernels' flat [BH] layout."""
+    if n is None:
+        return None
+    n = jnp.asarray(n, jnp.int32)
+    if n.ndim == 0:
+        n = n[None]
+    return jnp.broadcast_to(n[:, None], (B, h_kv)).reshape(B * h_kv)
+
+
 def packed_qk_scores(
     q: Array,
     kc: TieredCache,
     sm_scale: float = 1.0,
     *,
+    n_valid: Array | None = None,
     backend: str = "xla",
     tile_l: int = 256,
     interpret: bool = True,
 ) -> Array:
-    """q·Kᵀ over the compressed K cache. q: [B,H,D] -> scores [B,H,L]."""
-    if backend == "xla":
-        return ref.kpack_scores_ref(q, kc, sm_scale)
+    """q·Kᵀ over the compressed K cache. q: [B,H,D] -> scores [B,H,L].
+
+    n_valid (scalar or per-row [B]): zero out scores of positions >= the
+    row's valid length (callers still NEG_INF-mask before softmax; the
+    zeroing keeps dead-slot garbage from propagating).
+    """
     B, H, D = q.shape
     h_kv = kc.scale.shape[-2]
+    if backend == "xla":
+        s = ref.kpack_scores_ref(q, kc, sm_scale)
+        if n_valid is not None:
+            s = jnp.where(ref.valid_mask(n_valid, kc.capacity, lead=2), s, 0.0)
+        return s
     G = H // h_kv
     BH = B * h_kv
     L = kc.capacity
@@ -45,16 +64,23 @@ def packed_qk_scores(
     qp = jnp.take_along_axis(qg, kc.chan_perm[:, :, None, :], axis=-1)
     qf = qp.reshape(BH, G, D)
     flat = lambda a: a.reshape(BH, *a.shape[2:])
+    nv = _rows_to_bh(n_valid, B, h_kv)
     si = jnp.zeros((BH, G, L), jnp.float32)
     off = 0
     for t, c in zip(kc.tiers, kc.spec.counts):
         si = si + kpack_tier_scores(
             flat(t.payload), flat(t.mins), flat(t.shifts), qf[..., off : off + c],
-            width=t.width, pack_size=t.pack_size, tile_l=tile_l, interpret=interpret,
+            n_valid=nv, width=t.width, pack_size=t.pack_size, tile_l=tile_l,
+            interpret=interpret,
         )
         off += c
     qsum = jnp.sum(qf, axis=-1, keepdims=True)
-    scores = si * flat(kc.scale)[:, None, :] + qsum * flat(kc.zero)[:, None, :]
+    # si columns past each row's n_valid are already zeroed IN-KERNEL; only
+    # the rank-1 zero-term correction still needs the outer mask
+    zc = flat(kc.zero)[:, None, :]
+    if nv is not None:
+        zc = jnp.where(jnp.arange(L)[None, None, :] < nv[:, None, None], zc, 0.0)
+    scores = si * flat(kc.scale)[:, None, :] + qsum * zc
     return (scores * sm_scale).reshape(B, H, L)
 
 
@@ -62,28 +88,41 @@ def packed_weighted_v(
     w: Array,
     vc: TieredCache,
     *,
+    n_valid: Array | None = None,
     backend: str = "xla",
     tile_l: int = 256,
     interpret: bool = True,
 ) -> Array:
-    """w·V over the compressed V cache. w: [B,H,L] -> out [B,H,D]."""
-    if backend == "xla":
-        return ref.vpack_out_ref(w, vc)
+    """w·V over the compressed V cache. w: [B,H,L] -> out [B,H,D].
+
+    n_valid (scalar or per-row [B]): positions >= the row's valid length
+    contribute nothing — masked in-kernel on the pallas path, on the
+    weights for the xla path (slot-table rows' tails hold recycled garbage).
+    """
     B, H, L = w.shape
     h_kv = vc.scale.shape[-2]
+    if backend == "xla":
+        if n_valid is not None:
+            w = jnp.where(ref.valid_mask(n_valid, L, lead=2), w, 0.0)
+        return ref.vpack_out_ref(w, vc)
     G = H // h_kv
     BH = B * h_kv
     flat = lambda a: a.reshape(BH, *a.shape[2:])
+    nv = _rows_to_bh(n_valid, B, h_kv)
     wf = w.astype(jnp.float32).reshape(BH, G, L)
     ws = wf * flat(vc.scale)[:, None, :]
     parts = [
         vpack_tier_out(
             flat(t.payload), flat(t.mins), flat(t.shifts), ws,
-            width=t.width, pack_size=t.pack_size, tile_l=tile_l, interpret=interpret,
+            n_valid=nv, width=t.width, pack_size=t.pack_size, tile_l=tile_l,
+            interpret=interpret,
         )
         for t in vc.tiers
     ]
     out = jnp.concatenate(parts, axis=-1)  # [BH, G, Dv] tier order
+    # zero-term correction runs outside the kernel -> mask its weights here
+    if nv is not None:
+        wf = jnp.where(jnp.arange(L)[None, None, :] < nv[:, None, None], wf, 0.0)
     zterm = jnp.einsum("bgl,bl->bg", wf, flat(vc.zero))[..., None]
     out = out + zterm
     out = out.reshape(B, h_kv, G, -1)
@@ -93,13 +132,16 @@ def packed_weighted_v(
 
 
 def _residual_partials(q, resid_k, resid_v, n_resid, sm_scale):
-    """LSE partials (o_unnorm, m, l) of attention over the residual buffer."""
+    """LSE partials (o_unnorm, m, l) of attention over the residual buffer.
+
+    n_resid: scalar or per-row [B] valid-token count.
+    """
     B, H, D = q.shape
     h_kv = resid_k.shape[1]
     R = resid_k.shape[2]
     qg = q.astype(jnp.float32).reshape(B, h_kv, H // h_kv, D)
     s = jnp.einsum("bhgd,bhrd->bhgr", qg, resid_k.astype(jnp.float32)) * sm_scale
-    mask = (jnp.arange(R) < n_resid)[None, None, None, :]
+    mask = ref.valid_mask(n_resid, R, lead=3)
     s = jnp.where(mask, s, NEG_INF)
     m = jnp.max(s, axis=-1)
     p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)

@@ -123,9 +123,10 @@ def fused_packed_attention(
 ):
     """Compressed-region attention partials in ONE kernel launch.
 
-    q: f32 [B, H, D] in ORIGINAL channel order. Returns
-    (o_unnorm [B,H,Dv] in original channel order, m [B,H], l [B,H]) —
-    log-sum-exp partials for merging with the residual buffer.
+    q: f32 [B, H, D] in ORIGINAL channel order. n_comp: scalar or per-row
+    [B] valid lengths (continuous batching — each grid row masks to its own
+    count). Returns (o_unnorm [B,H,Dv] in original channel order, m [B,H],
+    l [B,H]) — log-sum-exp partials for merging with the residual buffer.
     """
     from ..core.tiered import chan_inverse_perm
 
@@ -153,7 +154,13 @@ def fused_packed_attention(
     kscale, kzero = flat(kc.scale), flat(kc.zero)
     vscale, vzero = flat(vc.scale), flat(vc.zero)
     qf = qp.reshape(BH, G, D)
-    n_arr = jnp.full((1, 1), 0, jnp.int32) + n_comp.astype(jnp.int32)
+    # per-(batch,kv-head) valid length: [B] rows broadcast across heads
+    n_arr = jnp.asarray(n_comp, jnp.int32)
+    if n_arr.ndim == 0:
+        n_arr = n_arr[None, None]
+    else:
+        n_arr = n_arr[:, None]
+    n_arr = jnp.broadcast_to(n_arr, (B, h_kv)).reshape(BH, 1)
 
     k_widths = tuple(t.width for t in kc.tiers)
     v_widths = tuple(t.width for t in vc.tiers)
@@ -180,7 +187,7 @@ def fused_packed_attention(
         + [scale_spec, scale_spec]
         + [
             pl.BlockSpec((1, G, D), lambda b, l: (b, 0, 0)),
-            pl.BlockSpec((1, 1), lambda b, l: (0, 0)),
+            pl.BlockSpec((1, 1), lambda b, l: (b, 0)),
         ]
     )
     out_specs = [

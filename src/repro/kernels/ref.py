@@ -31,6 +31,21 @@ Array = jax.Array
 NEG_INF = -1e30
 
 
+def valid_mask(n: Array, length: int, lead: int) -> Array:
+    """``arange(length) < n`` with ``lead`` broadcast axes before the length.
+
+    ``n`` is a valid-token count: scalar (uniform wave) or [B] (per-row
+    slot state). Returns [1]*lead + [length] for a scalar, or
+    [B] + [1]*(lead-1) + [length] for a vector — broadcastable against
+    [B, ..., length] score tensors either way.
+    """
+    n = jnp.asarray(n)
+    ar = jnp.arange(length)
+    if n.ndim == 0:
+        return (ar < n).reshape((1,) * lead + (length,))
+    return ar.reshape((1,) * lead + (length,)) < n.reshape((-1,) + (1,) * lead)
+
+
 def _grouped_q(q: Array, h_kv: int) -> Array:
     """[B, H, D] -> [B, H_kv, G, D] (GQA grouping)."""
     B, H, D = q.shape
@@ -97,6 +112,7 @@ def packed_decode_attention_ref(
     """Full decode attention: softmax over [compressed | residual] regions.
 
     q: [B, H, D]; resid_k/v: [B, H_kv, R, D] full precision.
+    n_comp/n_resid: scalar or per-row [B] valid-token counts.
     Returns attention output [B, H, D].
     """
     B, H, D = q.shape
@@ -105,14 +121,14 @@ def packed_decode_attention_ref(
     R = resid_k.shape[2]
 
     s_comp = kpack_scores_ref(q, kc, sm_scale)  # [B, H, L]
-    mask_c = jnp.arange(L)[None, None, :] < n_comp
+    mask_c = valid_mask(n_comp, L, lead=2)
     s_comp = jnp.where(mask_c, s_comp, NEG_INF)
 
     qg = _grouped_q(q.astype(jnp.float32), h_kv)
     s_res = jnp.einsum(
         "bhgd,bhrd->bhgr", qg, resid_k.astype(jnp.float32)
     ).reshape(B, H, R) * sm_scale
-    mask_r = jnp.arange(R)[None, None, :] < n_resid
+    mask_r = valid_mask(n_resid, R, lead=2)
     s_res = jnp.where(mask_r, s_res, NEG_INF)
 
     m = jnp.maximum(jnp.max(s_comp, -1, keepdims=True), jnp.max(s_res, -1, keepdims=True))
@@ -141,7 +157,7 @@ def dense_decode_attention_ref(
 ) -> Array:
     """Uncompressed-cache decode attention (the cuBLAS-equivalent baseline).
 
-    raw_k/v: [B, H_kv, L, D] bf16.
+    raw_k/v: [B, H_kv, L, D] bf16. n_comp/n_resid: scalar or per-row [B].
     """
     B, H, D = q.shape
     h_kv = raw_k.shape[1]
@@ -149,8 +165,8 @@ def dense_decode_attention_ref(
     qg = _grouped_q(q.astype(jnp.float32), h_kv)
     s_c = jnp.einsum("bhgd,bhld->bhgl", qg, raw_k.astype(jnp.float32)) * sm_scale
     s_r = jnp.einsum("bhgd,bhrd->bhgr", qg, resid_k.astype(jnp.float32)) * sm_scale
-    mask_c = (jnp.arange(L) < n_comp)[None, None, None, :]
-    mask_r = (jnp.arange(R) < n_resid)[None, None, None, :]
+    mask_c = valid_mask(n_comp, L, lead=3)
+    mask_r = valid_mask(n_resid, R, lead=3)
     s_c = jnp.where(mask_c, s_c, NEG_INF)
     s_r = jnp.where(mask_r, s_r, NEG_INF)
     m = jnp.maximum(s_c.max(-1, keepdims=True), s_r.max(-1, keepdims=True))

@@ -35,13 +35,16 @@ Array = jax.Array
 
 def _local_cache_partials(q, kc: TieredCache, vc: TieredCache, n_comp,
                           sm_scale: float, axis: str):
-    """Fused attention partials over THIS shard's context slice."""
+    """Fused attention partials over THIS shard's context slice.
+
+    n_comp: scalar or per-row [B] global valid length.
+    """
     idx = jax.lax.axis_index(axis)
     L_loc = kc.capacity  # local capacity inside shard_map
     start = idx * L_loc
     n_local = jnp.clip(n_comp - start, 0, L_loc)
     s = ref.kpack_scores_ref(q, kc, sm_scale)  # [B, H, L_loc]
-    mask = jnp.arange(L_loc)[None, None, :] < n_local
+    mask = ref.valid_mask(n_local, L_loc, lead=2)
     s = jnp.where(mask, s, ref.NEG_INF)
     m = jnp.max(s, axis=-1)
     p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
@@ -62,7 +65,7 @@ def _local_dense_partials(q, raw_k, raw_v, n_comp, sm_scale: float, axis: str):
     qg = q.astype(jnp.float32).reshape(B, h_kv, H // h_kv, D)
     s = jnp.einsum("bhgd,bhld->bhgl", qg, raw_k.astype(jnp.float32)) * sm_scale
     s = s.reshape(B, H, L_loc)
-    mask = jnp.arange(L_loc)[None, None, :] < n_local
+    mask = ref.valid_mask(n_local, L_loc, lead=2)
     s = jnp.where(mask, s, ref.NEG_INF)
     m = jnp.max(s, axis=-1)
     p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
@@ -74,60 +77,60 @@ def _local_dense_partials(q, raw_k, raw_v, n_comp, sm_scale: float, axis: str):
 
 def _append_token_local(cache_l: LayerKVCache, k_new, v_new, axis: str,
                         n_shards: int, ring: bool):
-    """Shard-local decode append: the 64-token flush block lands in exactly
-    one context shard (block | shard size); the owner masks the write."""
-    from ..core.cache import compress_block
+    """Shard-local decode append at per-row offsets: each row's 64-token
+    flush block lands in exactly one context shard (block | shard size);
+    the owner masks the write per row."""
+    from ..core.cache import (
+        append_block_rows,
+        compress_block,
+        row_update_tokens,
+        select_rows,
+    )
 
     cfg = cache_l.cfg
     R = cfg.residual
 
     def write(c):
-        rk = jax.lax.dynamic_update_slice_in_dim(
-            c.resid_k, k_new.astype(c.resid_k.dtype), c.n_resid, axis=-2)
-        rv = jax.lax.dynamic_update_slice_in_dim(
-            c.resid_v, v_new.astype(c.resid_v.dtype), c.n_resid, axis=-2)
+        rk = row_update_tokens(c.resid_k, k_new, c.n_resid)
+        rv = row_update_tokens(c.resid_v, v_new, c.n_resid)
         return dataclasses.replace(c, resid_k=rk, resid_v=rv,
                                    n_resid=c.n_resid + 1)
 
     def flush(c):
+        need = c.n_resid >= R  # [B]
         blk_k = c.resid_k[..., : cfg.block, :]
         blk_v = c.resid_v[..., : cfg.block, :]
         idx = jax.lax.axis_index(axis)
+        L_loc = c.capacity  # local shard capacity inside shard_map
+        g_off = (c.n_comp % (L_loc * n_shards)) if ring else c.n_comp
+        owner = need & ((g_off // L_loc) == idx)  # [B]
+        off = jnp.clip(g_off - idx * L_loc, 0, L_loc - cfg.block)
         if cfg.policy == "none":
-            L_loc = c.raw_k.shape[-2]
-            g_off = (c.n_comp % (L_loc * n_shards)) if ring else c.n_comp
-            owner = (g_off // L_loc) == idx
-            off = jnp.clip(g_off - idx * L_loc, 0, L_loc - cfg.block)
-            new_rk = jax.lax.dynamic_update_slice_in_dim(
-                c.raw_k, blk_k, off, axis=-2)
-            new_rv = jax.lax.dynamic_update_slice_in_dim(
-                c.raw_v, blk_v, off, axis=-2)
+            new_rk = row_update_tokens(c.raw_k, blk_k, off)
+            new_rv = row_update_tokens(c.raw_v, blk_v, off)
             c = dataclasses.replace(
                 c,
-                raw_k=jnp.where(owner, new_rk, c.raw_k),
-                raw_v=jnp.where(owner, new_rv, c.raw_v),
+                raw_k=select_rows(owner, new_rk, c.raw_k),
+                raw_v=select_rows(owner, new_rv, c.raw_v),
             )
         else:
-            from ..core.cache import append_block
-
-            L_loc = c.k.capacity
-            g_off = (c.n_comp % (L_loc * n_shards)) if ring else c.n_comp
-            owner = (g_off // L_loc) == idx
-            off = jnp.clip(g_off - idx * L_loc, 0, L_loc - cfg.block)
             kc, vc = compress_block(blk_k, blk_v, cfg, c.k.chan_perm,
                                     c.v.chan_perm)
-            nk = append_block(c.k, kc, off)
-            nv = append_block(c.v, vc, off)
-            sel = lambda a, b: jax.tree_util.tree_map(
-                lambda x, y: jnp.where(owner, x, y), a, b)
-            c = dataclasses.replace(c, k=sel(nk, c.k), v=sel(nv, c.v))
+            nk = append_block_rows(c.k, kc, off)
+            nv = append_block_rows(c.v, vc, off)
+            c = dataclasses.replace(c, k=select_rows(owner, nk, c.k),
+                                    v=select_rows(owner, nv, c.v))
         rk = jnp.roll(c.resid_k, -cfg.block, axis=-2)
         rv = jnp.roll(c.resid_v, -cfg.block, axis=-2)
-        return dataclasses.replace(c, resid_k=rk, resid_v=rv,
-                                   n_comp=c.n_comp + cfg.block,
-                                   n_resid=c.n_resid - cfg.block)
+        step = jnp.where(need, cfg.block, 0).astype(jnp.int32)
+        return dataclasses.replace(c,
+                                   resid_k=select_rows(need, rk, c.resid_k),
+                                   resid_v=select_rows(need, rv, c.resid_v),
+                                   n_comp=c.n_comp + step,
+                                   n_resid=c.n_resid - step)
 
-    cache_l = jax.lax.cond(cache_l.n_resid >= R, flush, lambda c: c, cache_l)
+    cache_l = jax.lax.cond(jnp.any(cache_l.n_resid >= R), flush,
+                           lambda c: c, cache_l)
     return write(cache_l)
 
 
@@ -181,9 +184,7 @@ def context_parallel_decode_step(
         cache_l = _append_token_local(cache_l, k_l, v_l, axis, n_shards, ring)
         n_valid = cache_l.n_comp
         if ring:
-            cap = (cache_l.raw_k.shape[-2] if cache_l.cfg.policy == "none"
-                   else cache_l.k.capacity)
-            n_valid = jnp.minimum(n_valid, cap * n_shards)
+            n_valid = jnp.minimum(n_valid, cache_l.capacity * n_shards)
         if cache_l.cfg.policy == "none":
             o_c, m_c, l_c = _local_dense_partials(
                 q_l, cache_l.raw_k, cache_l.raw_v, n_valid, sm_scale, axis)
@@ -200,9 +201,10 @@ def context_parallel_decode_step(
         out = ops.merge_partials(o_g, m_g, l_g, o_r, m_r, l_r)
         return out, cache_l
 
-    return jax.shard_map(
+    from ..utils import shard_map_compat
+
+    return shard_map_compat(
         local, mesh=mesh,
         in_specs=(q_spec, kv_spec, kv_spec, c_specs),
         out_specs=(q_spec, c_specs),
-        check_vma=False,
     )(q, k_new, v_new, cache)

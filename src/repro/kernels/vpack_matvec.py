@@ -22,7 +22,13 @@ Array = jax.Array
 DEFAULT_TILE_L = 256
 
 
-def _kernel(payload_ref, mins_ref, shifts_ref, w_ref, out_ref, *, width, pack):
+def _kernel(*refs, width, pack, masked, tile_l):
+    if masked:
+        payload_ref, mins_ref, shifts_ref, w_ref, n_ref, out_ref = refs
+    else:
+        payload_ref, mins_ref, shifts_ref, w_ref, out_ref = refs
+        n_ref = None
+
     @pl.when(pl.program_id(1) == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
@@ -31,6 +37,9 @@ def _kernel(payload_ref, mins_ref, shifts_ref, w_ref, out_ref, *, width, pack):
         payload_ref[0], mins_ref[0], shifts_ref[0], width, pack
     )  # [C, TL]
     w = w_ref[0]  # [G, TL]
+    if n_ref is not None:
+        gidx = pl.program_id(1) * tile_l + jnp.arange(tile_l)
+        w = jnp.where((gidx < n_ref[0, 0])[None, :], w, 0.0)
     out_ref[0] += jax.lax.dot_general(
         w, vals, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
     )
@@ -44,12 +53,15 @@ def vpack_tier_out(
     *,
     width: int,
     pack_size: int,
+    n_valid: Array | None = None,
     tile_l: int = DEFAULT_TILE_L,
     interpret: bool = True,
 ) -> Array:
     """One tier's weighted-V output (tier channel order, scale pre-folded).
 
     payload: u32 [BH, C, L*width/32]; w: f32 [BH, G, L] (weights*scale).
+    n_valid: optional i32 [BH] per-row valid length — weight columns past
+    it are zeroed in-kernel before the contraction.
     Returns out f32 [BH, G, C].
     """
     BH, C, Wl = payload.shape
@@ -60,17 +72,24 @@ def vpack_tier_out(
     tWl = tile_l * width // 32
     tP = tile_l // pack_size
 
+    in_specs = [
+        pl.BlockSpec((1, C, tWl), lambda b, l: (b, 0, l)),
+        pl.BlockSpec((1, C, tP), lambda b, l: (b, 0, l)),
+        pl.BlockSpec((1, C, tP // 4), lambda b, l: (b, 0, l)),
+        pl.BlockSpec((1, G, tile_l), lambda b, l: (b, 0, l)),
+    ]
+    args = [payload, mins, shifts, w]
+    if n_valid is not None:
+        in_specs.append(pl.BlockSpec((1, 1), lambda b, l: (b, 0)))
+        args.append(n_valid.astype(jnp.int32).reshape(BH, 1))
+
     return pl.pallas_call(
-        functools.partial(_kernel, width=width, pack=pack_size),
+        functools.partial(_kernel, width=width, pack=pack_size,
+                          masked=n_valid is not None, tile_l=tile_l),
         grid=(BH, nL),
-        in_specs=[
-            pl.BlockSpec((1, C, tWl), lambda b, l: (b, 0, l)),
-            pl.BlockSpec((1, C, tP), lambda b, l: (b, 0, l)),
-            pl.BlockSpec((1, C, tP // 4), lambda b, l: (b, 0, l)),
-            pl.BlockSpec((1, G, tile_l), lambda b, l: (b, 0, l)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, G, C), lambda b, l: (b, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, G, C), jnp.float32),
         interpret=interpret,
         **tpu_params(("parallel", "arbitrary"), interpret),
-    )(payload, mins, shifts, w)
+    )(*args)

@@ -1,8 +1,8 @@
-"""Serving launcher: calibrated PackKV engine + wave-batched requests.
+"""Serving launcher: calibrated PackKV engine + slot-scheduled requests.
 
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --smoke \
-      --requests 12 --max-new 32 --policy packkv
+      --requests 12 --max-new 32 --policy packkv --server slot
 """
 from __future__ import annotations
 
@@ -15,7 +15,7 @@ import numpy as np
 from ..configs import get_arch
 from ..core.cache import PackKVConfig
 from ..models import get_model
-from ..serving import Engine, EngineConfig, Request, WaveServer
+from ..serving import Engine, EngineConfig, Request, SlotServer, WaveServer
 from ..utils import tree_bytes
 
 
@@ -30,6 +30,9 @@ def main() -> int:
     ap.add_argument("--capacity", type=int, default=1024)
     ap.add_argument("--policy", default="packkv", choices=["packkv", "none", "kivi"])
     ap.add_argument("--backend", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--server", default="slot", choices=["slot", "wave"],
+                    help="slot = continuous batching; wave = wave-chunked "
+                    "compat wrapper (auto-fallback for recurrent families)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -51,7 +54,9 @@ def main() -> int:
         print(f"calibrated K tiers {ks.widths}×{ks.counts}; "
               f"V tiers {vs.widths}×{vs.counts}")
 
-    server = WaveServer(engine)
+    use_slot = (args.server == "slot" and engine.api.supports_slots
+                and cfg.input_mode == "tokens")
+    server = SlotServer(engine) if use_slot else WaveServer(engine)
     rng = np.random.default_rng(args.seed)
     for rid in range(args.requests):
         plen = int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
@@ -59,13 +64,22 @@ def main() -> int:
                               tokens=rng.integers(0, cfg.vocab, plen)))
     t0 = time.time()
     n_tok = 0
-    while server.queue:
-        wave = server.run_wave()
-        n_tok += sum(r.max_new for r in wave)
-        print(f"wave of {len(wave)} served")
+    if use_slot:
+        done = server.run()
+        n_tok = sum(len(r.output) for r in done)
+    else:
+        while server.queue:
+            wave = server.run_wave()
+            n_tok += sum(r.max_new for r in wave)
+            print(f"wave of {len(wave)} served")
     dt = time.time() - t0
     print(f"{args.requests} requests, {n_tok} tokens in {dt:.1f}s "
           f"({n_tok / dt:.1f} tok/s on CPU)")
+    if use_slot:
+        s = server.stats
+        print(f"slot scheduler: {s.decode_steps} decode steps, "
+              f"occupancy {s.occupancy:.2f}, {s.slot_reuses} slot reuses, "
+              f"{s.admitted} admitted / {s.completed} completed")
 
     # cache memory report (the paper's deliverable)
     cap = args.capacity

@@ -7,11 +7,17 @@ ModelApi:
   prefill(params, cfg, pack_cfg, capacity, batch) -> (last_logits, cache)
   decode_step(params, cfg, cache, token, backend=...) -> (logits, cache)
   alloc_cache(cfg, pack_cfg, batch, capacity) -> cache pytree
+
+Slot ops (continuous batching; None for families whose decode state cannot
+be row-recycled yet — rwkv6/rglru carry recurrent per-layer state):
+  prefill_into_slot(params, cfg, pack_cfg, capacity, cache, slot, batch)
+      -> (last_logits [1, V], cache with row ``slot`` replaced)
+  reset_slot(cache, slot) -> cache with row ``slot`` freed
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable
+from typing import Callable, Optional
 
 import jax.numpy as jnp
 
@@ -30,6 +36,12 @@ class ModelApi:
     prefill: Callable
     decode_step: Callable
     alloc_cache: Callable
+    prefill_into_slot: Optional[Callable] = None
+    reset_slot: Optional[Callable] = None
+
+    @property
+    def supports_slots(self) -> bool:
+        return self.prefill_into_slot is not None
 
 
 def _make_loss(forward_train):
@@ -56,6 +68,8 @@ def _transformer_api() -> ModelApi:
         prefill=transformer.prefill,
         decode_step=transformer.decode_step,
         alloc_cache=transformer.alloc_cache,
+        prefill_into_slot=transformer.prefill_into_slot,
+        reset_slot=transformer.reset_cache_slot,
     )
 
 

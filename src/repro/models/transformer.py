@@ -200,13 +200,40 @@ def prefill(params: dict, cfg: ArchConfig, pack_cfg: PackKVConfig, capacity: int
     return logits, cache
 
 
+def prefill_into_slot(params: dict, cfg: ArchConfig, pack_cfg: PackKVConfig,
+                      capacity: int, cache, slot, batch: dict):
+    """Admit ONE request into row ``slot`` of a stacked decode cache.
+
+    ``batch`` holds a single sequence (leading dim 1) at its TRUE length —
+    no padding, so no pad tokens ever enter the cache and the row's
+    compression calibration sees exactly the data a batch-size-1 prefill
+    would. Rows other than ``slot`` are untouched (they may be mid-decode).
+    Returns (last-token logits [1, V], updated cache). ``slot`` may be a
+    traced scalar, so one compiled program serves every slot per prompt
+    length.
+    """
+    from ..core.cache import insert_row
+
+    logits, row = prefill(params, cfg, pack_cfg, capacity, batch)
+    return logits, insert_row(cache, slot, row)
+
+
+def reset_cache_slot(cache, slot):
+    """Free row ``slot`` of a stacked decode cache (counters to zero)."""
+    from ..core.cache import reset_slot
+
+    return reset_slot(cache, slot)
+
+
 def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,
                 *, backend: str = "xla"):
     """One decode token. token: [B, 1] int32. Returns (logits [B,V], cache)."""
     h = params["embed"][token] if cfg.input_mode != "frames" else token
     B = h.shape[0]
-    pos = cache.n_comp[0] + cache.n_resid[0]  # same across layers
-    positions = pos + jnp.arange(1)
+    # per-row positions (continuous batching: every slot has its own length);
+    # counters are identical across layers, so layer 0's [B] vector suffices
+    pos = cache.n_comp[0] + cache.n_resid[0]  # [B]
+    positions = pos[:, None, None]  # broadcasts to [B, H, 1] in RoPE
     sm_scale = 1.0 / (cfg.hd ** 0.5)
 
     from ..distributed.sharding import _ACTIVE_MESH as mesh
@@ -215,8 +242,7 @@ def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,
         if mesh is None or "model" not in mesh.axis_names:
             return False
         n = mesh.shape["model"]
-        cap = (cache_l.raw_k.shape[-2] if cache_l.cfg.policy == "none"
-               else cache_l.k.capacity)
+        cap = cache_l.capacity
         return n > 1 and cap % n == 0 and (cap // n) % cache_l.cfg.block == 0
 
     def body(hh, xs):

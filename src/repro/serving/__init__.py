@@ -1,1 +1,8 @@
-from .engine import Engine, EngineConfig, Request, WaveServer  # noqa: F401
+from .engine import (  # noqa: F401
+    Engine,
+    EngineConfig,
+    Request,
+    SlotServer,
+    SlotStats,
+    WaveServer,
+)

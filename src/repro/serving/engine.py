@@ -1,4 +1,4 @@
-"""Serving engine: calibration, jitted prefill/decode, wave-batched requests.
+"""Serving engine: calibration, jitted prefill/decode, continuous batching.
 
 Build sequence (mirrors a production bring-up):
   1. CALIBRATE — run a short prefill with the uncompressed policy, collect
@@ -6,15 +6,26 @@ Build sequence (mirrors a production bring-up):
      the paper's per-model configuration sweep (§IV-B) done once at engine
      build, before compilation.
   2. COMPILE — jit prefill + decode with the calibrated PackKVConfig.
-  3. SERVE — requests are grouped into waves (batched prefill, batched
-     greedy decode to completion). Finished rows keep decoding with their
-     output masked — the uniform-length contract the compressed cache's
-     shared block structure relies on. Continuous (per-slot) batching
-     would need per-row n_comp; recorded as future work in DESIGN.md.
+  3. SERVE — ``SlotServer`` runs a continuous-batching scheduler over a
+     fixed slot table of ``max_batch`` rows. Every sequence owns one row of
+     the decode cache with its own ``n_comp``/``n_resid`` counters: a
+     queued request is admitted into any free slot by a jitted single-slot
+     prefill-insert (at its TRUE prompt length — no left-padding, so pad
+     tokens never pollute the cache), all occupied slots decode together
+     each step, and a row is recycled the moment its request finishes
+     (EOS / max_new) while the other rows keep decoding.
+
+``WaveServer`` survives as a thin compatibility wrapper over the slot
+scheduler (same submit/run_wave surface); model families whose decode
+state cannot be row-recycled yet (rwkv6 / hybrid_rglru recurrent state)
+fall back to its legacy lock-step wave. See docs/serving.md for the slot
+table layout, admission policy and per-row counter plumbing.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import deque
 from functools import partial
 
 import jax
@@ -31,7 +42,7 @@ Array = jax.Array
 @dataclasses.dataclass
 class EngineConfig:
     capacity: int = 4096  # compressed-region token capacity
-    max_batch: int = 8
+    max_batch: int = 8  # slot-table size
     backend: str = "xla"  # xla | pallas
     calibrate: bool = True
     calib_tokens: int = 192  # multiple of the 64-token block
@@ -58,6 +69,16 @@ class Engine:
         self._decode = jax.jit(
             partial(self.api.decode_step, cfg=cfg, backend=ecfg.backend)
         )
+        if self.api.supports_slots:
+            from ..core.cache import mask_free_slots
+
+            # one compile per distinct prompt length; slot index is traced
+            self._insert = jax.jit(
+                partial(self.api.prefill_into_slot, cfg=cfg,
+                        pack_cfg=self.pack_cfg, capacity=ecfg.capacity)
+            )
+            self._reset = jax.jit(self.api.reset_slot)
+            self._mask_free = jax.jit(mask_free_slots)
 
     # -- calibration --------------------------------------------------------
     def _calibrate(self, pack_cfg: PackKVConfig) -> PackKVConfig:
@@ -99,8 +120,30 @@ class Engine:
     def decode(self, cache, token: Array):
         return self._decode(self.params, cache=cache, token=token)
 
+    def alloc_slot_cache(self):
+        """Slot-table decode cache: max_batch rows, per-row counters."""
+        return self.api.alloc_cache(
+            self.cfg, self.pack_cfg, self.ecfg.max_batch, self.ecfg.capacity
+        )
+
+    def insert_request(self, cache, slot: int, tokens: np.ndarray):
+        """Jitted single-slot prefill-insert; returns (last logits [V], cache)."""
+        batch = {"tokens": jnp.asarray(np.asarray(tokens)[None], jnp.int32)}
+        logits, cache = self._insert(
+            self.params, cache=cache, slot=jnp.int32(slot), batch=batch
+        )
+        return logits[0], cache
+
+    def free_slot(self, cache, slot: int):
+        return self._reset(cache, jnp.int32(slot))
+
+    def mask_free(self, cache, active):
+        """Re-zero counters of inactive rows (see core.cache.mask_free_slots)."""
+        return self._mask_free(cache, active)
+
     def generate(self, batch: dict, max_new: int, eos_id: int | None = None):
-        """Greedy wave decode. Returns tokens [B, max_new] (masked past EOS)."""
+        """Greedy wave decode. Returns tokens [B, max_new] (stops early only
+        when every row has emitted ``eos_id``)."""
         logits, cache = self.prefill(batch)
         B = logits.shape[0]
         tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
@@ -120,23 +163,185 @@ class Engine:
 @dataclasses.dataclass
 class Request:
     rid: int
-    tokens: np.ndarray  # [S]
+    tokens: np.ndarray  # [S] prompt at its true length
     max_new: int
     output: np.ndarray | None = None
 
 
-class WaveServer:
-    """Groups queued requests into fixed-size waves and serves each wave
-    with one batched prefill + shared decode loop (left-pad to the wave's
-    max prompt length)."""
+@dataclasses.dataclass
+class SlotStats:
+    """Scheduler telemetry (throughput/occupancy counters)."""
 
-    def __init__(self, engine: Engine, pad_id: int = 0):
+    n_slots: int = 0
+    decode_steps: int = 0  # batched decode launches
+    occupied_slot_steps: int = 0  # sum over steps of occupied slots
+    tokens_out: int = 0  # useful tokens delivered to requests
+    admitted: int = 0
+    completed: int = 0
+    slot_reuses: int = 0  # admissions into a previously-used slot
+    wall_s: float = 0.0
+
+    @property
+    def occupancy(self) -> float:
+        """Fraction of slot-steps that decoded a live request."""
+        total = self.decode_steps * max(self.n_slots, 1)
+        return self.occupied_slot_steps / total if total else 0.0
+
+    @property
+    def decode_tok_s(self) -> float:
+        return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+
+class _Active:
+    """One occupied slot: the request plus its generation state."""
+
+    __slots__ = ("req", "out", "done")
+
+    def __init__(self, req: Request, first_tok: int, eos_id: int | None):
+        self.req = req
+        self.out = [first_tok]
+        self.done = (eos_id is not None and first_tok == eos_id) or \
+            req.max_new <= 1
+
+
+class SlotServer:
+    """Continuous-batching scheduler over a fixed slot table.
+
+    Each step: (1) ADMIT — pop queued requests into free slots via the
+    jitted single-slot prefill-insert; (2) DECODE — one batched greedy
+    decode step over the whole table (free rows ride along masked by their
+    zero counters); (3) RETIRE — rows that hit EOS or ``max_new`` record
+    their output, their slot counters are reset, and the slot is reusable
+    on the very next step. Per-request greedy outputs are bit-identical to
+    a batch-size-1 ``Engine.generate`` run (per-row cache state + per-row
+    RoPE positions + row-independent attention).
+    """
+
+    def __init__(self, engine: Engine, eos_id: int | None = None):
+        if not engine.api.supports_slots:
+            raise ValueError(
+                f"family {engine.cfg.family!r} has no slot ops "
+                "(recurrent decode state); use WaveServer's legacy path"
+            )
+        if engine.cfg.input_mode != "tokens":
+            raise ValueError(
+                f"input_mode {engine.cfg.input_mode!r} not servable per-slot "
+                "(Request carries tokens only); use WaveServer"
+            )
+        self.engine = engine
+        self.eos_id = eos_id
+        self.n_slots = engine.ecfg.max_batch
+        self.cache = None  # allocated on first admission
+        self.slots: list[_Active | None] = [None] * self.n_slots
+        self._ever_used = [False] * self.n_slots
+        self._last_tok = np.zeros((self.n_slots,), np.int32)
+        self.queue: deque[Request] = deque()
+        self.done: dict[int, Request] = {}
+        self.stats = SlotStats(n_slots=self.n_slots)
+
+    # -- queue --------------------------------------------------------------
+    def submit(self, req: Request) -> None:
+        if req.max_new < 1:
+            raise ValueError(f"request {req.rid}: max_new must be >= 1")
+        self.queue.append(req)
+
+    @property
+    def n_occupied(self) -> int:
+        return sum(s is not None for s in self.slots)
+
+    # -- scheduler ----------------------------------------------------------
+    def _retire(self, i: int) -> Request:
+        act = self.slots[i]
+        act.req.output = np.asarray(act.out, np.int32)
+        self.done[act.req.rid] = act.req
+        self.slots[i] = None
+        self.cache = self.engine.free_slot(self.cache, i)
+        self.stats.completed += 1
+        return act.req
+
+    def _admit(self) -> list[Request]:
+        finished: list[Request] = []
+        for i in range(self.n_slots):
+            if not self.queue:
+                break
+            if self.slots[i] is not None:
+                continue
+            req = self.queue.popleft()
+            if self.cache is None:
+                self.cache = self.engine.alloc_slot_cache()
+            logits, self.cache = self.engine.insert_request(
+                self.cache, i, req.tokens
+            )
+            tok = int(jnp.argmax(logits))
+            self.slots[i] = _Active(req, tok, self.eos_id)
+            self._last_tok[i] = tok
+            self.stats.admitted += 1
+            self.stats.tokens_out += 1
+            if self._ever_used[i]:
+                self.stats.slot_reuses += 1
+            self._ever_used[i] = True
+            if self.slots[i].done:  # max_new == 1 or instant EOS
+                finished.append(self._retire(i))
+        return finished
+
+    def step(self) -> list[Request]:
+        """Admit + one decode step + retire. Returns requests finished now."""
+        t0 = time.perf_counter()
+        finished = self._admit()
+        if self.n_occupied:
+            tok = jnp.asarray(self._last_tok[:, None])
+            logits, self.cache = self.engine.decode(self.cache, tok)
+            nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+            self.stats.decode_steps += 1
+            for i, act in enumerate(self.slots):
+                if act is None:
+                    continue
+                self.stats.occupied_slot_steps += 1
+                t = int(nxt[i])
+                act.out.append(t)
+                self._last_tok[i] = t
+                self.stats.tokens_out += 1
+                if (self.eos_id is not None and t == self.eos_id) or \
+                        len(act.out) >= act.req.max_new:
+                    finished.append(self._retire(i))
+            if self.n_occupied < self.n_slots:
+                # free rows received a junk append this step; re-zero their
+                # counters so free slots stay inert (never flush, never grow)
+                active = jnp.asarray([s is not None for s in self.slots], bool)
+                self.cache = self.engine.mask_free(self.cache, active)
+        self.stats.wall_s += time.perf_counter() - t0
+        return finished
+
+    def run(self) -> list[Request]:
+        """Drain the queue and all slots; returns every finished request."""
+        finished: list[Request] = []
+        while self.queue or self.n_occupied:
+            finished.extend(self.step())
+        return finished
+
+
+class WaveServer:
+    """Compatibility wrapper: groups queued requests into fixed-size waves
+    and serves each wave through the continuous ``SlotServer`` (each
+    request prefilled at its true length — the old left-pad path and its
+    pad-pollution are gone). Families without slot ops (recurrent decode
+    state) fall back to the legacy lock-step wave."""
+
+    def __init__(self, engine: Engine, pad_id: int = 0,
+                 eos_id: int | None = None):
         self.engine = engine
         self.pad_id = pad_id
         self.queue: list[Request] = []
         self.done: dict[int, Request] = {}
+        self._slots = (
+            SlotServer(engine, eos_id=eos_id)
+            if engine.api.supports_slots and engine.cfg.input_mode == "tokens"
+            else None
+        )
 
     def submit(self, req: Request) -> None:
+        if req.max_new < 1:
+            raise ValueError(f"request {req.rid}: max_new must be >= 1")
         self.queue.append(req)
 
     def run_wave(self) -> list[Request]:
@@ -144,6 +349,19 @@ class WaveServer:
             return []
         B = self.engine.ecfg.max_batch
         wave, self.queue = self.queue[:B], self.queue[B:]
+        if self._slots is not None:
+            for r in wave:
+                self._slots.submit(r)
+            self._slots.run()
+            for r in wave:
+                self.done[r.rid] = r
+            return wave
+        return self._legacy_wave(wave)
+
+    def _legacy_wave(self, wave: list[Request]) -> list[Request]:
+        """Lock-step wave for recurrent families: batched prefill (left-pad
+        to the wave's max prompt length) + shared decode loop. Known
+        limitation: left-pad tokens enter the recurrent state."""
         S = max(len(r.tokens) for r in wave)
         S = -(-S // 64) * 64  # block-align prompts
         toks = np.full((len(wave), S), self.pad_id, np.int32)

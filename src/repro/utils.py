@@ -27,6 +27,19 @@ def pytree_dataclass(cls=None, *, meta_fields: tuple[str, ...] = ()):
     return wrap if cls is None else wrap(cls)
 
 
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """``jax.shard_map`` across jax versions: top-level (with ``check_vma``)
+    on new jax, ``jax.experimental.shard_map`` (with ``check_rep``) on
+    older releases like the 0.4.x baked into the container image."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def cdiv(a: int, b: int) -> int:
     return -(-a // b)
 

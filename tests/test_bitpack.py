@@ -1,6 +1,8 @@
 """Invariants 2 & 7: bit-packing is lossless; sizes match analytic model."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # degrade to skips, not collection errors
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bitpack import (

@@ -23,7 +23,7 @@ def test_prefill_bookkeeping(rng):
     cache = alloc_layer_cache(cfg, 1, 2, 128, 256)
     k = jnp.asarray(synthetic_kv(rng, 1, 2, 130, 128))
     cache = prefill_cache(cache, k, k)
-    assert int(cache.n_comp) == 128 and int(cache.n_resid) == 2
+    assert int(cache.n_comp[0]) == 128 and int(cache.n_resid[0]) == 2
 
 
 def test_append_until_flush(rng):
@@ -31,16 +31,17 @@ def test_append_until_flush(rng):
     cache = alloc_layer_cache(cfg, 1, 1, 32, 256)
     k1 = jnp.asarray(synthetic_kv(rng, 1, 1, 64, 32))
     cache = prefill_cache(cache, k1, k1)
-    assert int(cache.n_comp) == 64 and int(cache.n_resid) == 0
+    assert int(cache.n_comp[0]) == 64 and int(cache.n_resid[0]) == 0
     step = jax.jit(append_token)
     for i in range(97):
         t = jnp.asarray(synthetic_kv(rng, 1, 1, 1, 32))
         cache = step(cache, t, t)
     # residual filled to 96 after the 96th append; the 97th flushes a block
-    assert int(cache.n_comp) == 128
-    assert int(cache.n_resid) == 96 - 64 + 1
+    assert int(cache.n_comp[0]) == 128
+    assert int(cache.n_resid[0]) == 96 - 64 + 1
 
 
+@pytest.mark.slow
 def test_decode_attention_after_appends_matches_dense(rng):
     """Rebuild the exact token set; compressed decode ≈ dense decode."""
     cfg = PackKVConfig(residual=96, k_rel_scale=0.02, v_rel_scale=0.02)
@@ -82,12 +83,12 @@ def test_ring_append_overwrites_oldest(rng):
     cache = alloc_layer_cache(cfg, 1, 1, 32, W)
     k0 = jnp.asarray(synthetic_kv(rng, 1, 1, W, 32))
     cache = prefill_cache(cache, k0, k0)
-    assert int(cache.n_comp) == W
+    assert int(cache.n_comp[0]) == W
     step = jax.jit(lambda c, k, v: append_token(c, k, v, ring=True))
     for i in range(97):  # trigger one ring flush (residual fills at 96)
         t = jnp.asarray(synthetic_kv(rng, 1, 1, 1, 32))
         cache = step(cache, t, t)
-    assert int(cache.n_comp) == W + 64  # grows; mask uses min(n_comp, W)
+    assert int(cache.n_comp[0]) == W + 64  # grows; mask uses min(n_comp, W)
     # capacity unchanged — the flush wrapped around
     assert cache.k.capacity == W
 

@@ -131,11 +131,13 @@ def test_compressed_psum_mean_shardmap():
 
     from repro.distributed.grad_compress import compressed_psum_mean
 
+    from repro.utils import shard_map_compat
+
     mesh = jax.make_mesh((1,), ("data",))
     g = {"w": jnp.arange(64.0)}
-    f = jax.shard_map(
+    f = shard_map_compat(
         partial(compressed_psum_mean, cfg=GradCompressConfig(bits=8, row=64)),
-        mesh=mesh, in_specs=(P(),), out_specs=P(), check_vma=False,
+        mesh=mesh, in_specs=(P(),), out_specs=P(),
     )
     out = f(g)
     assert float(jnp.max(jnp.abs(out["w"] - g["w"]))) < 0.3

@@ -78,7 +78,7 @@ def test_fused_attention_empty_compressed_region(rng):
     """n_comp == 0: all mass on the residual buffer; no NaNs."""
     B, Hkv, G, D, L = 1, 2, 2, 64, 128
     cache, _, _ = _make_cache(rng, B, Hkv, D, L, 40)  # only residual
-    assert int(cache.n_comp) == 0
+    assert int(cache.n_comp[0]) == 0
     q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)).astype(np.float32))
     args = (q, cache.k, cache.v, cache.resid_k, cache.resid_v,
             cache.n_comp, cache.n_resid, 0.125)
@@ -86,6 +86,57 @@ def test_fused_attention_empty_compressed_region(rng):
     got = ops.packed_decode_attention(*args, backend="pallas", tile_l=32)
     assert not bool(jnp.isnan(got).any())
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5, atol=1e-4)
+
+
+def test_fused_attention_per_row_lengths(rng):
+    """Slot-table shape: rows with DIFFERENT n_comp/n_resid — the pallas
+    fused kernel masks each grid row to its own count and matches the
+    per-row xla oracle."""
+    from repro.core.cache import insert_prefill
+
+    B, Hkv, G, D, L = 3, 2, 2, 64, 256
+    k = jnp.asarray(synthetic_kv(rng, B, Hkv, 192, D))
+    v = jnp.asarray(synthetic_kv(rng, B, Hkv, 192, D))
+    cfg = calibrate_specs(k, v, PackKVConfig())
+    cache = alloc_layer_cache(cfg, batch=B, h_kv=Hkv, head_dim=D, capacity=L)
+    # row 0: 192 tokens, row 1: 72 tokens, row 2: left empty (dead slot)
+    cache = insert_prefill(cache, 0, k[0], v[0])
+    cache = insert_prefill(cache, 1, k[1, :, :72], v[1, :, :72])
+    assert [int(x) for x in cache.n_comp] == [192, 64, 0]
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)).astype(np.float32))
+    args = (q, cache.k, cache.v, cache.resid_k, cache.resid_v,
+            cache.n_comp, cache.n_resid, 0.125)
+    ref = ops.packed_decode_attention(*args, backend="xla")
+    got = ops.packed_decode_attention(*args, backend="pallas", tile_l=64)
+    assert not bool(jnp.isnan(got).any())
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref), rtol=1e-5,
+                               atol=1e-4)
+    # dead row contributes nothing
+    np.testing.assert_array_equal(np.asarray(got[2]), 0.0)
+
+
+def test_tier_matvec_per_row_n_valid(rng):
+    """kpack/vpack kernels' in-kernel n_valid masking == masking outside."""
+    B, Hkv, G, D, L = 2, 2, 2, 64, 256
+    cache, _, _ = _make_cache(rng, B, Hkv, D, L, 192)
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)).astype(np.float32))
+    n_valid = jnp.asarray([192, 64], jnp.int32)
+    s = ops.packed_qk_scores(q, cache.k, 0.125, n_valid=n_valid,
+                             backend="pallas", tile_l=64)
+    s_ref = ops.packed_qk_scores(q, cache.k, 0.125, n_valid=n_valid,
+                                 backend="xla")
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref), rtol=1e-5,
+                               atol=1e-4)
+    # columns past each row's n_valid are zeroed
+    assert np.abs(np.asarray(s[1, :, 64:])).max() == 0.0
+    w = jax.nn.softmax(
+        jnp.asarray(rng.normal(size=(B, Hkv * G, L)).astype(np.float32)), -1
+    )
+    o = ops.packed_weighted_v(w, cache.v, n_valid=n_valid, backend="pallas",
+                              tile_l=64)
+    o_ref = ops.packed_weighted_v(w, cache.v, n_valid=n_valid, backend="xla")
+    np.testing.assert_allclose(np.asarray(o), np.asarray(o_ref), rtol=1e-5,
+                               atol=1e-4)
 
 
 def test_uncalibrated_spec_still_matches_ref(rng):

@@ -2,6 +2,8 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")  # degrade to skips, not collection errors
 from hypothesis import given, settings, strategies as st
 
 from repro.core.quantization import (

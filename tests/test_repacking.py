@@ -2,6 +2,8 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
+
+pytest.importorskip("hypothesis")  # degrade to skips, not collection errors
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bitpack import packed_payload_bits

@@ -1,4 +1,4 @@
-"""Serving engine: calibration, generate determinism, wave batching."""
+"""Serving engine: calibration, generate determinism, continuous batching."""
 import dataclasses
 
 import jax
@@ -9,7 +9,7 @@ import pytest
 from repro.configs import SMOKES
 from repro.core.cache import PackKVConfig
 from repro.models import get_model
-from repro.serving import Engine, EngineConfig, Request, WaveServer
+from repro.serving import Engine, EngineConfig, Request, SlotServer, WaveServer
 
 
 @pytest.fixture(scope="module")
@@ -66,6 +66,67 @@ def test_wave_server(llama_engine, rng):
     assert n_waves == 3  # 5 requests / batch 2
     assert len(srv.done) == 5
     assert all(r.output.shape == (4,) for r in srv.done.values())
+
+
+@pytest.mark.parametrize("policy", ["packkv", "none"])
+def test_slot_server_matches_per_request_generate(rng, policy):
+    """Heterogeneous prompts/max_new through the continuous scheduler give
+    the SAME greedy tokens as Engine.generate run per-request (B=1), and a
+    freed slot is reused within the run."""
+    cfg = SMOKES["llama2-7b"]
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, PackKVConfig(policy=policy),
+                 EngineConfig(capacity=256, max_batch=2, calib_tokens=128))
+    reqs = [
+        Request(rid=0, max_new=3, tokens=rng.integers(0, cfg.vocab, 50)),
+        Request(rid=1, max_new=8, tokens=rng.integers(0, cfg.vocab, 70)),
+        Request(rid=2, max_new=5, tokens=rng.integers(0, cfg.vocab, 50)),
+        Request(rid=3, max_new=2, tokens=rng.integers(0, cfg.vocab, 30)),
+        Request(rid=4, max_new=1, tokens=rng.integers(0, cfg.vocab, 30)),
+    ]
+    srv = SlotServer(eng)
+    for r in reqs:
+        srv.submit(r)
+    finished = srv.run()
+    # run() returns every request, including admit-time retirements (max_new=1)
+    assert len(finished) == len(reqs) == len(srv.done)
+    # more requests than slots completed -> at least one slot was recycled
+    assert srv.stats.slot_reuses >= 1
+    assert srv.stats.completed == 5
+    assert 0.0 < srv.stats.occupancy <= 1.0
+    for r in reqs:
+        want, _ = eng.generate(
+            {"tokens": jnp.asarray(r.tokens[None], jnp.int32)}, r.max_new
+        )
+        np.testing.assert_array_equal(srv.done[r.rid].output, want[0])
+
+
+def test_slot_server_rejects_zero_max_new(rng):
+    cfg = SMOKES["llama2-7b"]
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, PackKVConfig(policy="none"),
+                 EngineConfig(capacity=256, max_batch=1, calibrate=False))
+    srv = SlotServer(eng)
+    with pytest.raises(ValueError, match="max_new"):
+        srv.submit(Request(rid=0, max_new=0,
+                           tokens=rng.integers(0, cfg.vocab, 8)))
+
+
+def test_slot_server_eos_eviction(rng):
+    """A request that emits eos stops early and frees its slot."""
+    cfg = SMOKES["llama2-7b"]
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    eng = Engine(cfg, params, PackKVConfig(policy="none"),
+                 EngineConfig(capacity=256, max_batch=1, calib_tokens=128))
+    toks = rng.integers(0, cfg.vocab, 40)
+    probe, _ = eng.generate({"tokens": jnp.asarray(toks[None], jnp.int32)}, 4)
+    eos = int(probe[0, 1])  # force eos on the 2nd generated token
+    srv = SlotServer(eng, eos_id=eos)
+    srv.submit(Request(rid=0, max_new=16, tokens=toks))
+    srv.run()
+    out = srv.done[0].output
+    assert len(out) == 2 and out[-1] == eos
+    assert srv.slots == [None]
 
 
 def test_rglru_engine_windowed(rng):

@@ -1,0 +1,117 @@
+"""Per-slot cache lifecycle: interleaved insert_prefill / append_token /
+reset_slot across rows with different lengths must reproduce, row by row,
+exactly what an independent batch-size-1 cache would hold."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.cache import (
+    PackKVConfig,
+    alloc_layer_cache,
+    append_token,
+    insert_prefill,
+    prefill_cache,
+    reset_slot,
+)
+from repro.data import synthetic_kv
+from repro.kernels import ops
+
+B, H, D, CAP, R = 3, 2, 64, 256, 96
+SM = 1.0 / np.sqrt(D)
+
+
+def _kv(rng, n):
+    return (jnp.asarray(synthetic_kv(rng, 1, H, n, D)),
+            jnp.asarray(synthetic_kv(rng, 1, H, n, D)))
+
+
+def _attend(cfg, cache, q):
+    if cfg.policy == "none":
+        return ops.dense_decode_attention(
+            q, cache.raw_k, cache.raw_v, cache.resid_k, cache.resid_v,
+            cache.n_comp, cache.n_resid, SM)
+    return ops.packed_decode_attention(
+        q, cache.k, cache.v, cache.resid_k, cache.resid_v,
+        cache.n_comp, cache.n_resid, SM)
+
+
+@pytest.mark.parametrize("policy", ["packkv", "none"])
+def test_slot_ops_match_single_row_reference(rng, policy):
+    cfg = PackKVConfig(policy=policy, residual=R)
+    step = jax.jit(append_token)
+    cache = alloc_layer_cache(cfg, B, H, D, CAP)
+    refs = {}  # slot -> independently grown B=1 cache
+
+    def ref_alloc():
+        return alloc_layer_cache(cfg, 1, H, D, CAP)
+
+    # phase 1: admit rows 0/1 at different lengths (row 2 stays free)
+    k0, v0 = _kv(rng, 130)  # 2 blocks + 2 residual
+    k1, v1 = _kv(rng, 70)  # 1 block + 6 residual
+    cache = insert_prefill(cache, 0, k0, v0)
+    cache = insert_prefill(cache, 1, k1, v1)
+    refs[0] = prefill_cache(ref_alloc(), k0, v0)
+    refs[1] = prefill_cache(ref_alloc(), k1, v1)
+
+    # phase 2: 100 decode appends -> row 0 flushes earlier than row 1
+    for _ in range(100):
+        kt, vt = _kv(rng, 1)
+        full = jnp.concatenate([kt, kt * 0.5, kt * 2.0], axis=0)
+        fullv = jnp.concatenate([vt, vt * 0.5, vt * 2.0], axis=0)
+        cache = step(cache, full, fullv)
+        refs[0] = step(refs[0], kt, vt)
+        refs[1] = step(refs[1], kt * 0.5, vt * 0.5)
+
+    # phase 3: retire row 0, recycle the slot with a fresh request
+    cache = reset_slot(cache, 0)
+    assert int(cache.n_comp[0]) == 0 and int(cache.n_resid[0]) == 0
+    k0b, v0b = _kv(rng, 200)
+    cache = insert_prefill(cache, 0, k0b, v0b)
+    refs[0] = prefill_cache(ref_alloc(), k0b, v0b)
+
+    # phase 4: more appends across the recycled + surviving rows
+    for _ in range(40):
+        kt, vt = _kv(rng, 1)
+        full = jnp.concatenate([kt, kt * 0.5, kt * 2.0], axis=0)
+        fullv = jnp.concatenate([vt, vt * 0.5, vt * 2.0], axis=0)
+        cache = step(cache, full, fullv)
+        refs[0] = step(refs[0], kt, vt)
+        refs[1] = step(refs[1], kt * 0.5, vt * 0.5)
+
+    assert int(cache.n_comp[0]) == int(refs[0].n_comp[0])
+    assert int(cache.n_resid[1]) == int(refs[1].n_resid[0])
+
+    # per-row decode attention equals the B=1 reference bit-for-bit
+    q = jnp.asarray(rng.normal(size=(B, H * 2, D)).astype(np.float32))
+    got = np.asarray(_attend(cfg, cache, q))
+    for slot, ref_cache in refs.items():
+        want = np.asarray(_attend(cfg, ref_cache, q[slot : slot + 1]))
+        np.testing.assert_array_equal(got[slot], want[0])
+
+
+def test_free_rows_do_not_leak(rng):
+    """A never-used row and a reset row contribute nothing: occupied rows'
+    outputs are unchanged by junk riding along in dead rows."""
+    cfg = PackKVConfig(residual=R)
+    cache = alloc_layer_cache(cfg, B, H, D, CAP)
+    k0, v0 = _kv(rng, 100)
+    cache = insert_prefill(cache, 1, k0, v0)
+    # dead rows 0/2 accumulate appends past a flush boundary
+    step = jax.jit(append_token)
+    for _ in range(100):
+        kt, vt = _kv(rng, 1)
+        full = jnp.concatenate([kt * 3.0, kt, kt * -2.0], axis=0)
+        fullv = jnp.concatenate([vt * 3.0, vt, vt * -2.0], axis=0)
+        cache = step(cache, full, fullv)
+    cache = reset_slot(cache, 0)
+    cache = reset_slot(cache, 2)
+
+    q = jnp.asarray(rng.normal(size=(B, H * 2, D)).astype(np.float32))
+    got = np.asarray(ops.packed_decode_attention(
+        q, cache.k, cache.v, cache.resid_k, cache.resid_v,
+        cache.n_comp, cache.n_resid, SM))
+    assert np.isfinite(got).all()
+    # reset rows have zero valid tokens -> output exactly zero
+    assert np.array_equal(got[0], np.zeros_like(got[0]))
+    assert np.array_equal(got[2], np.zeros_like(got[2]))
