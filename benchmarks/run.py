@@ -14,6 +14,7 @@ from . import (
     bench_grad_compress,
     bench_k_compression,
     bench_pack_size,
+    bench_ragged,
     bench_repacking,
     bench_scaling,
     bench_throughput,
@@ -31,6 +32,7 @@ BENCHES = {
     "fig17_scaling": bench_scaling.main,
     "beyond_grad_compress": bench_grad_compress.main,
     "beyond_continuous_batching": bench_continuous.main,
+    "beyond_ragged_length_aware": bench_ragged.main,
 }
 
 

@@ -137,17 +137,27 @@ def alloc_layer_cache(
 
 
 def _quant_tokenwise(x: Array, qc: QuantConfig):
-    """x: [B,H,N,D] -> (q i32, scale f32 [B,H,N], zero f32 [B,H,N])."""
+    """x: [B,H,N,D] -> (q i32, scale f32 [B,H,N], zero f32 [B,H,N]).
+
+    Integers are CENTERED at zero (q in [-c, max_q - c], c = (max_q+1)//2)
+    with the offset folded into the zero-point. Uncentered ints live in
+    [0, max_q]; at tight rel scales (max_q up to 255) a pack whose values
+    are all high — exactly what V-median repacking produces — then has a
+    pack-min above 127 and wraps the int8 ``mins`` field of the tier
+    format. Centering keeps every reachable pack-min inside int8 as long
+    as max_q <= 255.
+    """
     lo = x.min(axis=-1)
     hi = x.max(axis=-1)
     rng = (hi - lo).astype(jnp.float32)
     scale = jnp.where(rng > 0, qc.rel_scale * rng, 1.0)
+    c = (qc.max_q + 1) // 2
     q = jnp.clip(
         jnp.round((x.astype(jnp.float32) - lo[..., None].astype(jnp.float32)) / scale[..., None]),
         0,
         qc.max_q,
-    ).astype(jnp.int32)
-    return q, scale, lo.astype(jnp.float32)
+    ).astype(jnp.int32) - c
+    return q, scale, lo.astype(jnp.float32) + c * scale
 
 
 def compress_block(
@@ -233,6 +243,69 @@ def calibrate_specs(k: Array, v: Array, cfg: PackKVConfig, slack: int = 0):
         cfg,
         k_spec_static=choose_tier_spec(wk, pack_size=cfg.pack_size, slack=slack),
         v_spec_static=choose_tier_spec(wv, pack_size=cfg.pack_size, slack=slack),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Length-aware launch buckets
+# ---------------------------------------------------------------------------
+
+BUCKET_UNIT = 256  # smallest bucket; multiple of every kernel tile_l in use
+
+
+def bucket_length(n_max: int, capacity: int, unit: int = BUCKET_UNIT) -> int:
+    """Host-side: the launch bucket covering ``n_max`` live tokens.
+
+    Buckets are power-of-two multiples of ``unit`` clamped to ``capacity``
+    (plus ``capacity`` itself), so a serving engine compiles at most
+    ``log2(capacity / unit) + 1`` decode variants while every launch does
+    work proportional to the live prefix, not the allocation. ``n_max`` is
+    the scheduler's host-side upper bound on ``max(n_comp)`` — slicing to a
+    larger-than-needed bucket is correct (masked), slicing below a row's
+    live length is not.
+    """
+    if capacity <= unit or n_max >= capacity:
+        return capacity
+    b = unit
+    while b < n_max:
+        b *= 2
+    return min(b, capacity)
+
+
+def bucket_set(capacity: int, unit: int = BUCKET_UNIT) -> tuple[int, ...]:
+    """Every bucket ``bucket_length`` can return for this capacity."""
+    out = []
+    b = unit
+    while b < capacity:
+        out.append(b)
+        b *= 2
+    return tuple(out) + (capacity,)
+
+
+def slice_compressed(cache: LayerKVCache, n_bucket: int | None) -> LayerKVCache:
+    """Static prefix view of the compressed region for a bucketed launch.
+
+    Returns a LayerKVCache whose compressed buffers (tiered k/v, or raw_k/
+    raw_v for policy='none') cover only the first ``n_bucket`` tokens; the
+    residual buffer and the per-row counters are untouched (counters stay
+    valid because ``n_bucket >= max(n_comp)`` by construction). Use ONLY
+    for reads (attention) — appends must go through the full-capacity
+    cache.
+    """
+    from .tiered import slice_tiered_prefix
+
+    if n_bucket is None or n_bucket >= cache.capacity:
+        return cache
+    if cache.cfg.policy == "none":
+        return dataclasses.replace(
+            cache,
+            raw_k=cache.raw_k[..., :n_bucket, :],
+            raw_v=cache.raw_v[..., :n_bucket, :],
+        )
+    return dataclasses.replace(
+        cache,
+        k=slice_tiered_prefix(cache.k, n_bucket),
+        v=slice_tiered_prefix(cache.v, n_bucket),
     )
 
 

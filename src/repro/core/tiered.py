@@ -176,10 +176,14 @@ def pack_tier(q: Array, width: int, pack_size: int = PACK) -> TierBuffer:
     rng = qp.max(axis=-1) - mins
     needed = bits_required_jnp(rng)
     shift = jnp.clip(needed - width, 0, MAX_SHIFT)
+    # Saturate mins to the i8 field instead of letting astype wrap: a wrap
+    # is a ±256 reconstruction error, a clip is bounded by the clamp below.
+    mins = jnp.clip(mins, -128, 127)
     stored = (qp - mins[..., None]) >> shift[..., None]
     # Clamp in case needed - width > MAX_SHIFT (outlier beyond tier budget;
-    # bounded by construction when the top tier width >= ceil(log2(levels))).
-    stored = jnp.minimum(stored, (1 << width) - 1 if width else 0)
+    # bounded by construction when the top tier width >= ceil(log2(levels))),
+    # or in case the min was saturated above.
+    stored = jnp.clip(stored, 0, (1 << width) - 1 if width else 0)
     payload = pack_words(stored.reshape(*lead, C, L), width)
     return TierBuffer(
         payload=payload,
@@ -363,6 +367,40 @@ def alloc_tiered(
         chan_perm=jnp.broadcast_to(jnp.arange(D, dtype=jnp.int32), (*lead, batch, h_kv, D)),
         scale=jnp.ones((*lead, batch, h_kv, capacity), jnp.float32),
         zero=jnp.zeros((*lead, batch, h_kv, capacity), jnp.float32),
+        spec=spec,
+    )
+
+
+def slice_tiered_prefix(cache: TieredCache, n: int) -> TieredCache:
+    """Static prefix view: the first ``n`` tokens of every buffer.
+
+    ``n`` must be a python int (the whole point is a smaller static shape),
+    a multiple of ``4 * pack_size`` so payload words, pack metadata and the
+    4-packs-per-byte shift fields all slice on exact boundaries. Slicing is
+    free at trace time (XLA fuses the slice into the consuming kernel, so
+    only the live prefix bytes are read from HBM) and keeps every kernel
+    launch proportional to the bucketed live length instead of capacity.
+    """
+    if n >= cache.capacity:
+        return cache
+    spec = cache.spec
+    assert n % (4 * spec.pack_size) == 0, (n, spec.pack_size)
+    P = n // spec.pack_size
+    tiers = tuple(
+        TierBuffer(
+            payload=t.payload[..., : n * t.width // 32],
+            mins=t.mins[..., :P],
+            shifts=t.shifts[..., : P // 4],
+            width=t.width,
+            pack_size=t.pack_size,
+        )
+        for t in cache.tiers
+    )
+    return TieredCache(
+        tiers=tiers,
+        chan_perm=cache.chan_perm,
+        scale=cache.scale[..., :n],
+        zero=cache.zero[..., :n],
         spec=spec,
     )
 

@@ -32,17 +32,32 @@ def _kernel(*refs, width, pack, masked, tile_l):
     else:
         payload_ref, mins_ref, shifts_ref, q_ref, out_ref = refs
         n_ref = None
-    vals = decode_tier_tile(
-        payload_ref[0], mins_ref[0], shifts_ref[0], width, pack
-    )  # [C, TL] f32
-    q = q_ref[0]  # [G, C] f32
-    out = jax.lax.dot_general(
-        q, vals, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+
+    tile_start = pl.program_id(1) * tile_l  # outside pl.when (interpret mode)
+
+    def compute():
+        vals = decode_tier_tile(
+            payload_ref[0], mins_ref[0], shifts_ref[0], width, pack
+        )  # [C, TL] f32
+        q = q_ref[0]  # [G, C] f32
+        out = jax.lax.dot_general(
+            q, vals, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        if n_ref is not None:
+            gidx = tile_start + jnp.arange(tile_l)
+            out = jnp.where((gidx < n_ref[0, 0])[None, :], out, 0.0)
+        out_ref[0] = out
+
+    if n_ref is None:
+        compute()
+        return
+    # tile skipping: a tile starting at/past this row's valid length is all
+    # masked — write its (zero) output without decoding or touching the MXU
+    live = tile_start < n_ref[0, 0]
+    pl.when(live)(compute)
+    pl.when(jnp.logical_not(live))(
+        lambda: out_ref.__setitem__(..., jnp.zeros_like(out_ref))
     )
-    if n_ref is not None:
-        gidx = pl.program_id(1) * tile_l + jnp.arange(tile_l)
-        out = jnp.where((gidx < n_ref[0, 0])[None, :], out, 0.0)
-    out_ref[0] = out
 
 
 def kpack_tier_scores(
@@ -68,6 +83,7 @@ def kpack_tier_scores(
     BH, C, Wl = payload.shape
     G = q.shape[1]
     L = Wl * (32 // width)
+    tile_l = min(tile_l, L)  # bucketed launches may slice below the tile
     assert L % tile_l == 0 and tile_l % (pack_size * 4) == 0
     nL = L // tile_l
     tWl = tile_l * width // 32

@@ -79,7 +79,7 @@ def packed_qk_scores(
     # the rank-1 zero-term correction still needs the outer mask
     zc = flat(kc.zero)[:, None, :]
     if nv is not None:
-        zc = jnp.where(jnp.arange(L)[None, None, :] < nv[:, None, None], zc, 0.0)
+        zc = jnp.where(ref.valid_mask(nv, L, lead=2), zc, 0.0)
     scores = si * flat(kc.scale)[:, None, :] + qsum * zc
     return (scores * sm_scale).reshape(B, H, L)
 
@@ -122,7 +122,7 @@ def packed_weighted_v(
     out = jnp.concatenate(parts, axis=-1)  # [BH, G, Dv] tier order
     # zero-term correction runs outside the kernel -> mask its weights here
     if nv is not None:
-        wf = jnp.where(jnp.arange(L)[None, None, :] < nv[:, None, None], wf, 0.0)
+        wf = jnp.where(ref.valid_mask(nv, L, lead=2), wf, 0.0)
     zterm = jnp.einsum("bgl,bl->bg", wf, flat(vc.zero))[..., None]
     out = out + zterm
     out = out.reshape(B, h_kv, G, -1)

@@ -69,46 +69,51 @@ def _fused_kernel(
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
 
-    q = q_ref[0]  # [G, D] in K-tier channel order
+    # tile skipping: a tile starting at/past this row's valid length is a
+    # flash no-op (scores all NEG_INF -> m_new = m_prev, alpha = 1, p = 0),
+    # so skip the K/V decode, both dot_generals and the softmax update
+    @pl.when(pid * tile_l < n_ref[0, 0])
+    def _live_tile():
+        q = q_ref[0]  # [G, D] in K-tier channel order
 
-    # ---- K: integer scores for this tile --------------------------------
-    si = None
-    for t in range(nk):
-        vals = decode_tier_tile(
-            k_pay[t][0], k_min[t][0], k_shf[t][0], k_widths[t], pack
-        )  # [Ck_t, TL]
-        qs = q[:, k_offs[t] : k_offs[t + 1]]  # [G, Ck_t]
-        d = jax.lax.dot_general(
-            qs, vals, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-        )
-        si = d if si is None else si + d  # [G, TL]
-    qsum = jnp.sum(q, axis=-1, keepdims=True)  # [G, 1]
-    scores = (si * kscale_ref[0][None, :] + qsum * kzero_ref[0][None, :]) * sm_scale
+        # ---- K: integer scores for this tile ------------------------------
+        si = None
+        for t in range(nk):
+            vals = decode_tier_tile(
+                k_pay[t][0], k_min[t][0], k_shf[t][0], k_widths[t], pack
+            )  # [Ck_t, TL]
+            qs = q[:, k_offs[t] : k_offs[t + 1]]  # [G, Ck_t]
+            d = jax.lax.dot_general(
+                qs, vals, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+            )
+            si = d if si is None else si + d  # [G, TL]
+        qsum = jnp.sum(q, axis=-1, keepdims=True)  # [G, 1]
+        scores = (si * kscale_ref[0][None, :] + qsum * kzero_ref[0][None, :]) * sm_scale
 
-    gidx = pid * tile_l + jnp.arange(tile_l)
-    valid = (gidx < n_ref[0, 0]).astype(jnp.float32)[None, :]  # [1, TL]
-    scores = jnp.where(valid > 0, scores, NEG_INF)
+        gidx = pid * tile_l + jnp.arange(tile_l)
+        valid = (gidx < n_ref[0, 0]).astype(jnp.float32)[None, :]  # [1, TL]
+        scores = jnp.where(valid > 0, scores, NEG_INF)
 
-    # ---- online softmax --------------------------------------------------
-    m_prev = m_ref[0]  # [G]
-    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
-    alpha = jnp.exp(m_prev - m_new)  # [G]
-    p = jnp.exp(scores - m_new[:, None]) * valid  # [G, TL]
-    l_ref[0] = l_ref[0] * alpha + jnp.sum(p, axis=-1)
-    m_ref[0] = m_new
+        # ---- online softmax ------------------------------------------------
+        m_prev = m_ref[0]  # [G]
+        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)  # [G]
+        p = jnp.exp(scores - m_new[:, None]) * valid  # [G, TL]
+        l_ref[0] = l_ref[0] * alpha + jnp.sum(p, axis=-1)
+        m_ref[0] = m_new
 
-    # ---- V: weighted accumulation ----------------------------------------
-    ws = p * vscale_ref[0][None, :]  # fold per-token scale into weights
-    acc_ref[0] *= alpha[:, None]
-    for t in range(nv):
-        vals = decode_tier_tile(
-            v_pay[t][0], v_min[t][0], v_shf[t][0], v_widths[t], pack
-        )  # [Cv_t, TL]
-        d = jax.lax.dot_general(
-            ws, vals, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-        )  # [G, Cv_t]
-        acc_ref[0, :, v_offs[t] : v_offs[t + 1]] += d
-    zsum_ref[0] = zsum_ref[0] * alpha + jnp.sum(p * vzero_ref[0][None, :], axis=-1)
+        # ---- V: weighted accumulation --------------------------------------
+        ws = p * vscale_ref[0][None, :]  # fold per-token scale into weights
+        acc_ref[0] *= alpha[:, None]
+        for t in range(nv):
+            vals = decode_tier_tile(
+                v_pay[t][0], v_min[t][0], v_shf[t][0], v_widths[t], pack
+            )  # [Cv_t, TL]
+            d = jax.lax.dot_general(
+                ws, vals, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+            )  # [G, Cv_t]
+            acc_ref[0, :, v_offs[t] : v_offs[t + 1]] += d
+        zsum_ref[0] = zsum_ref[0] * alpha + jnp.sum(p * vzero_ref[0][None, :], axis=-1)
 
 
 def fused_packed_attention(
@@ -135,6 +140,9 @@ def fused_packed_attention(
     G = H // h_kv
     BH = B * h_kv
     L = kc.capacity
+    # bucketed launches can slice the cache below the default tile; clamp so
+    # a small live prefix lowers as a single (smaller) tile
+    tile_l = min(tile_l, L)
     assert L % tile_l == 0 and tile_l % (kc.spec.pack_size * 4) == 0
     nL = L // tile_l
     pack = kc.spec.pack_size

@@ -33,16 +33,26 @@ def _kernel(*refs, width, pack, masked, tile_l):
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
 
-    vals = decode_tier_tile(
-        payload_ref[0], mins_ref[0], shifts_ref[0], width, pack
-    )  # [C, TL]
-    w = w_ref[0]  # [G, TL]
-    if n_ref is not None:
-        gidx = pl.program_id(1) * tile_l + jnp.arange(tile_l)
-        w = jnp.where((gidx < n_ref[0, 0])[None, :], w, 0.0)
-    out_ref[0] += jax.lax.dot_general(
-        w, vals, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-    )
+    tile_start = pl.program_id(1) * tile_l  # outside pl.when (interpret mode)
+
+    def accumulate():
+        vals = decode_tier_tile(
+            payload_ref[0], mins_ref[0], shifts_ref[0], width, pack
+        )  # [C, TL]
+        w = w_ref[0]  # [G, TL]
+        if n_ref is not None:
+            gidx = tile_start + jnp.arange(tile_l)
+            w = jnp.where((gidx < n_ref[0, 0])[None, :], w, 0.0)
+        out_ref[0] += jax.lax.dot_general(
+            w, vals, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    if n_ref is None:
+        accumulate()
+    else:
+        # tile skipping: a fully-masked tile accumulates exactly zero — skip
+        # the decode and both dot_generals (init above still runs at tile 0)
+        pl.when(tile_start < n_ref[0, 0])(accumulate)
 
 
 def vpack_tier_out(
@@ -67,6 +77,7 @@ def vpack_tier_out(
     BH, C, Wl = payload.shape
     G = w.shape[1]
     L = Wl * (32 // width)
+    tile_l = min(tile_l, L)  # bucketed launches may slice below the tile
     assert L % tile_l == 0 and tile_l % (pack_size * 4) == 0
     nL = L // tile_l
     tWl = tile_l * width // 32

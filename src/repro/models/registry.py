@@ -13,6 +13,10 @@ be row-recycled yet — rwkv6/rglru carry recurrent per-layer state):
   prefill_into_slot(params, cfg, pack_cfg, capacity, cache, slot, batch)
       -> (last_logits [1, V], cache with row ``slot`` replaced)
   reset_slot(cache, slot) -> cache with row ``slot`` freed
+  decode_multi(params, cfg, cache, token, active, n_steps, eos_id,
+               t_max=..., backend=..., n_bucket=...)
+      -> (tokens [t_max, B], n_exec, cache) — donated multi-step decode
+      chunk (jit with donate_argnames=("cache",); see transformer.decode_steps)
 """
 from __future__ import annotations
 
@@ -38,6 +42,7 @@ class ModelApi:
     alloc_cache: Callable
     prefill_into_slot: Optional[Callable] = None
     reset_slot: Optional[Callable] = None
+    decode_multi: Optional[Callable] = None
 
     @property
     def supports_slots(self) -> bool:
@@ -70,6 +75,7 @@ def _transformer_api() -> ModelApi:
         alloc_cache=transformer.alloc_cache,
         prefill_into_slot=transformer.prefill_into_slot,
         reset_slot=transformer.reset_cache_slot,
+        decode_multi=transformer.decode_steps,
     )
 
 

@@ -299,8 +299,14 @@ def _rec_block_step(p: dict, cfg: ArchConfig, h: Array, conv_hist: Array, h0: Ar
 
 
 def decode_step(params: dict, cfg: ArchConfig, cache: RGState, token: Array,
-                *, backend: str = "xla"):
-    """One decode token with windowed PackKV attention caches."""
+                *, backend: str = "xla", n_bucket: int | None = None):
+    """One decode token with windowed PackKV attention caches.
+
+    ``n_bucket`` is accepted for registry-signature uniformity and ignored:
+    the windowed ring cache is already bounded at ``cfg.window`` tokens, so
+    there is no dead capacity to slice away.
+    """
+    del n_bucket
     state = cache  # uniform arg name across families (registry contract)
     B = token.shape[0]
     W = cfg.window

@@ -264,8 +264,13 @@ def prefill(params: dict, cfg: ArchConfig, pack_cfg, capacity, batch: dict):
 
 
 def decode_step(params: dict, cfg: ArchConfig, cache: RwkvState, token: Array,
-                *, backend: str = "xla"):
-    """One decode token. token [B, 1] -> (logits [B, V], state)."""
+                *, backend: str = "xla", n_bucket: int | None = None):
+    """One decode token. token [B, 1] -> (logits [B, V], state).
+
+    ``n_bucket`` is accepted for registry-signature uniformity and ignored:
+    recurrent state is O(1) in sequence length — nothing to bucket.
+    """
+    del n_bucket
     state = cache  # uniform arg name across families (registry contract)
     B = token.shape[0]
     D = cfg.d_model

@@ -226,8 +226,14 @@ def reset_cache_slot(cache, slot):
 
 
 def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,
-                *, backend: str = "xla"):
-    """One decode token. token: [B, 1] int32. Returns (logits [B,V], cache)."""
+                *, backend: str = "xla", n_bucket: int | None = None):
+    """One decode token. token: [B, 1] int32. Returns (logits [B,V], cache).
+
+    ``n_bucket`` (STATIC python int): bucketed launch — attention reads only
+    the first ``n_bucket`` tokens of the compressed region (see
+    ``core.cache.bucket_length``). Must upper-bound every row's ``n_comp``
+    AFTER this step's append/flush; None reads the full capacity.
+    """
     h = params["embed"][token] if cfg.input_mode != "frames" else token
     B = h.shape[0]
     # per-row positions (continuous batching: every slot has its own length);
@@ -236,6 +242,7 @@ def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,
     positions = pos[:, None, None]  # broadcasts to [B, H, 1] in RoPE
     sm_scale = 1.0 / (cfg.hd ** 0.5)
 
+    from ..core.cache import slice_compressed
     from ..distributed.sharding import _ACTIVE_MESH as mesh
 
     def _use_cp(cache_l) -> bool:
@@ -255,7 +262,8 @@ def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,
         qd = q[:, :, 0]  # [B, H, Dh]
         if _use_cp(cache_l):
             # context-parallel fused decode (§Perf H1): LSE partial merge
-            # across context shards instead of GSPMD reshards
+            # across context shards instead of GSPMD reshards (the shards
+            # already do length-proportional work per device; no bucketing)
             from ..kernels.sharded import context_parallel_decode_step
 
             attn, cache_l = context_parallel_decode_step(
@@ -263,15 +271,17 @@ def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,
             )
         elif cache_l.cfg.policy == "none":
             cache_l = append_token(cache_l, k, v)
+            read = slice_compressed(cache_l, n_bucket)
             attn = dense_decode_attention(
-                qd, cache_l.raw_k, cache_l.raw_v, cache_l.resid_k, cache_l.resid_v,
-                cache_l.n_comp, cache_l.n_resid, sm_scale,
+                qd, read.raw_k, read.raw_v, read.resid_k, read.resid_v,
+                read.n_comp, read.n_resid, sm_scale,
             )
         else:
             cache_l = append_token(cache_l, k, v)
+            read = slice_compressed(cache_l, n_bucket)
             attn = packed_decode_attention(
-                qd, cache_l.k, cache_l.v, cache_l.resid_k, cache_l.resid_v,
-                cache_l.n_comp, cache_l.n_resid, sm_scale, backend=backend,
+                qd, read.k, read.v, read.resid_k, read.resid_v,
+                read.n_comp, read.n_resid, sm_scale, backend=backend,
             )
         attn = attn.reshape(B, 1, cfg.n_heads * cfg.hd)
         hh = hh + jnp.dot(attn.astype(hh.dtype), layer_params["attn"]["wo"])
@@ -283,3 +293,54 @@ def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,
     h = rmsnorm(h[:, -1:], params["final_ln"])
     logits = jnp.dot(h, params["head"])[:, 0].astype(jnp.float32)
     return logits, cache
+
+
+def decode_steps(params: dict, cfg: ArchConfig, cache, token: Array,
+                 active: Array, n_steps: Array, eos_id: Array,
+                 *, t_max: int, backend: str = "xla",
+                 n_bucket: int | None = None):
+    """Multi-step greedy decode: up to ``t_max`` tokens in ONE jitted call.
+
+    A ``lax.while_loop`` over ``decode_step`` replaces per-token Python
+    dispatch; jit the wrapper with the cache DONATED so each chunk updates
+    the cache buffers in place instead of copying them every token. The
+    loop early-exits once every active row has emitted ``eos_id``.
+
+    token:   [B, 1] i32 — each row's last generated token.
+    active:  bool [B] — occupied slots; free rows ride along with their
+             counters re-zeroed every step (same invariant as
+             ``core.cache.mask_free_slots`` in the per-step path).
+    n_steps: i32 traced, <= t_max (STATIC) — the scheduler picks
+             min(chunk, min over active rows of remaining budget) so no row
+             overshoots its ``max_new``.
+    eos_id:  i32 traced; -1 disables EOS early exit.
+    Returns (tokens i32 [t_max, B] — rows past the exit step are zeros,
+    n_exec i32 — executed steps, cache). Outputs for a row past its own EOS
+    are junk the scheduler discards; rows are independent, so every token
+    up to each row's EOS is bit-identical to step-at-a-time decode.
+    """
+    from ..core.cache import mask_free_slots
+
+    B = token.shape[0]
+    act = jnp.asarray(active, bool)
+    out0 = jnp.zeros((t_max, B), jnp.int32)
+
+    def cond(carry):
+        i, _, _, done, _ = carry
+        return (i < n_steps) & jnp.logical_not(jnp.all(done))
+
+    def body(carry):
+        i, cache, tok, done, out = carry
+        logits, cache = decode_step(
+            params, cfg, cache, tok, backend=backend, n_bucket=n_bucket
+        )
+        nxt = jnp.argmax(logits, -1).astype(jnp.int32)  # [B]
+        out = jax.lax.dynamic_update_slice(out, nxt[None, :], (i, 0))
+        done = done | (nxt == eos_id)
+        cache = mask_free_slots(cache, act)
+        return i + 1, cache, nxt[:, None], done, out
+
+    i, cache, _, _, out = jax.lax.while_loop(
+        cond, body, (jnp.int32(0), cache, token, jnp.logical_not(act), out0)
+    )
+    return out, i, cache

@@ -46,6 +46,11 @@ class EngineConfig:
     backend: str = "xla"  # xla | pallas
     calibrate: bool = True
     calib_tokens: int = 192  # multiple of the 64-token block
+    # length-aware launches (see docs/performance.md):
+    bucketed: bool = True  # slice the compressed region to a live-length bucket
+    bucket_unit: int = 256  # smallest bucket; power-of-two multiples up to capacity
+    decode_chunk: int = 8  # decode steps per donated multi-step launch (1 = per-token)
+    log_launches: bool = False  # keep per-launch telemetry (unbounded; bench only)
 
 
 class Engine:
@@ -66,8 +71,10 @@ class Engine:
             partial(self.api.prefill, cfg=cfg, pack_cfg=self.pack_cfg,
                     capacity=ecfg.capacity)
         )
+        # one compile per launch bucket (bounded: core.cache.bucket_set)
         self._decode = jax.jit(
-            partial(self.api.decode_step, cfg=cfg, backend=ecfg.backend)
+            partial(self.api.decode_step, cfg=cfg, backend=ecfg.backend),
+            static_argnames=("n_bucket",),
         )
         if self.api.supports_slots:
             from ..core.cache import mask_free_slots
@@ -79,6 +86,17 @@ class Engine:
             )
             self._reset = jax.jit(self.api.reset_slot)
             self._mask_free = jax.jit(mask_free_slots)
+        if self.api.decode_multi is not None:
+            # donated multi-step decode: the chunk loop updates the cache
+            # buffers in place (no per-token copy) and one dispatch covers
+            # up to ``decode_chunk`` tokens
+            self._decode_multi = jax.jit(
+                partial(self.api.decode_multi, cfg=cfg, backend=ecfg.backend),
+                static_argnames=("t_max", "n_bucket"),
+                donate_argnames=("cache",),
+            )
+        else:
+            self._decode_multi = None
 
     # -- calibration --------------------------------------------------------
     def _calibrate(self, pack_cfg: PackKVConfig) -> PackKVConfig:
@@ -117,8 +135,37 @@ class Engine:
     def prefill(self, batch: dict):
         return self._prefill(self.params, batch=batch)
 
-    def decode(self, cache, token: Array):
-        return self._decode(self.params, cache=cache, token=token)
+    def decode(self, cache, token: Array, n_bucket: int | None = None):
+        return self._decode(self.params, cache=cache, token=token,
+                            n_bucket=n_bucket)
+
+    def decode_chunk(self, cache, token: Array, active, n_steps: int,
+                     eos_id: int | None, n_bucket: int | None = None):
+        """Donated multi-step decode (see models/*.decode_steps).
+
+        The ``cache`` argument is DONATED: the caller must drop its
+        reference and use the returned cache. Returns
+        (tokens np [t_max, B], n_exec int, cache).
+        """
+        toks, n_exec, cache = self._decode_multi(
+            self.params,
+            cache=cache,
+            token=token,
+            active=jnp.asarray(active, bool),
+            n_steps=jnp.int32(n_steps),
+            eos_id=jnp.int32(-1 if eos_id is None else eos_id),
+            t_max=self.ecfg.decode_chunk,
+            n_bucket=n_bucket,
+        )
+        return np.asarray(toks), int(n_exec), cache
+
+    def bucket_for(self, n_max: int) -> int | None:
+        """Launch bucket covering ``n_max`` compressed tokens (None = full)."""
+        if not self.ecfg.bucketed:
+            return None
+        from ..core.cache import bucket_length
+
+        return bucket_length(n_max, self.ecfg.capacity, self.ecfg.bucket_unit)
 
     def alloc_slot_cache(self):
         """Slot-table decode cache: max_batch rows, per-row counters."""
@@ -172,8 +219,14 @@ class Request:
 class SlotStats:
     """Scheduler telemetry (throughput/occupancy counters)."""
 
+    # per-launch log for length-aware accounting: (steps, bucket tokens
+    # launched per row, live token count per occupied row) — the substrate
+    # for the dead-tile fraction reported by benchmarks/bench_ragged.py.
+    # Grows per launch, so it only fills when EngineConfig.log_launches is on.
+    launches: list = dataclasses.field(default_factory=list)
     n_slots: int = 0
-    decode_steps: int = 0  # batched decode launches
+    decode_steps: int = 0  # decode steps executed (tokens per occupied row)
+    chunk_launches: int = 0  # jitted decode dispatches (== steps when chunk=1)
     occupied_slot_steps: int = 0  # sum over steps of occupied slots
     tokens_out: int = 0  # useful tokens delivered to requests
     admitted: int = 0
@@ -202,6 +255,18 @@ class _Active:
         self.out = [first_tok]
         self.done = (eos_id is not None and first_tok == eos_id) or \
             req.max_new <= 1
+
+    @property
+    def remaining(self) -> int:
+        return self.req.max_new - len(self.out)
+
+    @property
+    def cached_tokens(self) -> int:
+        """Host-side mirror of this row's cache occupancy (n_comp + n_resid).
+
+        The prompt is inserted at prefill; each decode step appends the
+        PREVIOUS token, so the first generated token is not yet cached."""
+        return len(self.req.tokens) + len(self.out) - 1
 
 
 class SlotServer:
@@ -284,33 +349,107 @@ class SlotServer:
                 finished.append(self._retire(i))
         return finished
 
+    def _chunk_plan(self) -> tuple[int, int | None]:
+        """(n_steps, n_bucket) for the next decode launch.
+
+        n_steps = min(decode_chunk, min over occupied rows of remaining
+        budget) — no row can overshoot its ``max_new`` inside a chunk, so
+        retirement stays exact. n_bucket upper-bounds every row's n_comp
+        through the WHOLE chunk via the host-side token counts (n_comp <=
+        cached tokens <= cached_tokens_now + n_steps)."""
+        occupied = [a for a in self.slots if a is not None]
+        n_steps = max(1, min(self.engine.ecfg.decode_chunk,
+                             min(a.remaining for a in occupied)))
+        n_max = max(a.cached_tokens for a in occupied) + n_steps
+        return n_steps, self.engine.bucket_for(n_max)
+
+    def _log_launch(self, n_steps: int, n_bucket: int | None):
+        if not self.engine.ecfg.log_launches:
+            return
+        self.stats.launches.append((
+            n_steps,
+            self.engine.ecfg.capacity if n_bucket is None else n_bucket,
+            [a.cached_tokens for a in self.slots if a is not None],
+        ))
+
     def step(self) -> list[Request]:
-        """Admit + one decode step + retire. Returns requests finished now."""
+        """Admit + one decode launch + retire. Returns requests finished now.
+
+        One launch is a donated multi-step chunk (``decode_chunk`` > 1) or a
+        single decode step; both mask attention to each row's own length and
+        give per-request outputs bit-identical to B=1 ``Engine.generate``.
+        """
         t0 = time.perf_counter()
         finished = self._admit()
         if self.n_occupied:
-            tok = jnp.asarray(self._last_tok[:, None])
-            logits, self.cache = self.engine.decode(self.cache, tok)
-            nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
-            self.stats.decode_steps += 1
-            for i, act in enumerate(self.slots):
-                if act is None:
-                    continue
-                self.stats.occupied_slot_steps += 1
-                t = int(nxt[i])
+            n_steps, n_bucket = self._chunk_plan()
+            if self.engine.ecfg.decode_chunk > 1 and \
+                    self.engine._decode_multi is not None:
+                self._decode_chunk(n_steps, n_bucket, finished)
+            else:
+                self._decode_single(n_bucket, finished)
+        self.stats.wall_s += time.perf_counter() - t0
+        return finished
+
+    def _decode_single(self, n_bucket: int | None, finished: list[Request]):
+        """PR-2 style per-token launch (decode_chunk=1), optionally bucketed."""
+        tok = jnp.asarray(self._last_tok[:, None])
+        logits, self.cache = self.engine.decode(self.cache, tok, n_bucket)
+        nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+        self.stats.decode_steps += 1
+        self.stats.chunk_launches += 1
+        self._log_launch(1, n_bucket)
+        for i, act in enumerate(self.slots):
+            if act is None:
+                continue
+            self.stats.occupied_slot_steps += 1
+            t = int(nxt[i])
+            act.out.append(t)
+            self._last_tok[i] = t
+            self.stats.tokens_out += 1
+            if (self.eos_id is not None and t == self.eos_id) or \
+                    len(act.out) >= act.req.max_new:
+                finished.append(self._retire(i))
+        if self.n_occupied < self.n_slots:
+            # free rows received a junk append this step; re-zero their
+            # counters so free slots stay inert (never flush, never grow)
+            active = jnp.asarray([s is not None for s in self.slots], bool)
+            self.cache = self.engine.mask_free(self.cache, active)
+
+    def _decode_chunk(self, n_steps: int, n_bucket: int | None,
+                      finished: list[Request]):
+        """Donated multi-step launch: up to ``n_steps`` tokens per row.
+
+        Rows that emit EOS mid-chunk keep decoding (their later tokens are
+        junk, discarded here — rows are independent, so other rows are
+        unaffected); the in-graph loop early-exits once ALL rows hit EOS.
+        """
+        active = [a is not None for a in self.slots]
+        toks, n_exec, self.cache = self.engine.decode_chunk(
+            self.cache, jnp.asarray(self._last_tok[:, None]), active,
+            n_steps, self.eos_id, n_bucket,
+        )
+        self.stats.chunk_launches += 1
+        self.stats.decode_steps += n_exec
+        self.stats.occupied_slot_steps += n_exec * self.n_occupied
+        self._log_launch(n_exec, n_bucket)
+        for i, act in enumerate(self.slots):
+            if act is None:
+                continue
+            for s in range(n_exec):
+                t = int(toks[s, i])
                 act.out.append(t)
                 self._last_tok[i] = t
                 self.stats.tokens_out += 1
                 if (self.eos_id is not None and t == self.eos_id) or \
                         len(act.out) >= act.req.max_new:
-                    finished.append(self._retire(i))
-            if self.n_occupied < self.n_slots:
-                # free rows received a junk append this step; re-zero their
-                # counters so free slots stay inert (never flush, never grow)
-                active = jnp.asarray([s is not None for s in self.slots], bool)
-                self.cache = self.engine.mask_free(self.cache, active)
-        self.stats.wall_s += time.perf_counter() - t0
-        return finished
+                    act.done = True
+                    break  # tokens past EOS are junk
+            if act.done:
+                finished.append(self._retire(i))
+        # no trailing mask_free here: decode_steps re-zeroes free-row
+        # counters in-graph every iteration, and _retire resets the rows
+        # freed just now, so the cache already satisfies the invariant
 
     def run(self) -> list[Request]:
         """Drain the queue and all slots; returns every finished request."""

@@ -1,0 +1,224 @@
+"""Length-aware launches: bucketed prefix slicing, in-kernel tile skipping,
+and the donated multi-step scan decode (ISSUE 3).
+
+Invariants:
+  * Attention over a bucket-sliced compressed region is BIT-IDENTICAL to the
+    full-capacity launch at ragged per-row lengths, including the edges
+    n_comp=0, n_comp=capacity, and lengths straddling a bucket boundary
+    (dead tiles are exact flash no-ops: alpha=1, p=0).
+  * Multi-step scan decode emits the same tokens as step-at-a-time decode.
+  * The decode compile count is bounded by the bucket set.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKES
+from repro.core.cache import (
+    PackKVConfig,
+    alloc_layer_cache,
+    bucket_length,
+    bucket_set,
+    calibrate_specs,
+    insert_prefill,
+    slice_compressed,
+)
+from repro.data import synthetic_kv
+from repro.kernels import ops
+from repro.models import get_model
+from repro.serving import Engine, EngineConfig, Request, SlotServer
+
+
+# ---------------------------------------------------------------------------
+# bucket helpers
+# ---------------------------------------------------------------------------
+
+
+def test_bucket_length_properties():
+    cap, unit = 4096, 256
+    for n in (0, 1, 255, 256, 257, 511, 512, 1000, 4095, 4096, 5000):
+        b = bucket_length(n, cap, unit)
+        assert b >= min(n, cap)  # covers the live prefix
+        assert b <= cap
+        assert b == cap or (b % unit == 0 and (b // unit) & (b // unit - 1) == 0)
+    assert bucket_length(0, cap, unit) == unit
+    assert bucket_length(cap, cap, unit) == cap
+    # capacity <= unit: single full-capacity bucket
+    assert bucket_length(10, 128, 256) == 128
+    assert bucket_set(4096, 256) == (256, 512, 1024, 2048, 4096)
+    assert len(bucket_set(4096, 256)) == 5  # log2(4096/256) + 1
+    assert bucket_set(384, 256) == (256, 384)
+
+
+# ---------------------------------------------------------------------------
+# kernel-level: sliced == full capacity, bit-identical
+# ---------------------------------------------------------------------------
+
+
+def _ragged_cache(rng, lengths, B, Hkv, D, L):
+    """Slot-table cache with per-row live lengths (0 = dead row)."""
+    n_src = max(max(lengths), 64)
+    k = jnp.asarray(synthetic_kv(rng, B, Hkv, n_src, D))
+    v = jnp.asarray(synthetic_kv(rng, B, Hkv, n_src, D))
+    cfg = calibrate_specs(k, v, PackKVConfig())
+    cache = alloc_layer_cache(cfg, batch=B, h_kv=Hkv, head_dim=D, capacity=L)
+    for b, n in enumerate(lengths):
+        if n:
+            cache = insert_prefill(cache, b, k[b, :, :n], v[b, :, :n])
+    return cache
+
+
+# per-row lengths chosen to hit: dead row, exactly-one-tile, straddling the
+# 128-bucket boundary (65 -> n_comp 64, resid 1), and full capacity
+@pytest.mark.parametrize("lengths", [(0, 64, 130), (256, 65, 0), (256, 256, 256)])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_bucketed_attention_bit_identical(rng, lengths, backend):
+    B, Hkv, G, D, L = 3, 2, 2, 64, 256
+    cache = _ragged_cache(rng, lengths, B, Hkv, D, L)
+    n_max = int(jnp.max(cache.n_comp))
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)).astype(np.float32))
+    args = lambda c: (q, c.k, c.v, c.resid_k, c.resid_v, c.n_comp, c.n_resid,
+                      0.125)
+    full = ops.packed_decode_attention(*args(cache), backend=backend, tile_l=64)
+    for unit in (64, 128):
+        n_bucket = bucket_length(n_max, L, unit)
+        sliced = slice_compressed(cache, n_bucket)
+        assert sliced.k.capacity == n_bucket
+        got = ops.packed_decode_attention(*args(sliced), backend=backend,
+                                          tile_l=64)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(full))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_bucketed_tier_matvecs_bit_identical(rng, backend):
+    """kpack scores / vpack out over a sliced prefix == the full launch's
+    live columns (tile skipping inside the last bucket included)."""
+    B, Hkv, G, D, L = 2, 2, 2, 64, 512
+    cache = _ragged_cache(rng, (200, 70), B, Hkv, D, L)
+    nv = cache.n_comp  # [192, 64]
+    n_bucket = bucket_length(int(jnp.max(nv)), L, 64)  # 192 live -> 256 bucket
+    assert n_bucket < L
+    sliced = slice_compressed(cache, n_bucket)
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)).astype(np.float32))
+    s_full = ops.packed_qk_scores(q, cache.k, 0.125, n_valid=nv,
+                                  backend=backend, tile_l=64)
+    s_slice = ops.packed_qk_scores(q, sliced.k, 0.125, n_valid=nv,
+                                   backend=backend, tile_l=64)
+    np.testing.assert_array_equal(np.asarray(s_slice),
+                                  np.asarray(s_full[..., :n_bucket]))
+    assert np.abs(np.asarray(s_full[..., n_bucket:])).max() == 0.0
+    w = jax.nn.softmax(
+        jnp.asarray(rng.normal(size=(B, Hkv * G, L)).astype(np.float32)), -1
+    )
+    o_full = ops.packed_weighted_v(w, cache.v, n_valid=nv, backend=backend,
+                                   tile_l=64)
+    o_slice = ops.packed_weighted_v(w[..., :n_bucket], sliced.v, n_valid=nv,
+                                    backend=backend, tile_l=64)
+    np.testing.assert_array_equal(np.asarray(o_slice), np.asarray(o_full))
+
+
+def test_pallas_tile_clamps_to_sliced_capacity(rng):
+    """A bucket below the kernels' default tile_l (256) must lower as one
+    smaller tile, not trip the L % tile_l assert (pallas backend)."""
+    B, Hkv, G, D, L = 2, 2, 2, 64, 512
+    cache = _ragged_cache(rng, (100, 70), B, Hkv, D, L)
+    sliced = slice_compressed(cache, 128)  # < default tile_l
+    q = jnp.asarray(rng.normal(size=(B, Hkv * G, D)).astype(np.float32))
+    args = lambda c: (q, c.k, c.v, c.resid_k, c.resid_v, c.n_comp, c.n_resid,
+                      0.125)
+    full = ops.packed_decode_attention(*args(cache), backend="pallas")
+    got = ops.packed_decode_attention(*args(sliced), backend="pallas")
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(full))
+
+
+def test_slice_compressed_policy_none(rng):
+    cfg = PackKVConfig(policy="none")
+    cache = alloc_layer_cache(cfg, batch=2, h_kv=2, head_dim=32, capacity=256)
+    sliced = slice_compressed(cache, 128)
+    assert sliced.raw_k.shape[-2] == 128 and sliced.raw_v.shape[-2] == 128
+    assert sliced.resid_k.shape == cache.resid_k.shape
+    assert slice_compressed(cache, None) is cache
+    assert slice_compressed(cache, 256) is cache
+
+
+# ---------------------------------------------------------------------------
+# engine-level: scan decode, bucket equivalence, compile counts
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = SMOKES["llama2-7b"]
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _serve(eng, reqs):
+    srv = SlotServer(eng)
+    for r in reqs:
+        srv.submit(r)
+    srv.run()
+    return srv
+
+
+@pytest.mark.parametrize("policy", ["packkv", "none"])
+def test_scan_decode_matches_stepwise(rng, smoke_setup, policy):
+    """decode_chunk=4 (donated while-loop) and decode_chunk=1 (per-token
+    dispatch) produce identical outputs, bucketed and not."""
+    cfg, params = smoke_setup
+    reqs = lambda: [
+        Request(rid=0, max_new=6, tokens=rng2.integers(0, cfg.vocab, 70)),
+        Request(rid=1, max_new=3, tokens=rng2.integers(0, cfg.vocab, 40)),
+        Request(rid=2, max_new=9, tokens=rng2.integers(0, cfg.vocab, 100)),
+    ]
+    outs = []
+    for chunk, bucketed in ((1, False), (4, True), (4, False)):
+        rng2 = np.random.default_rng(3)
+        eng = Engine(cfg, params, PackKVConfig(policy=policy),
+                     EngineConfig(capacity=256, max_batch=2, calib_tokens=128,
+                                  decode_chunk=chunk, bucketed=bucketed,
+                                  bucket_unit=64))
+        srv = _serve(eng, reqs())
+        outs.append({rid: r.output for rid, r in srv.done.items()})
+        if chunk > 1:
+            assert srv.stats.chunk_launches < srv.stats.decode_steps
+    for other in outs[1:]:
+        assert set(other) == set(outs[0])
+        for rid in outs[0]:
+            np.testing.assert_array_equal(other[rid], outs[0][rid])
+
+
+def test_scan_decode_eos_early_exit(rng, smoke_setup):
+    """EOS mid-chunk: output truncated at EOS, slot freed, and the in-graph
+    loop early-exits (fewer decode steps than the full budget)."""
+    cfg, params = smoke_setup
+    eng = Engine(cfg, params, PackKVConfig(policy="none"),
+                 EngineConfig(capacity=256, max_batch=1, calib_tokens=128,
+                              decode_chunk=8, bucket_unit=64))
+    toks = rng.integers(0, cfg.vocab, 40)
+    probe, _ = eng.generate({"tokens": jnp.asarray(toks[None], jnp.int32)}, 4)
+    eos = int(probe[0, 1])
+    srv = SlotServer(eng, eos_id=eos)
+    srv.submit(Request(rid=0, max_new=16, tokens=toks))
+    srv.run()
+    out = srv.done[0].output
+    assert len(out) == 2 and out[-1] == eos
+    assert srv.slots == [None]
+    assert srv.stats.decode_steps < 15  # early exit, not the full budget
+
+
+def test_decode_compile_count_bounded_by_bucket_set(rng, smoke_setup):
+    """One compile per launch bucket: the jit cache of the chunked decode
+    holds at most |bucket_set| executables however many chunks ran."""
+    cfg, params = smoke_setup
+    eng = Engine(cfg, params, PackKVConfig(policy="none"),
+                 EngineConfig(capacity=256, max_batch=2, calib_tokens=128,
+                              decode_chunk=4, bucket_unit=64))
+    buckets = bucket_set(256, 64)
+    assert buckets == (64, 128, 256)
+    reqs = [Request(rid=i, max_new=6, tokens=rng.integers(0, cfg.vocab, p))
+            for i, p in enumerate((30, 40, 70, 100, 130, 200))]
+    srv = _serve(eng, reqs)
+    assert srv.stats.completed == len(reqs)
+    assert eng._decode_multi._cache_size() <= len(buckets)
