@@ -14,6 +14,7 @@ from . import (
     bench_grad_compress,
     bench_k_compression,
     bench_pack_size,
+    bench_paged,
     bench_ragged,
     bench_repacking,
     bench_scaling,
@@ -33,6 +34,7 @@ BENCHES = {
     "beyond_grad_compress": bench_grad_compress.main,
     "beyond_continuous_batching": bench_continuous.main,
     "beyond_ragged_length_aware": bench_ragged.main,
+    "beyond_paged_pool": bench_paged.main,
 }
 
 

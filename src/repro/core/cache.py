@@ -17,6 +17,30 @@ Three policies share one pytree layout so serve_step signatures are uniform:
   * ``none``   — raw bf16 cache (the cuBLAS-equivalent baseline).
   * ``kivi``   — integer quantization only (single tier, no adaptive widths).
   * ``packkv`` — full pipeline (token-wise quant + repack + tiered packing).
+
+The compressed region has two storage modes (``PackKVConfig.paged``):
+
+  * **dense** — per-slot contiguous buffers sized to ``capacity`` (the
+    PR-3 layout; the benchmark baseline). One long request pins
+    ``capacity`` tokens of memory per slot however short the others are.
+  * **paged** — a shared ``PagePool`` of ``page_size``-token physical
+    pages plus a per-slot page table; a slot resident-allocates only
+    ``ceil(n_comp / page_size)`` pages, freed back to the pool the moment
+    the slot retires. Reads reassemble the dense layout bit-identically
+    (``gather_paged``) or index pages in-kernel (paged Pallas kernels),
+    so outputs are IDENTICAL to the dense path — tested in
+    tests/test_paged.py.
+
+Invariants this module maintains (see docs/architecture.md for diagrams):
+  * ``n_comp`` is always block-aligned (``% cfg.block == 0``): tokens enter
+    the compressed region only in whole 64-token blocks.
+  * ``n_resid < cfg.residual`` at rest; a flush fires before the write that
+    would overflow.
+  * free slots have ``n_comp == n_resid == 0`` at rest (``reset_slot`` /
+    ``mask_free_slots``), so their buffer bytes are dead and a free slot
+    holds ZERO pool pages in paged mode.
+  * a slot's live pages are the dense prefix ``page_table[b, :ceil(n_comp
+    / page_size)]``; entries past it are stale but always in-range ids.
 """
 from __future__ import annotations
 
@@ -26,10 +50,11 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
-from ..utils import pytree_dataclass
+from ..utils import cdiv, pytree_dataclass, round_up
 from .quantization import QuantConfig
 from .repacking import median_repack_jnp
 from .tiered import (
+    TierBuffer,
     TierSpec,
     TieredCache,
     alloc_tiered,
@@ -64,6 +89,15 @@ class PackKVConfig:
     # override the frac-based defaults when set.
     k_spec_static: Optional[TierSpec] = None
     v_spec_static: Optional[TierSpec] = None
+    # Paged compressed region (shared page pool + per-slot page tables).
+    # page_size: power-of-two tokens per physical page — a multiple of
+    # ``block`` and of ``4 * pack_size`` so blocks never straddle pages and
+    # page boundaries land on payload-word/pack/shift-byte boundaries.
+    # pool_pages: physical pages in the shared pool (None -> B * capacity /
+    # page_size at alloc time, i.e. no oversubscription).
+    paged: bool = False
+    page_size: int = 256
+    pool_pages: Optional[int] = None
 
     def k_quant(self) -> QuantConfig:
         return QuantConfig(rel_scale=self.k_rel_scale, granularity="token")
@@ -86,9 +120,54 @@ class PackKVConfig:
         return TierSpec.for_head_dim(head_dim, self.v_tiers, self.v_fracs)
 
 
+@pytree_dataclass(meta_fields=("page_size",))
+class PagePool:
+    """Free-list page allocator + per-slot page tables (paged mode only).
+
+    ONE pool instance serves K, V and (policy='none') raw storage of a
+    layer: they append in lock-step, so a single physical page id addresses
+    the K page, the V page and the raw page holding the same
+    ``page_size``-token span. Invariants:
+
+      * ``free[:n_free]`` are exactly the unallocated physical page ids
+        (entries above ``n_free`` are stale pops, never read).
+      * a slot's live pages are the DENSE PREFIX
+        ``page_table[b, :ceil(n_comp[b] / page_size)]``; entries past that
+        prefix are stale but always in-range ids (gathers never go OOB).
+      * a physical page is owned by at most one (slot, logical index):
+        pops hand out unique ids, and a slot's pages return to the stack
+        (``reset_slot`` / re-insert) before the slot is reused.
+      * pool exhaustion is the SCHEDULER's job to prevent (page-reservation
+        admission in ``serving.engine.SlotServer``); in-graph pops clamp
+        their stack reads, so an impossible over-pop corrupts data but
+        never faults.
+    """
+
+    page_table: Array  # i32 [B, max_pages] logical -> physical page id
+    free: Array  # i32 [n_pool_pages] stack of free physical page ids
+    n_free: Array  # i32 [] live stack height
+    page_size: int
+
+    @property
+    def n_pool_pages(self) -> int:
+        return self.free.shape[-1]
+
+    @property
+    def max_pages(self) -> int:
+        return self.page_table.shape[-1]
+
+
 @pytree_dataclass(meta_fields=("cfg",))
 class LayerKVCache:
-    """Per-layer decode cache. ``k``/``v`` are None for policy='none'."""
+    """Per-layer decode cache. ``k``/``v`` are None for policy='none'.
+
+    Dense mode: compressed leaves lead with [B, Hkv] and cover
+    ``capacity`` tokens. Paged mode (``pages`` is not None): compressed
+    leaves are page pools leading with [Hkv, n_pool_pages] covering one
+    page each (see ``tiered.alloc_tiered_pool`` / ``PagePool``); the
+    residual buffer and the per-row counters keep the dense layout either
+    way.
+    """
 
     k: Optional[TieredCache]  # compressed region (channels-major)
     v: Optional[TieredCache]
@@ -99,10 +178,28 @@ class LayerKVCache:
     n_comp: Array  # i32 [B] per-row tokens in compressed/raw region
     n_resid: Array  # i32 [B] per-row tokens in residual buffer
     cfg: PackKVConfig
+    pages: Optional[PagePool] = None  # paged mode: shared K/V/raw page pool
 
     @property
     def capacity(self) -> int:
+        if self.pages is not None:
+            return self.pages.max_pages * self.cfg.page_size
         return self.raw_k.shape[-2] if self.cfg.policy == "none" else self.k.capacity
+
+
+def alloc_page_pool(
+    batch: int, capacity: int, page_size: int, pool_pages: Optional[int] = None
+) -> PagePool:
+    """Fresh pool: every physical page free, tables zeroed (valid ids)."""
+    max_pages = capacity // page_size
+    P = batch * max_pages if pool_pages is None else pool_pages
+    return PagePool(
+        page_table=jnp.zeros((batch, max_pages), jnp.int32),
+        # descending stack so pops hand out 0, 1, 2, ... (deterministic)
+        free=jnp.arange(P - 1, -1, -1, dtype=jnp.int32),
+        n_free=jnp.int32(P),
+        page_size=page_size,
+    )
 
 
 def alloc_layer_cache(
@@ -113,10 +210,37 @@ def alloc_layer_cache(
     capacity: int,
     dtype=jnp.bfloat16,
 ) -> LayerKVCache:
-    """Preallocate a cache with static ``capacity`` (compressed region)."""
+    """Preallocate a cache with static ``capacity`` (compressed region).
+
+    Paged mode resident-allocates ``cfg.pool_pages`` physical pages (default
+    ``batch * capacity / page_size``) instead of ``batch * capacity``
+    tokens; per-slot admission is then bounded by live pages, not worst-case
+    capacity (see serving/engine.py).
+    """
     R = cfg.residual
     resid = jnp.zeros((batch, h_kv, R, head_dim), dtype)
     zero_i = jnp.zeros((batch,), jnp.int32)
+    if cfg.paged:
+        page = cfg.page_size
+        assert page & (page - 1) == 0, f"page_size {page} must be a power of two"
+        assert capacity % page == 0 and page % cfg.block == 0, (capacity, page)
+        pool = alloc_page_pool(batch, capacity, page, cfg.pool_pages)
+        P = pool.n_pool_pages
+        if cfg.policy == "none":
+            raw = jnp.zeros((h_kv, P, page, head_dim), dtype)
+            return LayerKVCache(
+                k=None, v=None, raw_k=raw, raw_v=raw, resid_k=resid,
+                resid_v=resid, n_comp=zero_i, n_resid=zero_i, cfg=cfg,
+                pages=pool,
+            )
+        from .tiered import alloc_tiered_pool
+
+        k = alloc_tiered_pool(batch, h_kv, P, page, cfg.k_spec(head_dim))
+        v = alloc_tiered_pool(batch, h_kv, P, page, cfg.v_spec(head_dim))
+        return LayerKVCache(
+            k=k, v=v, raw_k=None, raw_v=None, resid_k=resid, resid_v=resid,
+            n_comp=zero_i, n_resid=zero_i, cfg=cfg, pages=pool,
+        )
     if cfg.policy == "none":
         raw = jnp.zeros((batch, h_kv, capacity, head_dim), dtype)
         return LayerKVCache(
@@ -291,9 +415,15 @@ def slice_compressed(cache: LayerKVCache, n_bucket: int | None) -> LayerKVCache:
     valid because ``n_bucket >= max(n_comp)`` by construction). Use ONLY
     for reads (attention) — appends must go through the full-capacity
     cache.
+
+    Paged caches return the page-table GATHER of the first ``n_bucket``
+    tokens instead (``gather_paged``) — same dense-layout, read-only
+    contract, so XLA-backed consumers need no paged special case.
     """
     from .tiered import slice_tiered_prefix
 
+    if cache.pages is not None:
+        return gather_paged(cache, n_bucket)
     if n_bucket is None or n_bucket >= cache.capacity:
         return cache
     if cache.cfg.policy == "none":
@@ -332,6 +462,215 @@ def select_rows(mask: Array, new, old):
 
 
 # ---------------------------------------------------------------------------
+# Paged pool primitives (jit-stable free-list ops + page writes/gathers)
+# ---------------------------------------------------------------------------
+
+
+def live_pages(n_comp: Array, page_size: int) -> Array:
+    """Pages resident for ``n_comp`` compressed tokens (ceil division)."""
+    return cdiv(n_comp, page_size)
+
+
+def pool_pop_rows(pool: PagePool, need: Array, lp: Array) -> PagePool:
+    """Pop one page for every row with ``need[b]`` and record it at logical
+    index ``lp[b]`` of that row's table. Rows without ``need`` keep their
+    current entry. Pops are unique (distinct stack positions per row)."""
+    B = need.shape[0]
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1  # position among needers
+    pos = jnp.clip(pool.n_free - 1 - rank, 0, pool.n_pool_pages - 1)
+    phys = pool.free[pos]
+    rows = jnp.arange(B)
+    lp_c = jnp.clip(lp, 0, pool.max_pages - 1)
+    cur = pool.page_table[rows, lp_c]
+    table = pool.page_table.at[rows, lp_c].set(jnp.where(need, phys, cur))
+    n_free = jnp.maximum(pool.n_free - need.astype(jnp.int32).sum(), 0)
+    return dataclasses.replace(pool, page_table=table, n_free=n_free)
+
+
+def pool_pop_prefix(pool: PagePool, slot, k: int) -> tuple[PagePool, Array]:
+    """Pop ``k`` (STATIC) pages and write them to ``page_table[slot, :k]``.
+
+    Returns (pool, phys i32 [k]). Used by prefill-insert, where the page
+    count is static because the prompt length is."""
+    if k > pool.max_pages:  # static: fails at trace time with a clear error
+        raise ValueError(
+            f"prompt needs {k} pages but a slot's table holds "
+            f"{pool.max_pages}; its block-aligned length exceeds the "
+            "compressed capacity — reject upstream (SlotServer.submit does)"
+        )
+    if k == 0:
+        return pool, jnp.zeros((0,), jnp.int32)
+    pos = jnp.clip(pool.n_free - k + jnp.arange(k), 0, pool.n_pool_pages - 1)
+    phys = pool.free[pos]
+    table = jax.lax.dynamic_update_slice(
+        pool.page_table, phys[None, :], (jnp.asarray(slot, jnp.int32), 0)
+    )
+    n_free = jnp.maximum(pool.n_free - k, 0)
+    return dataclasses.replace(pool, page_table=table, n_free=n_free), phys
+
+
+def pool_pop_all_rows(pool: PagePool, k: int) -> tuple[PagePool, Array]:
+    """Pop ``k`` (STATIC) pages for EVERY row (whole-batch prefill).
+
+    Returns (pool, phys i32 [B, k])."""
+    B = pool.page_table.shape[0]
+    if k == 0:
+        return pool, jnp.zeros((B, 0), jnp.int32)
+    total = B * k
+    pos = jnp.clip(pool.n_free - total + jnp.arange(total), 0,
+                   pool.n_pool_pages - 1)
+    phys = pool.free[pos].reshape(B, k)
+    table = pool.page_table.at[:, :k].set(phys)
+    n_free = jnp.maximum(pool.n_free - total, 0)
+    return dataclasses.replace(pool, page_table=table, n_free=n_free), phys
+
+
+def pool_push_row(pool: PagePool, slot, n_pages: Array) -> PagePool:
+    """Return row ``slot``'s first ``n_pages`` (traced) table entries to the
+    free stack. The table row is left stale (entries stay in-range)."""
+    mp = pool.max_pages
+    row = jax.lax.dynamic_slice(
+        pool.page_table, (jnp.asarray(slot, jnp.int32), 0), (1, mp)
+    )[0]
+    ar = jnp.arange(mp)
+    k = jnp.clip(jnp.asarray(n_pages, jnp.int32), 0, mp)
+    # out-of-range positions are dropped, so only k entries actually land
+    pos = jnp.where(ar < k, pool.n_free + ar, pool.n_pool_pages)
+    free = pool.free.at[pos].set(row, mode="drop")
+    return dataclasses.replace(pool, free=free, n_free=pool.n_free + k)
+
+
+def _pool_write_rows(
+    pool_leaf: Array, blk: Array, phys_r: Array, phys_w: Array, off: Array,
+    axis: int = -1,
+) -> Array:
+    """Per-row block write into pool pages (read-modify-write one page/row).
+
+    pool_leaf: [H, P, ...] with ``axis`` covering one page; blk: [B, H, ...]
+    with ``axis`` covering the block; off: i32 [B] element offset inside the
+    page; phys_r: i32 [B] page to read (always in-range); phys_w: i32 [B]
+    page to write — set masked rows to ``P`` so the scatter DROPS them
+    (writing back the unmodified page would race with the owning row)."""
+    cur = jnp.moveaxis(pool_leaf[:, phys_r], 0, 1)  # [B, H, ...]
+    upd = jax.vmap(
+        lambda c, b, o: jax.lax.dynamic_update_slice_in_dim(
+            c, b.astype(c.dtype), o, axis=axis
+        )
+    )(cur, blk, off)
+    return pool_leaf.at[:, phys_w].set(jnp.moveaxis(upd, 0, 1), mode="drop")
+
+
+def _pool_write_tiered(
+    pool_tc: TieredCache, blk: TieredCache, phys_r: Array, phys_w: Array,
+    wo: Array,
+) -> TieredCache:
+    """Write per-row 64-token blocks into a tiered page pool at within-page
+    token offset ``wo`` (i32 [B], block-aligned so packs/shift bytes land on
+    exact boundaries: wo % block == 0, block % (4*pack) == 0)."""
+    spec = pool_tc.spec
+    tiers = []
+    for t, b in zip(pool_tc.tiers, blk.tiers):
+        w = t.width
+        payload = (
+            _pool_write_rows(t.payload, b.payload, phys_r, phys_w, wo * w // 32)
+            if w else t.payload
+        )
+        mins = _pool_write_rows(t.mins, b.mins, phys_r, phys_w,
+                                wo // spec.pack_size)
+        shifts = _pool_write_rows(t.shifts, b.shifts, phys_r, phys_w,
+                                  wo // spec.pack_size // 4)
+        tiers.append(TierBuffer(payload=payload, mins=mins, shifts=shifts,
+                                width=w, pack_size=t.pack_size))
+    return dataclasses.replace(
+        pool_tc,
+        tiers=tuple(tiers),
+        scale=_pool_write_rows(pool_tc.scale, blk.scale, phys_r, phys_w, wo),
+        zero=_pool_write_rows(pool_tc.zero, blk.zero, phys_r, phys_w, wo),
+    )
+
+
+def _scatter_pages(pool_leaf: Array, blk: Array, phys: Array,
+                   axis: int = -1) -> Array:
+    """Scatter whole pages of a dense block into the pool.
+
+    pool_leaf: [H, P, ...] with ``axis`` covering one page (``u`` units);
+    blk: [B, H, ...] with ``axis`` covering up to ``k*u`` units (padded with
+    zeros up to the page boundary); phys: i32 [B, k] target pages."""
+    B, k = phys.shape
+    ax = axis % blk.ndim
+    u = pool_leaf.shape[axis % pool_leaf.ndim]
+    pad = k * u - blk.shape[ax]
+    if pad:
+        widths = [(0, 0)] * blk.ndim
+        widths[ax] = (0, pad)
+        blk = jnp.pad(blk, widths)
+    shape = blk.shape[:ax] + (k, u) + blk.shape[ax + 1:]
+    x = blk.reshape(shape)  # [B, H, ..., k, u, ...]
+    x = jnp.moveaxis(x, ax, 1)  # [B, k, H, ..., u, ...]
+    x = x.reshape(B * k, *x.shape[2:])  # [B*k, H, ..., u, ...]
+    x = jnp.moveaxis(x, 0, 1)  # [H, B*k, ..., u, ...]
+    return pool_leaf.at[:, phys.reshape(-1)].set(
+        x.astype(pool_leaf.dtype), mode="drop"
+    )
+
+
+def _scatter_pages_tiered(pool_tc: TieredCache, blk: TieredCache,
+                          phys: Array) -> TieredCache:
+    """Scatter a dense-layout compressed block (capacity <= k * page_size)
+    into ``k`` pool pages per row. ``chan_perm`` is NOT touched (per-slot
+    metadata; callers set it explicitly)."""
+    tiers = tuple(
+        TierBuffer(
+            payload=_scatter_pages(pt.payload, bt.payload, phys),
+            mins=_scatter_pages(pt.mins, bt.mins, phys),
+            shifts=_scatter_pages(pt.shifts, bt.shifts, phys),
+            width=pt.width,
+            pack_size=pt.pack_size,
+        )
+        for pt, bt in zip(pool_tc.tiers, blk.tiers)
+    )
+    return dataclasses.replace(
+        pool_tc,
+        tiers=tiers,
+        scale=_scatter_pages(pool_tc.scale, blk.scale, phys),
+        zero=_scatter_pages(pool_tc.zero, blk.zero, phys),
+    )
+
+
+def gather_paged(cache: LayerKVCache, n_bucket: int | None = None) -> LayerKVCache:
+    """Dense read view of a paged cache: gather the first ``n_bucket``
+    tokens' pages of every slot through its page table (the XLA hot path;
+    the paged Pallas kernels index the pool in-kernel instead).
+
+    Returns a dense-layout LayerKVCache (``pages=None``) of compressed
+    capacity ``n_bucket`` (full capacity when None), bit-identical on every
+    live byte to what the dense storage mode would hold. Read-only — like
+    ``slice_compressed``, appends must go through the paged cache."""
+    assert cache.pages is not None
+    page = cache.cfg.page_size
+    n = cache.capacity if n_bucket is None else min(n_bucket, cache.capacity)
+    assert n % page == 0, (n, page)
+    idx = cache.pages.page_table[:, : n // page]
+    if cache.cfg.policy == "none":
+        from .tiered import gather_pool_leaf
+
+        return dataclasses.replace(
+            cache,
+            raw_k=gather_pool_leaf(cache.raw_k, idx, token_axis=-2),
+            raw_v=gather_pool_leaf(cache.raw_v, idx, token_axis=-2),
+            pages=None,
+        )
+    from .tiered import gather_tiered_pages
+
+    return dataclasses.replace(
+        cache,
+        k=gather_tiered_pages(cache.k, idx),
+        v=gather_tiered_pages(cache.v, idx),
+        pages=None,
+    )
+
+
+# ---------------------------------------------------------------------------
 # Cache update ops
 # ---------------------------------------------------------------------------
 
@@ -346,6 +685,8 @@ def prefill_cache(cache: LayerKVCache, k: Array, v: Array) -> LayerKVCache:
     B, H, L, D = k.shape
     n_blocks = L // cfg.block
     Lb = n_blocks * cfg.block
+    if cache.pages is not None:
+        return _prefill_cache_paged(cache, k, v, Lb)
     if cfg.policy == "none":
         raw_k = jax.lax.dynamic_update_slice_in_dim(
             cache.raw_k, k[..., :Lb, :].astype(cache.raw_k.dtype), 0, axis=-2
@@ -382,6 +723,101 @@ def prefill_cache(cache: LayerKVCache, k: Array, v: Array) -> LayerKVCache:
     )
 
 
+def _prefill_cache_paged(cache: LayerKVCache, k: Array, v: Array,
+                         Lb: int) -> LayerKVCache:
+    """Whole-batch prefill into a paged cache: every row pops
+    ``ceil(Lb / page_size)`` pages and its compressed blocks are scattered
+    page-by-page. Identical compression math to the dense path — only the
+    placement differs, so the gathered view is bit-identical."""
+    cfg = cache.cfg
+    page = cfg.page_size
+    B = k.shape[0]
+    k_pg = cdiv(Lb, page)
+    if B * k_pg > cache.pages.n_pool_pages:  # static: fails at trace time
+        raise ValueError(
+            f"whole-batch paged prefill needs {B * k_pg} pages but the pool "
+            f"has {cache.pages.n_pool_pages}; an oversubscribed pool must "
+            "admit through insert_prefill (page-reservation scheduling), "
+            "not batch prefill"
+        )
+    pool, phys = pool_pop_all_rows(cache.pages, k_pg)
+    new = dataclasses.replace(cache, pages=pool)
+    if k_pg:
+        if cfg.policy == "none":
+            new = dataclasses.replace(
+                new,
+                raw_k=_scatter_pages(cache.raw_k, k[..., :Lb, :], phys, axis=-2),
+                raw_v=_scatter_pages(cache.raw_v, v[..., :Lb, :], phys, axis=-2),
+            )
+        else:
+            k_perm, v_perm = calibrate_channel_tiers(
+                k[..., :Lb, :], v[..., :Lb, :], cfg
+            )
+            kc, vc = compress_block(k[..., :Lb, :], v[..., :Lb, :], cfg,
+                                    k_perm, v_perm)
+            new_k = _scatter_pages_tiered(cache.k, kc, phys)
+            new_v = _scatter_pages_tiered(cache.v, vc, phys)
+            new = dataclasses.replace(
+                new,
+                k=dataclasses.replace(new_k, chan_perm=k_perm),
+                v=dataclasses.replace(new_v, chan_perm=v_perm),
+            )
+    rem = k.shape[-2] - Lb
+    resid_k, resid_v = cache.resid_k, cache.resid_v
+    if rem:
+        resid_k = jax.lax.dynamic_update_slice_in_dim(
+            resid_k, k[..., Lb:, :].astype(resid_k.dtype), 0, axis=-2
+        )
+        resid_v = jax.lax.dynamic_update_slice_in_dim(
+            resid_v, v[..., Lb:, :].astype(resid_v.dtype), 0, axis=-2
+        )
+    return dataclasses.replace(
+        new,
+        resid_k=resid_k,
+        resid_v=resid_v,
+        n_comp=jnp.full((B,), Lb, jnp.int32),
+        n_resid=jnp.full((B,), rem, jnp.int32),
+    )
+
+
+def _flush_paged(c: LayerKVCache, need: Array, blk_k: Array,
+                 blk_v: Array) -> LayerKVCache:
+    """Page-granular flush: rows in ``need`` compress their oldest block and
+    write it into their current page at ``n_comp % page_size``; rows landing
+    on a page boundary pop a fresh page first. Masked rows route their page
+    write out of range (dropped) so they never race a live page.
+
+    Rows at capacity NEVER flush (the dense path would overwrite its own
+    last block — contained; here an over-cap flush would pop a page the
+    scheduler's reservation ledger never counted, so the cap is what makes
+    ``ceil(min(capacity, prompt + max_new) / page_size)`` a true upper
+    bound on a slot's pages). Such a row's newest residual token degrades
+    instead; reject requests beyond ``capacity + residual`` upstream.
+    """
+    cfg = c.cfg
+    page = cfg.page_size
+    lp = c.n_comp // page  # logical page the block lands in
+    wo = c.n_comp % page  # within-page token offset (block-aligned)
+    pool = pool_pop_rows(c.pages, need & (wo == 0), lp)
+    rows = jnp.arange(need.shape[0])
+    phys = pool.page_table[rows, jnp.clip(lp, 0, pool.max_pages - 1)]
+    phys_w = jnp.where(need, phys, pool.n_pool_pages)  # mask -> dropped
+    if cfg.policy == "none":
+        return dataclasses.replace(
+            c,
+            pages=pool,
+            raw_k=_pool_write_rows(c.raw_k, blk_k, phys, phys_w, wo, axis=-2),
+            raw_v=_pool_write_rows(c.raw_v, blk_v, phys, phys_w, wo, axis=-2),
+        )
+    kc, vc = compress_block(blk_k, blk_v, cfg, c.k.chan_perm, c.v.chan_perm)
+    return dataclasses.replace(
+        c,
+        pages=pool,
+        k=_pool_write_tiered(c.k, kc, phys, phys_w, wo),
+        v=_pool_write_tiered(c.v, vc, phys, phys_w, wo),
+    )
+
+
 def append_token(
     cache: LayerKVCache, k_new: Array, v_new: Array, ring: bool = False
 ) -> LayerKVCache:
@@ -413,7 +849,15 @@ def append_token(
         blk_k = c.resid_k[..., : cfg.block, :]
         blk_v = c.resid_v[..., : cfg.block, :]
         off = (c.n_comp % capacity) if ring else c.n_comp
-        if cfg.policy == "none":
+        if c.pages is not None:
+            assert not ring, "paged storage has no ring (sliding-window) mode"
+            # cap at capacity: an over-cap flush would pop a page the
+            # scheduler's reservation ledger never counted (see
+            # _flush_paged); the capped row's counters must not advance
+            # either, so the guard applies to the whole flush
+            need = need & (c.n_comp + cfg.block <= capacity)
+            c = _flush_paged(c, need, blk_k, blk_v)
+        elif cfg.policy == "none":
             raw_k = row_update_tokens(c.raw_k, blk_k, off)
             raw_v = row_update_tokens(c.raw_v, blk_v, off)
             c = dataclasses.replace(
@@ -456,14 +900,33 @@ def reset_slot(cache: LayerKVCache, slot) -> LayerKVCache:
 
     Buffer contents are left in place — they are dead bytes (all reads mask
     with the counters) and the next ``insert_prefill`` overwrites the whole
-    row. Works on a single-layer cache ([B] counters) and on a stacked
-    cache pytree ([n_layers, B] counters — the slot is always the last
-    counter axis). ``slot`` may be traced.
+    row. In paged mode the row's live pages are pushed back to the free
+    stack first (a freed slot holds ZERO pool pages). Works on a
+    single-layer cache ([B] counters) and on a stacked cache pytree
+    ([n_layers, B] counters — the slot is always the last counter axis).
+    ``slot`` may be traced.
     """
+    if cache.pages is not None:
+        if cache.n_comp.ndim == 2:  # stacked [n_layers, B]
+            return jax.vmap(lambda c: _reset_slot_paged(c, slot))(cache)
+        return _reset_slot_paged(cache, slot)
     return dataclasses.replace(
         cache,
         n_comp=cache.n_comp.at[..., slot].set(0),
         n_resid=cache.n_resid.at[..., slot].set(0),
+    )
+
+
+def _reset_slot_paged(cache: LayerKVCache, slot) -> LayerKVCache:
+    pool = pool_push_row(
+        cache.pages, slot,
+        live_pages(cache.n_comp[slot], cache.cfg.page_size),
+    )
+    return dataclasses.replace(
+        cache,
+        pages=pool,
+        n_comp=cache.n_comp.at[slot].set(0),
+        n_resid=cache.n_resid.at[slot].set(0),
     )
 
 
@@ -509,12 +972,104 @@ def insert_prefill(cache: LayerKVCache, slot, k: Array, v: Array) -> LayerKVCach
     others keep decoding. Calibration (channel->tier permutation) runs on
     this sequence's own prefill, exactly as a batch-size-1 ``prefill_cache``
     would — per-row outputs stay bit-identical to an independent B=1 run.
+
+    Paged mode: the prompt is compressed through a DENSE mini-cache sized to
+    the prompt (identical math, so identical bytes), then scattered into
+    freshly-popped pool pages (``insert_row_paged``).
     """
     if k.ndim == 3:
         k, v = k[None], v[None]
     cfg = cache.cfg
     h_kv, _, head_dim = k.shape[-3], k.shape[-2], k.shape[-1]
+    if cache.pages is not None:
+        dense_cfg, cap_mini, n_pages = paged_mini_spec(cfg, k.shape[-2])
+        sub = alloc_layer_cache(dense_cfg, 1, h_kv, head_dim, cap_mini,
+                                dtype=cache.resid_k.dtype)
+        sub = prefill_cache(sub, k, v)
+        return insert_row_paged(cache, slot, sub, n_pages)
     sub = alloc_layer_cache(cfg, 1, h_kv, head_dim, cache.capacity,
                             dtype=cache.resid_k.dtype)
     sub = prefill_cache(sub, k, v)
     return insert_row(cache, slot, sub)
+
+
+def paged_mini_spec(cfg: PackKVConfig, L: int) -> tuple[PackKVConfig, int, int]:
+    """(dense_cfg, cap_mini, n_pages) for admitting an ``L``-token prompt
+    into a paged cache through a dense mini-cache.
+
+    The mini capacity MUST equal ``n_pages`` whole pages (when any block
+    compresses) so the page scatter's zero-padding lines up — keep every
+    caller on this one helper.
+    """
+    Lb = (L // cfg.block) * cfg.block
+    cap_mini = max(cfg.page_size, round_up(Lb, cfg.page_size))
+    return (
+        dataclasses.replace(cfg, paged=False),
+        cap_mini,
+        cdiv(Lb, cfg.page_size),
+    )
+
+
+def insert_row_paged(cache: LayerKVCache, slot, row: LayerKVCache,
+                     n_pages: int) -> LayerKVCache:
+    """Scatter a DENSE single-row cache into row ``slot`` of a paged cache.
+
+    ``row`` is a dense-layout batch-1 cache (e.g. a prompt compressed by a
+    B=1 ``prefill_cache``) whose compressed capacity is ``n_pages`` whole
+    pages (STATIC — derived from the static prompt length). The slot's old
+    pages go back to the free stack, ``n_pages`` fresh ones are popped, and
+    the row's compressed bytes land in them page-by-page; residual buffer,
+    counters and ``chan_perm`` are scattered slot-wise. Works on flat and
+    stacked ([n_layers, ...]) caches; ``slot`` may be traced.
+    """
+    if cache.n_comp.ndim == 2:  # stacked: identical op per layer
+        return jax.vmap(
+            lambda c, r: _insert_row_paged(c, slot, r, n_pages)
+        )(cache, row)
+    return _insert_row_paged(cache, slot, row, n_pages)
+
+
+def _insert_row_paged(cache: LayerKVCache, slot, row: LayerKVCache,
+                      n_pages: int) -> LayerKVCache:
+    cfg = cache.cfg
+    # 1) free whatever the slot held (no-op for a reset/fresh slot)
+    pool = pool_push_row(
+        cache.pages, slot, live_pages(cache.n_comp[slot], cfg.page_size)
+    )
+    # 2) pop the prompt's pages into the table row's dense prefix
+    pool, phys = pool_pop_prefix(pool, slot, n_pages)
+    new = dataclasses.replace(cache, pages=pool)
+    # 3) scatter the compressed bytes into the popped pages
+    if n_pages:
+        if cfg.policy == "none":
+            new = dataclasses.replace(
+                new,
+                raw_k=_scatter_pages(cache.raw_k, row.raw_k, phys[None],
+                                     axis=-2),
+                raw_v=_scatter_pages(cache.raw_v, row.raw_v, phys[None],
+                                     axis=-2),
+            )
+        else:
+            new = dataclasses.replace(
+                new,
+                k=_scatter_pages_tiered(cache.k, row.k, phys[None]),
+                v=_scatter_pages_tiered(cache.v, row.v, phys[None]),
+            )
+    # 4) per-slot metadata: channel permutation, residual, counters
+    if cfg.policy != "none":
+        new = dataclasses.replace(
+            new,
+            k=dataclasses.replace(
+                new.k, chan_perm=new.k.chan_perm.at[slot].set(row.k.chan_perm[0])
+            ),
+            v=dataclasses.replace(
+                new.v, chan_perm=new.v.chan_perm.at[slot].set(row.v.chan_perm[0])
+            ),
+        )
+    return dataclasses.replace(
+        new,
+        resid_k=new.resid_k.at[slot].set(row.resid_k[0].astype(new.resid_k.dtype)),
+        resid_v=new.resid_v.at[slot].set(row.resid_v[0].astype(new.resid_v.dtype)),
+        n_comp=new.n_comp.at[slot].set(row.n_comp[0]),
+        n_resid=new.n_resid.at[slot].set(row.n_resid[0]),
+    )

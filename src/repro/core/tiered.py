@@ -27,6 +27,25 @@ mat-vec access pattern, so no transpose is ever materialized):
 Per-token quantization metadata (scale, zero — fp32 here, counted as fp16 in
 CR accounting) lives next to the buffers and is folded into the mat-vec
 (see kernels/ref.py) rather than applied during decompression.
+
+Two physical layouts share the ``TieredCache`` container (normative spec in
+docs/formats.md):
+
+* **Dense** (the default): every buffer leads with ``[..., B, H_kv]`` and
+  the token axis covers the full ``capacity``; slot ``b`` owns row ``b``.
+* **Paged pool** (``alloc_tiered_pool``): payload/mins/shifts/scale/zero
+  lead with ``[H_kv, n_pool_pages]`` and the token axis covers ONE page;
+  slots address pages through a ``core.cache.PagePool`` table, and
+  ``gather_tiered_pages`` reassembles the dense layout bit-identically
+  (pages are multiples of ``4 * pack_size`` tokens, so payload words, pack
+  metadata and shift bytes all split on exact page boundaries).
+
+Invariants relied on by every consumer: the token axis is pack-aligned
+(``capacity % pack_size == 0``); ``chan_perm`` is always per-slot
+``[..., B, H_kv, D]`` (calibration is per-request — even the paged pool
+keeps it slot-major); pack ``mins`` saturate to int8 instead of wrapping
+(``pack_tier``), so a decoded value is always within one clamp of the
+quantizer output.
 """
 from __future__ import annotations
 
@@ -402,6 +421,85 @@ def slice_tiered_prefix(cache: TieredCache, n: int) -> TieredCache:
         scale=cache.scale[..., :n],
         zero=cache.zero[..., :n],
         spec=spec,
+    )
+
+
+def alloc_tiered_pool(
+    batch: int, h_kv: int, n_pool_pages: int, page_size: int, spec: TierSpec
+) -> TieredCache:
+    """Preallocate a PAGE-POOL TieredCache (see module docstring).
+
+    Data leaves lead with ``[H_kv, n_pool_pages]`` and their token axis
+    covers one ``page_size``-token page; ``chan_perm`` stays per-slot
+    ``[batch, H_kv, D]``. Physical page ``p`` of every leaf holds the same
+    ``page_size`` tokens of whichever slot owns ``p`` in the page table.
+    """
+    assert page_size % (4 * spec.pack_size) == 0, (page_size, spec.pack_size)
+    P = page_size // spec.pack_size
+    tiers = tuple(
+        TierBuffer(
+            payload=jnp.zeros(
+                (h_kv, n_pool_pages, c, spec.payload_words(i, page_size)),
+                jnp.uint32,
+            ),
+            mins=jnp.zeros((h_kv, n_pool_pages, c, P), jnp.int8),
+            shifts=jnp.zeros((h_kv, n_pool_pages, c, cdiv(P, 4)), jnp.uint8),
+            width=w,
+            pack_size=spec.pack_size,
+        )
+        for i, (w, c) in enumerate(zip(spec.widths, spec.counts))
+    )
+    D = spec.head_dim
+    return TieredCache(
+        tiers=tiers,
+        chan_perm=jnp.broadcast_to(jnp.arange(D, dtype=jnp.int32), (batch, h_kv, D)),
+        scale=jnp.ones((h_kv, n_pool_pages, page_size), jnp.float32),
+        zero=jnp.zeros((h_kv, n_pool_pages, page_size), jnp.float32),
+        spec=spec,
+    )
+
+
+def gather_pool_leaf(leaf: Array, idx: Array, token_axis: int = -1) -> Array:
+    """Gather pool pages into the dense layout along the token axis.
+
+    leaf: ``[H_kv, n_pool_pages, ...]`` pool buffer whose ``token_axis``
+    covers one page; idx: i32 ``[B, k]`` physical page ids (a page-table
+    prefix). Returns ``[B, H_kv, ...]`` with the token axis covering
+    ``k * page_units`` — the dense layout the kernels consume.
+    """
+    x = leaf[:, idx]  # [H, B, k, ...]
+    ta = (token_axis % leaf.ndim) + 1  # token axis position within x
+    x = jnp.moveaxis(x, (1, 0, 2), (0, 1, ta - 1))  # [B, H, ..., k, units, ...]
+    return x.reshape(*x.shape[: ta - 1], x.shape[ta - 1] * x.shape[ta], *x.shape[ta + 1 :])
+
+
+def gather_tiered_pages(pool: TieredCache, idx: Array) -> TieredCache:
+    """Page-table gather: pool layout -> dense layout (the XLA read path).
+
+    pool: paged-layout TieredCache; idx: i32 [B, k] page-table prefix.
+    Returns a dense TieredCache of capacity ``k * page_size`` whose live
+    bytes are bit-identical to a dense cache holding the same tokens (page
+    boundaries land on payload-word / pack / shift-byte boundaries by the
+    ``4 * pack_size`` page alignment). Entries of ``idx`` past a row's live
+    pages are stale-but-valid ids, so the gather stays in-range and the
+    garbage columns are masked by ``n_comp`` downstream.
+    """
+    tiers = tuple(
+        TierBuffer(
+            payload=gather_pool_leaf(t.payload, idx),
+            mins=gather_pool_leaf(t.mins, idx),
+            shifts=gather_pool_leaf(t.shifts, idx),
+            width=t.width,
+            pack_size=t.pack_size,
+        )
+        for t in pool.tiers
+    )
+    return TieredCache(
+        tiers=tiers,
+        chan_perm=pool.chan_perm,
+        scale=gather_pool_leaf(pool.scale, idx),
+        zero=gather_pool_leaf(pool.zero, idx),
+        spec=pool.spec,
     )
 
 

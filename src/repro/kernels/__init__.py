@@ -8,5 +8,8 @@ from .ops import (  # noqa: F401
     merge_partials,
     packed_decode_attention,
     packed_qk_scores,
+    packed_qk_scores_paged,
     packed_weighted_v,
+    packed_weighted_v_paged,
+    paged_decode_attention,
 )

@@ -18,7 +18,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .pallas_utils import tpu_params
+from .pallas_utils import (
+    load_page_id,
+    load_tier_pool_tile,
+    page_table_spec,
+    pool_block_spec,
+    tpu_params,
+)
 from .unpack import decode_tier_tile
 
 Array = jax.Array
@@ -111,3 +117,88 @@ def kpack_tier_scores(
         interpret=interpret,
         **tpu_params(("parallel", "parallel"), interpret),
     )(*args)
+
+
+def _paged_kernel(payload_ref, mins_ref, shifts_ref, q_ref, n_ref, tab_ref,
+                  out_ref, *, width, pack, tile_l, tiles_per_page):
+    """Paged tier scores: each grid step resolves one context tile's
+    physical page through the page table (see packed_attention.py for the
+    whole-pool-ref interpret-mode caveat)."""
+    pid = pl.program_id(1)  # outside pl.when (interpret mode)
+    tile_start = pid * tile_l
+    lp = pid // tiles_per_page
+    toff = pid % tiles_per_page
+
+    def compute():
+        phys = load_page_id(tab_ref, lp)
+        vals = decode_tier_tile(
+            *load_tier_pool_tile(payload_ref, mins_ref, shifts_ref, phys,
+                                 toff, tile_l, width, pack),
+            width, pack,
+        )  # [C, TL] f32
+        out = jax.lax.dot_general(
+            q_ref[0], vals, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        gidx = tile_start + jnp.arange(tile_l)
+        out_ref[0] = jnp.where((gidx < n_ref[0, 0])[None, :], out, 0.0)
+
+    # tile skipping: dead tiles never resolve their page id
+    live = tile_start < n_ref[0, 0]
+    pl.when(live)(compute)
+    pl.when(jnp.logical_not(live))(
+        lambda: out_ref.__setitem__(..., jnp.zeros_like(out_ref))
+    )
+
+
+def kpack_tier_scores_paged(
+    payload: Array,
+    mins: Array,
+    shifts: Array,
+    q: Array,
+    page_table: Array,
+    n_valid: Array,
+    n_tokens: int,
+    *,
+    width: int,
+    pack_size: int,
+    page_size: int,
+    tile_l: int = DEFAULT_TILE_L,
+    interpret: bool = True,
+) -> Array:
+    """One tier's integer scores over a PAGED pool.
+
+    payload: u32 [H_kv, n_pool_pages, C, page*width/32] (mins/shifts pool
+    layout likewise); q: f32 [BH, G, C]; page_table: i32 [B, max_pages];
+    n_valid: i32 [BH] per-row valid lengths (paged rows are always ragged);
+    n_tokens: STATIC bucket (multiple of ``page_size``).
+    Returns si f32 [BH, G, n_tokens] — bit-identical to ``kpack_tier_scores``
+    on the gathered dense view.
+    """
+    h_kv, P = payload.shape[0], payload.shape[1]
+    BH, G, C = q.shape
+    tile_l = min(tile_l, page_size)
+    assert page_size % tile_l == 0 and tile_l % (pack_size * 4) == 0
+    assert n_tokens % page_size == 0 and n_tokens >= page_size
+    n_pg = n_tokens // page_size
+    tpp = page_size // tile_l
+
+    in_specs = [
+        pool_block_spec(payload, h_kv),
+        pool_block_spec(mins, h_kv),
+        pool_block_spec(shifts, h_kv),
+        pl.BlockSpec((1, G, C), lambda b, l: (b, 0, 0)),
+        pl.BlockSpec((1, 1), lambda b, l: (b, 0)),
+        page_table_spec(n_pg, h_kv),
+    ]
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, width=width, pack=pack_size,
+                          tile_l=tile_l, tiles_per_page=tpp),
+        grid=(BH, n_pg * tpp),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, G, tile_l), lambda b, l: (b, 0, l)),
+        out_shape=jax.ShapeDtypeStruct((BH, G, n_tokens), jnp.float32),
+        interpret=interpret,
+        **tpu_params(("parallel", "parallel"), interpret),
+    )(payload, mins, shifts, q,
+      n_valid.astype(jnp.int32).reshape(BH, 1), page_table[:, :n_pg])

@@ -13,11 +13,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..core.tiered import TieredCache, chan_inverse_perm
+from ..core.tiered import TieredCache, chan_inverse_perm, gather_pool_leaf
 from . import ref
-from .kpack_matvec import kpack_tier_scores
-from .packed_attention import fused_packed_attention
-from .vpack_matvec import vpack_tier_out
+from .kpack_matvec import kpack_tier_scores, kpack_tier_scores_paged
+from .packed_attention import fused_packed_attention, fused_packed_attention_paged
+from .vpack_matvec import vpack_tier_out, vpack_tier_out_paged
 
 Array = jax.Array
 
@@ -131,6 +131,107 @@ def packed_weighted_v(
     return out.reshape(B, H, -1)
 
 
+def packed_qk_scores_paged(
+    q: Array,
+    kc: TieredCache,
+    pages,
+    n_tokens: int,
+    sm_scale: float = 1.0,
+    *,
+    n_valid: Array,
+    backend: str = "xla",
+    tile_l: int = 256,
+    interpret: bool = True,
+) -> Array:
+    """``packed_qk_scores`` over a PAGED K cache.
+
+    kc: pool-layout TieredCache; pages: core.cache.PagePool; n_tokens:
+    STATIC bucket (multiple of the page size). The xla backend gathers the
+    live pages into the dense layout first; the pallas backend resolves
+    each context tile's physical page inside the kernel. Returns scores
+    f32 [B, H, n_tokens], bit-identical across the two routes.
+    """
+    B, H, D = q.shape
+    h_kv = kc.scale.shape[0]
+    idx = pages.page_table[:, : n_tokens // pages.page_size]
+    if backend == "xla":
+        from ..core.tiered import gather_tiered_pages
+
+        return packed_qk_scores(
+            q, gather_tiered_pages(kc, idx), sm_scale, n_valid=n_valid,
+            backend="xla",
+        )
+    G = H // h_kv
+    BH = B * h_kv
+    qg = q.astype(jnp.float32).reshape(B, h_kv, G, D)
+    qp = jnp.take_along_axis(qg, kc.chan_perm[:, :, None, :], axis=-1)
+    qf = qp.reshape(BH, G, D)
+    nv = _rows_to_bh(n_valid, B, h_kv)
+    si = jnp.zeros((BH, G, n_tokens), jnp.float32)
+    off = 0
+    for t, c in zip(kc.tiers, kc.spec.counts):
+        si = si + kpack_tier_scores_paged(
+            t.payload, t.mins, t.shifts, qf[..., off : off + c],
+            pages.page_table, nv, n_tokens, width=t.width,
+            pack_size=t.pack_size, page_size=pages.page_size, tile_l=tile_l,
+            interpret=interpret,
+        )
+        off += c
+    qsum = jnp.sum(qf, axis=-1, keepdims=True)
+    flatm = lambda a: gather_pool_leaf(a, idx).reshape(BH, n_tokens)
+    zc = jnp.where(ref.valid_mask(nv, n_tokens, lead=2), flatm(kc.zero)[:, None, :], 0.0)
+    scores = si * flatm(kc.scale)[:, None, :] + qsum * zc
+    return (scores * sm_scale).reshape(B, H, n_tokens)
+
+
+def packed_weighted_v_paged(
+    w: Array,
+    vc: TieredCache,
+    pages,
+    *,
+    n_valid: Array,
+    backend: str = "xla",
+    tile_l: int = 256,
+    interpret: bool = True,
+) -> Array:
+    """``packed_weighted_v`` over a PAGED V cache.
+
+    w: [B, H, n_tokens] dense bucket weights (n_tokens a STATIC multiple of
+    the page size). Same backend split as ``packed_qk_scores_paged``.
+    """
+    B, H, n_tokens = w.shape
+    h_kv = vc.scale.shape[0]
+    idx = pages.page_table[:, : n_tokens // pages.page_size]
+    if backend == "xla":
+        from ..core.tiered import gather_tiered_pages
+
+        return packed_weighted_v(
+            w, gather_tiered_pages(vc, idx), n_valid=n_valid, backend="xla"
+        )
+    G = H // h_kv
+    BH = B * h_kv
+    nv = _rows_to_bh(n_valid, B, h_kv)
+    flatm = lambda a: gather_pool_leaf(a, idx).reshape(BH, n_tokens)
+    wf = w.astype(jnp.float32).reshape(BH, G, n_tokens)
+    ws = wf * flatm(vc.scale)[:, None, :]
+    parts = [
+        vpack_tier_out_paged(
+            t.payload, t.mins, t.shifts, ws, pages.page_table, nv,
+            width=t.width, pack_size=t.pack_size, page_size=pages.page_size,
+            tile_l=tile_l, interpret=interpret,
+        )
+        for t in vc.tiers
+    ]
+    out = jnp.concatenate(parts, axis=-1)  # [BH, G, Dv] tier order
+    wf = jnp.where(ref.valid_mask(nv, n_tokens, lead=2), wf, 0.0)
+    zterm = jnp.einsum("bgl,bl->bg", wf, flatm(vc.zero))[..., None]
+    out = out + zterm
+    out = out.reshape(B, h_kv, G, -1)
+    inv = chan_inverse_perm(vc.chan_perm)
+    out = jnp.take_along_axis(out, inv[:, :, None, :], axis=-1)
+    return out.reshape(B, H, -1)
+
+
 def _residual_partials(q, resid_k, resid_v, n_resid, sm_scale):
     """LSE partials (o_unnorm, m, l) of attention over the residual buffer.
 
@@ -182,6 +283,44 @@ def packed_decode_attention(
         q, kc, vc, n_comp, sm_scale, tile_l=tile_l, interpret=interpret
     )
     o_r, m_r, l_r = _residual_partials(q, resid_k, resid_v, n_resid, sm_scale)
+    return merge_partials(o_c, m_c, l_c, o_r, m_r, l_r)
+
+
+def paged_decode_attention(
+    q: Array,
+    cache,
+    sm_scale: float,
+    *,
+    n_bucket: int | None = None,
+    backend: str = "xla",
+    tile_l: int = 256,
+    interpret: bool = True,
+) -> Array:
+    """Full decode attention over a PAGED compressed cache + residual.
+
+    cache: a paged ``core.cache.LayerKVCache`` (compressed policy). The xla
+    backend gathers the first ``n_bucket`` tokens' pages into the dense
+    layout and runs the reference path; the pallas backend launches the
+    page-indexed fused kernel directly on the pool. Both are bit-identical
+    to ``packed_decode_attention`` on the dense storage mode.
+    """
+    n_tokens = cache.capacity if n_bucket is None else min(n_bucket, cache.capacity)
+    if backend == "xla":
+        from ..core.cache import gather_paged
+
+        read = gather_paged(cache, n_tokens)
+        return ref.packed_decode_attention_ref(
+            q, read.k, read.v, read.resid_k, read.resid_v,
+            read.n_comp, read.n_resid, sm_scale,
+        )
+    o_c, m_c, l_c = fused_packed_attention_paged(
+        q, cache.k, cache.v, cache.pages.page_table, cache.n_comp, n_tokens,
+        sm_scale, page_size=cache.cfg.page_size, tile_l=tile_l,
+        interpret=interpret,
+    )
+    o_r, m_r, l_r = _residual_partials(
+        q, cache.resid_k, cache.resid_v, cache.n_resid, sm_scale
+    )
     return merge_partials(o_c, m_c, l_c, o_r, m_r, l_r)
 
 

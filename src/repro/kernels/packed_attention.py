@@ -14,6 +14,20 @@ sequential over context tiles (the flash recurrence).
 
 Inputs are generated programmatically from the K/V tier specs, so any
 TierSpec combination lowers to a single kernel.
+
+Two storage modes share the flash tile update (``_flash_tile_body``):
+
+* ``fused_packed_attention`` — dense per-slot buffers, context tiles
+  blocked by the BlockSpec grid (the PR-3 layout).
+* ``fused_packed_attention_paged`` — the compressed bytes live in a shared
+  page pool; each grid step resolves its logical page through the slot's
+  page table (``pl.load`` on the table, then a dynamic page load from the
+  pool — tile_l divides page_size, so one step reads one physical page).
+  Per-token scale/zero are gathered to the dense layout outside the kernel
+  (rank-1 metadata, bucket-sized); only the payload/mins/shifts pools are
+  indexed in-kernel. NOTE: under interpret mode (this repo's CI) the pool
+  rides in as a whole-array ref; a real TPU lowering would move the page
+  table to scalar prefetch so only the addressed page is DMA'd into VMEM.
 """
 from __future__ import annotations
 
@@ -24,13 +38,75 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 from ..core.tiered import TieredCache
-from .pallas_utils import tpu_params
+from .pallas_utils import (
+    load_page_id,
+    load_tier_pool_tile,
+    page_table_spec,
+    pool_block_spec,
+    tpu_params,
+)
 from .unpack import decode_tier_tile
 
 Array = jax.Array
 
 NEG_INF = -1e30
 DEFAULT_TILE_L = 256
+
+
+def _flash_tile_body(
+    q,
+    k_tiles,
+    v_tiles,
+    kscale_t,
+    kzero_t,
+    vscale_t,
+    vzero_t,
+    n_live,
+    gidx,
+    acc_ref,
+    zsum_ref,
+    m_ref,
+    l_ref,
+    *,
+    k_offs,
+    v_offs,
+    sm_scale,
+):
+    """One context tile's flash update, shared by the dense and paged
+    kernels. ``k_tiles``/``v_tiles`` are the decoded integer tiles
+    ([C_t, TL] f32 per tier); ``*_t`` are the tile's per-token metadata
+    ([TL] f32); ``gidx`` the global token indices of the tile."""
+    # ---- K: integer scores for this tile ----------------------------------
+    si = None
+    for t, vals in enumerate(k_tiles):
+        qs = q[:, k_offs[t] : k_offs[t + 1]]  # [G, Ck_t]
+        d = jax.lax.dot_general(
+            qs, vals, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
+        )
+        si = d if si is None else si + d  # [G, TL]
+    qsum = jnp.sum(q, axis=-1, keepdims=True)  # [G, 1]
+    scores = (si * kscale_t[None, :] + qsum * kzero_t[None, :]) * sm_scale
+
+    valid = (gidx < n_live).astype(jnp.float32)[None, :]  # [1, TL]
+    scores = jnp.where(valid > 0, scores, NEG_INF)
+
+    # ---- online softmax ----------------------------------------------------
+    m_prev = m_ref[0]  # [G]
+    m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
+    alpha = jnp.exp(m_prev - m_new)  # [G]
+    p = jnp.exp(scores - m_new[:, None]) * valid  # [G, TL]
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p, axis=-1)
+    m_ref[0] = m_new
+
+    # ---- V: weighted accumulation ------------------------------------------
+    ws = p * vscale_t[None, :]  # fold per-token scale into weights
+    acc_ref[0] *= alpha[:, None]
+    for t, vals in enumerate(v_tiles):
+        d = jax.lax.dot_general(
+            ws, vals, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # [G, Cv_t]
+        acc_ref[0, :, v_offs[t] : v_offs[t + 1]] += d
+    zsum_ref[0] = zsum_ref[0] * alpha + jnp.sum(p * vzero_t[None, :], axis=-1)
 
 
 def _fused_kernel(
@@ -74,46 +150,23 @@ def _fused_kernel(
     # so skip the K/V decode, both dot_generals and the softmax update
     @pl.when(pid * tile_l < n_ref[0, 0])
     def _live_tile():
-        q = q_ref[0]  # [G, D] in K-tier channel order
-
-        # ---- K: integer scores for this tile ------------------------------
-        si = None
-        for t in range(nk):
-            vals = decode_tier_tile(
-                k_pay[t][0], k_min[t][0], k_shf[t][0], k_widths[t], pack
-            )  # [Ck_t, TL]
-            qs = q[:, k_offs[t] : k_offs[t + 1]]  # [G, Ck_t]
-            d = jax.lax.dot_general(
-                qs, vals, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32
-            )
-            si = d if si is None else si + d  # [G, TL]
-        qsum = jnp.sum(q, axis=-1, keepdims=True)  # [G, 1]
-        scores = (si * kscale_ref[0][None, :] + qsum * kzero_ref[0][None, :]) * sm_scale
-
-        gidx = pid * tile_l + jnp.arange(tile_l)
-        valid = (gidx < n_ref[0, 0]).astype(jnp.float32)[None, :]  # [1, TL]
-        scores = jnp.where(valid > 0, scores, NEG_INF)
-
-        # ---- online softmax ------------------------------------------------
-        m_prev = m_ref[0]  # [G]
-        m_new = jnp.maximum(m_prev, jnp.max(scores, axis=-1))
-        alpha = jnp.exp(m_prev - m_new)  # [G]
-        p = jnp.exp(scores - m_new[:, None]) * valid  # [G, TL]
-        l_ref[0] = l_ref[0] * alpha + jnp.sum(p, axis=-1)
-        m_ref[0] = m_new
-
-        # ---- V: weighted accumulation --------------------------------------
-        ws = p * vscale_ref[0][None, :]  # fold per-token scale into weights
-        acc_ref[0] *= alpha[:, None]
-        for t in range(nv):
-            vals = decode_tier_tile(
-                v_pay[t][0], v_min[t][0], v_shf[t][0], v_widths[t], pack
-            )  # [Cv_t, TL]
-            d = jax.lax.dot_general(
-                ws, vals, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
-            )  # [G, Cv_t]
-            acc_ref[0, :, v_offs[t] : v_offs[t + 1]] += d
-        zsum_ref[0] = zsum_ref[0] * alpha + jnp.sum(p * vzero_ref[0][None, :], axis=-1)
+        k_tiles = [
+            decode_tier_tile(k_pay[t][0], k_min[t][0], k_shf[t][0],
+                             k_widths[t], pack)
+            for t in range(nk)
+        ]
+        v_tiles = [
+            decode_tier_tile(v_pay[t][0], v_min[t][0], v_shf[t][0],
+                             v_widths[t], pack)
+            for t in range(nv)
+        ]
+        _flash_tile_body(
+            q_ref[0], k_tiles, v_tiles,
+            kscale_ref[0], kzero_ref[0], vscale_ref[0], vzero_ref[0],
+            n_ref[0, 0], pid * tile_l + jnp.arange(tile_l),
+            acc_ref, zsum_ref, m_ref, l_ref,
+            k_offs=k_offs, v_offs=v_offs, sm_scale=sm_scale,
+        )
 
 
 def fused_packed_attention(
@@ -237,6 +290,213 @@ def fused_packed_attention(
     )
 
     o = acc + zsum[..., None]  # zero-term correction (all channels)
+    o = o.reshape(B, h_kv, G, Dv)
+    inv = chan_inverse_perm(vc.chan_perm)
+    o = jnp.take_along_axis(o, inv[:, :, None, :], axis=-1)
+    return (
+        o.reshape(B, H, Dv),
+        m.reshape(B, H),
+        lsum.reshape(B, H),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Paged variant: context tiles resolved through the page table in-kernel
+# ---------------------------------------------------------------------------
+
+
+def _paged_fused_kernel(
+    *refs,
+    nk: int,
+    nv: int,
+    k_widths,
+    v_widths,
+    k_offs,
+    v_offs,
+    pack: int,
+    sm_scale: float,
+    tile_l: int,
+    tiles_per_page: int,
+):
+    """refs layout: [k_payload*nk, k_mins*nk, k_shifts*nk, kscale, kzero,
+    v_payload*nv, v_mins*nv, v_shifts*nv, vscale, vzero, q, n_comp, table,
+    acc_out, zsum_out, m_out, l_out]. Pool refs are whole-pool blocks of one
+    kv-head; scale/zero are pre-gathered dense tiles; ``table`` is this
+    row's page-table prefix."""
+    i = 0
+    k_pay = refs[i : i + nk]; i += nk
+    k_min = refs[i : i + nk]; i += nk
+    k_shf = refs[i : i + nk]; i += nk
+    kscale_ref, kzero_ref = refs[i], refs[i + 1]; i += 2
+    v_pay = refs[i : i + nv]; i += nv
+    v_min = refs[i : i + nv]; i += nv
+    v_shf = refs[i : i + nv]; i += nv
+    vscale_ref, vzero_ref = refs[i], refs[i + 1]; i += 2
+    q_ref, n_ref, tab_ref = refs[i], refs[i + 1], refs[i + 2]; i += 3
+    acc_ref, zsum_ref, m_ref, l_ref = refs[i : i + 4]
+
+    pid = pl.program_id(1)  # outside pl.when (interpret mode)
+    lp = pid // tiles_per_page  # logical page of this tile
+    toff = pid % tiles_per_page  # tile within the page
+
+    @pl.when(pid == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        zsum_ref[...] = jnp.zeros_like(zsum_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # same tile skipping as the dense kernel — a dead tile never even
+    # resolves its page id
+    @pl.when(pid * tile_l < n_ref[0, 0])
+    def _live_tile():
+        phys = load_page_id(tab_ref, lp)
+
+        def tier_tiles(pays, mins, shfs, widths):
+            return [
+                decode_tier_tile(
+                    *load_tier_pool_tile(pays[t], mins[t], shfs[t], phys,
+                                         toff, tile_l, widths[t], pack),
+                    widths[t], pack,
+                )
+                for t in range(len(pays))
+            ]
+
+        _flash_tile_body(
+            q_ref[0], tier_tiles(k_pay, k_min, k_shf, k_widths),
+            tier_tiles(v_pay, v_min, v_shf, v_widths),
+            kscale_ref[0], kzero_ref[0], vscale_ref[0], vzero_ref[0],
+            n_ref[0, 0], pid * tile_l + jnp.arange(tile_l),
+            acc_ref, zsum_ref, m_ref, l_ref,
+            k_offs=k_offs, v_offs=v_offs, sm_scale=sm_scale,
+        )
+
+
+def fused_packed_attention_paged(
+    q: Array,
+    kc: TieredCache,
+    vc: TieredCache,
+    page_table: Array,
+    n_comp: Array,
+    n_tokens: int,
+    sm_scale: float,
+    *,
+    page_size: int,
+    tile_l: int = DEFAULT_TILE_L,
+    interpret: bool = True,
+):
+    """Compressed-region attention partials over a PAGED cache in one launch.
+
+    kc/vc: pool-layout TieredCaches (leaves [H_kv, n_pool_pages, ...]);
+    page_table: i32 [B, max_pages]; n_tokens: STATIC bucket size (multiple
+    of ``page_size``) — the grid covers ``n_tokens / tile_l`` logical tiles
+    and each live tile resolves its physical page through the table.
+    Returns the same (o_unnorm, m, l) partials as ``fused_packed_attention``
+    and is bit-identical to running it on the gathered dense view.
+    """
+    from ..core.tiered import chan_inverse_perm, gather_pool_leaf
+
+    B, H, D = q.shape
+    h_kv = kc.scale.shape[0]
+    G = H // h_kv
+    BH = B * h_kv
+    tile_l = min(tile_l, page_size)
+    assert page_size % tile_l == 0 and tile_l % (kc.spec.pack_size * 4) == 0
+    assert n_tokens % page_size == 0, (n_tokens, page_size)
+    n_pg = n_tokens // page_size
+    tpp = page_size // tile_l
+    nL = n_pg * tpp
+    pack = kc.spec.pack_size
+    Dv = vc.spec.head_dim
+
+    qg = q.astype(jnp.float32).reshape(B, h_kv, G, D)
+    qp = jnp.take_along_axis(qg, kc.chan_perm[:, :, None, :], axis=-1)
+    qf = qp.reshape(BH, G, D)
+
+    idx = page_table[:, :n_pg]  # [B, n_pg] live logical pages
+    # per-token metadata is rank-1 and bucket-sized: gather it dense outside
+    flatm = lambda a: gather_pool_leaf(a, idx).reshape(BH, n_tokens)
+    kscale, kzero = flatm(kc.scale), flatm(kc.zero)
+    vscale, vzero = flatm(vc.scale), flatm(vc.zero)
+
+    n_arr = jnp.asarray(n_comp, jnp.int32)
+    if n_arr.ndim == 0:
+        n_arr = n_arr[None, None]
+    else:
+        n_arr = n_arr[:, None]
+    n_arr = jnp.broadcast_to(n_arr, (B, h_kv)).reshape(BH, 1)
+
+    k_widths = tuple(t.width for t in kc.tiers)
+    v_widths = tuple(t.width for t in vc.tiers)
+    k_offs = (0, *[sum(kc.spec.counts[: i + 1]) for i in range(len(kc.spec.counts))])
+    v_offs = (0, *[sum(vc.spec.counts[: i + 1]) for i in range(len(vc.spec.counts))])
+
+    def pool_specs(tiers):
+        # whole-pool blocks of this grid row's kv-head (see module docstring
+        # for the TPU scalar-prefetch caveat)
+        return [
+            pool_block_spec(getattr(t, leaf), h_kv)
+            for leaf in ("payload", "mins", "shifts")
+            for t in tiers
+        ]
+
+    scale_spec = pl.BlockSpec((1, tile_l), lambda b, l: (b, l))
+    in_specs = (
+        pool_specs(kc.tiers)
+        + [scale_spec, scale_spec]
+        + pool_specs(vc.tiers)
+        + [scale_spec, scale_spec]
+        + [
+            pl.BlockSpec((1, G, D), lambda b, l: (b, 0, 0)),
+            pl.BlockSpec((1, 1), lambda b, l: (b, 0)),
+            page_table_spec(n_pg, h_kv),
+        ]
+    )
+    out_specs = [
+        pl.BlockSpec((1, G, Dv), lambda b, l: (b, 0, 0)),
+        pl.BlockSpec((1, G), lambda b, l: (b, 0)),
+        pl.BlockSpec((1, G), lambda b, l: (b, 0)),
+        pl.BlockSpec((1, G), lambda b, l: (b, 0)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((BH, G, Dv), jnp.float32),
+        jax.ShapeDtypeStruct((BH, G), jnp.float32),
+        jax.ShapeDtypeStruct((BH, G), jnp.float32),
+        jax.ShapeDtypeStruct((BH, G), jnp.float32),
+    ]
+
+    kernel = functools.partial(
+        _paged_fused_kernel,
+        nk=len(kc.tiers),
+        nv=len(vc.tiers),
+        k_widths=k_widths,
+        v_widths=v_widths,
+        k_offs=k_offs,
+        v_offs=v_offs,
+        pack=pack,
+        sm_scale=sm_scale,
+        tile_l=tile_l,
+        tiles_per_page=tpp,
+    )
+    pool_leaves = lambda tc: (
+        [t.payload for t in tc.tiers]
+        + [t.mins for t in tc.tiers]
+        + [t.shifts for t in tc.tiers]
+    )
+    acc, zsum, m, lsum = pl.pallas_call(
+        kernel,
+        grid=(BH, nL),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+        **tpu_params(("parallel", "arbitrary"), interpret),
+    )(
+        *pool_leaves(kc), kscale, kzero,
+        *pool_leaves(vc), vscale, vzero, qf, n_arr, idx,
+    )
+
+    o = acc + zsum[..., None]
     o = o.reshape(B, h_kv, G, Dv)
     inv = chan_inverse_perm(vc.chan_perm)
     o = jnp.take_along_axis(o, inv[:, :, None, :], axis=-1)

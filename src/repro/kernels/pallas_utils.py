@@ -1,5 +1,66 @@
-"""Shared Pallas plumbing (TPU compiler params with interpret fallback)."""
+"""Shared Pallas plumbing (TPU compiler params with interpret fallback,
+page-pool tile loads for the paged kernels)."""
 from __future__ import annotations
+
+from jax.experimental import pallas as pl
+
+
+def load_page_id(table_ref, lp):
+    """Resolve logical page ``lp`` (traced) through a [1, n_pages] page-table
+    block: the in-kernel half of the page-table indirection."""
+    return pl.load(table_ref, (pl.dslice(0, 1), pl.dslice(lp, 1)))[0, 0]
+
+
+def load_pool_tile(ref, phys, start, size):
+    """Dynamic tile load from a whole-pool ref.
+
+    ref: [1, n_pool_pages, C, U] block (one kv-head's pool); phys: traced
+    physical page id; start/size: element window on the last axis. Returns
+    [C, size]. ``pl.dslice`` keeps every index a Slice, which both the
+    interpret-mode discharge rule and the TPU lowering accept.
+    """
+    C = ref.shape[2]
+    tile = pl.load(
+        ref,
+        (pl.dslice(0, 1), pl.dslice(phys, 1), pl.dslice(0, C),
+         pl.dslice(start, size)),
+    )
+    return tile.reshape(C, size)
+
+
+def load_tier_pool_tile(payload_ref, mins_ref, shifts_ref, phys, toff,
+                        tile_l, width, pack):
+    """Load one tier's (payload, mins, shifts) tile from whole-pool refs.
+
+    ``phys``: traced physical page id; ``toff``: tile index within the
+    page. The offset triple (words / packs / shift bytes per tile) is THE
+    pool-layout contract (docs/formats.md) — keep every paged kernel on
+    this helper so a layout change lands in one place.
+    """
+    return (
+        load_pool_tile(payload_ref, phys, toff * (tile_l * width // 32),
+                       tile_l * width // 32),
+        load_pool_tile(mins_ref, phys, toff * (tile_l // pack),
+                       tile_l // pack),
+        load_pool_tile(shifts_ref, phys, toff * (tile_l // pack // 4),
+                       tile_l // pack // 4),
+    )
+
+
+def pool_block_spec(leaf, h_kv: int):
+    """BlockSpec handing a paged kernel ONE kv-head's whole pool.
+
+    Grid dim 0 indexes (batch, kv-head) pairs batch-major, so the head is
+    ``b % h_kv``. The other half of the pool-layout contract
+    (``load_tier_pool_tile``) lives below — a layout change (e.g. moving
+    the page table to scalar prefetch on real TPU) edits this module only.
+    """
+    return pl.BlockSpec((1, *leaf.shape[1:]), lambda b, l: (b % h_kv, 0, 0, 0))
+
+
+def page_table_spec(n_pages: int, h_kv: int):
+    """BlockSpec handing a paged kernel its row's live page-table prefix."""
+    return pl.BlockSpec((1, n_pages), lambda b, l: (b // h_kv, 0))
 
 
 def tpu_params(dimension_semantics: tuple[str, ...], interpret: bool) -> dict:

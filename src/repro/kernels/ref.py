@@ -18,6 +18,13 @@ K_deq[l, c] = q_int[l, c] * scale[l] + zero[l],
 
 so the integer matvec runs directly on decoded integers and the per-token
 (scale, zero) are folded in as rank-1 corrections.
+
+These oracles consume the DENSE TieredCache layout only. Paged caches
+reach them through the page-table gather (``core.cache.gather_paged`` /
+``tiered.gather_tiered_pages``), which reassembles the dense layout
+bit-identically — so one oracle covers both storage modes, and the paged
+Pallas kernels are checked against the gathered dense launch
+(tests/test_paged.py).
 """
 from __future__ import annotations
 

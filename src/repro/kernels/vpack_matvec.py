@@ -14,7 +14,13 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from .pallas_utils import tpu_params
+from .pallas_utils import (
+    load_page_id,
+    load_tier_pool_tile,
+    page_table_spec,
+    pool_block_spec,
+    tpu_params,
+)
 from .unpack import decode_tier_tile
 
 Array = jax.Array
@@ -104,3 +110,85 @@ def vpack_tier_out(
         interpret=interpret,
         **tpu_params(("parallel", "arbitrary"), interpret),
     )(*args)
+
+
+def _paged_kernel(payload_ref, mins_ref, shifts_ref, w_ref, n_ref, tab_ref,
+                  out_ref, *, width, pack, tile_l, tiles_per_page):
+    """Paged weighted-V: page-table tile resolution + sequential
+    accumulation (see packed_attention.py for the interpret-mode caveat)."""
+    pid = pl.program_id(1)  # outside pl.when (interpret mode)
+    tile_start = pid * tile_l
+    lp = pid // tiles_per_page
+    toff = pid % tiles_per_page
+
+    @pl.when(pid == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    def accumulate():
+        phys = load_page_id(tab_ref, lp)
+        vals = decode_tier_tile(
+            *load_tier_pool_tile(payload_ref, mins_ref, shifts_ref, phys,
+                                 toff, tile_l, width, pack),
+            width, pack,
+        )  # [C, TL]
+        gidx = tile_start + jnp.arange(tile_l)
+        w = jnp.where((gidx < n_ref[0, 0])[None, :], w_ref[0], 0.0)
+        out_ref[0] += jax.lax.dot_general(
+            w, vals, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )
+
+    # tile skipping: a fully-masked tile accumulates exactly zero
+    pl.when(tile_start < n_ref[0, 0])(accumulate)
+
+
+def vpack_tier_out_paged(
+    payload: Array,
+    mins: Array,
+    shifts: Array,
+    w: Array,
+    page_table: Array,
+    n_valid: Array,
+    *,
+    width: int,
+    pack_size: int,
+    page_size: int,
+    tile_l: int = DEFAULT_TILE_L,
+    interpret: bool = True,
+) -> Array:
+    """One tier's weighted-V output over a PAGED pool.
+
+    payload/mins/shifts: pool layout [H_kv, n_pool_pages, C, ...];
+    w: f32 [BH, G, n_tokens] dense bucket weights (scale pre-folded);
+    page_table: i32 [B, max_pages]; n_valid: i32 [BH].
+    Returns out f32 [BH, G, C] — bit-identical to ``vpack_tier_out`` on the
+    gathered dense view.
+    """
+    h_kv = payload.shape[0]
+    BH, G, n_tokens = w.shape
+    C = payload.shape[2]
+    tile_l = min(tile_l, page_size)
+    assert page_size % tile_l == 0 and tile_l % (pack_size * 4) == 0
+    assert n_tokens % page_size == 0 and n_tokens >= page_size
+    n_pg = n_tokens // page_size
+    tpp = page_size // tile_l
+
+    in_specs = [
+        pool_block_spec(payload, h_kv),
+        pool_block_spec(mins, h_kv),
+        pool_block_spec(shifts, h_kv),
+        pl.BlockSpec((1, G, tile_l), lambda b, l: (b, 0, l)),
+        pl.BlockSpec((1, 1), lambda b, l: (b, 0)),
+        page_table_spec(n_pg, h_kv),
+    ]
+    return pl.pallas_call(
+        functools.partial(_paged_kernel, width=width, pack=pack_size,
+                          tile_l=tile_l, tiles_per_page=tpp),
+        grid=(BH, n_pg * tpp),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, G, C), lambda b, l: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, G, C), jnp.float32),
+        interpret=interpret,
+        **tpu_params(("parallel", "arbitrary"), interpret),
+    )(payload, mins, shifts, w,
+      n_valid.astype(jnp.int32).reshape(BH, 1), page_table[:, :n_pg])

@@ -33,6 +33,13 @@ def main() -> int:
     ap.add_argument("--server", default="slot", choices=["slot", "wave"],
                     help="slot = continuous batching; wave = wave-chunked "
                     "compat wrapper (auto-fallback for recurrent families)")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged compressed region: shared page pool + "
+                    "page-reservation admission (docs/architecture.md)")
+    ap.add_argument("--page-size", type=int, default=256)
+    ap.add_argument("--pool-pages", type=int, default=None,
+                    help="pool size in pages; < batch*capacity/page_size "
+                    "oversubscribes (admission blocks on reservations)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -45,7 +52,8 @@ def main() -> int:
 
     pack = PackKVConfig(policy=args.policy)
     ecfg = EngineConfig(capacity=args.capacity, max_batch=args.batch,
-                        backend=args.backend)
+                        backend=args.backend, paged=args.paged,
+                        page_size=args.page_size, pool_pages=args.pool_pages)
     t0 = time.time()
     engine = Engine(cfg, params, pack, ecfg)
     print(f"engine built in {time.time() - t0:.1f}s; policy={args.policy}")
@@ -80,13 +88,17 @@ def main() -> int:
         print(f"slot scheduler: {s.decode_steps} decode steps, "
               f"occupancy {s.occupancy:.2f}, {s.slot_reuses} slot reuses, "
               f"{s.admitted} admitted / {s.completed} completed")
+        if args.paged:
+            print(f"paged pool: {engine.pack_cfg.pool_pages} pages of "
+                  f"{args.page_size} tokens, peak reserved "
+                  f"{s.pages_reserved_peak}, {s.admission_blocks} "
+                  f"admission blocks")
 
-    # cache memory report (the paper's deliverable)
+    # cache memory report (the paper's deliverable). Byte counts are
+    # static-shape-determined, so the allocated slot cache suffices — and
+    # unlike a whole-batch prefill it is valid for oversubscribed pools.
     cap = args.capacity
-    lg, cache = engine.prefill(
-        {"tokens": jax.numpy.zeros((args.batch, 64), jax.numpy.int32)}
-    )
-    comp_bytes = tree_bytes(cache)
+    comp_bytes = tree_bytes(engine.alloc_slot_cache())
     raw = (cfg.n_layers * 2 * args.batch * cfg.n_kv_heads * cap * cfg.hd * 2)
     print(f"cache pytree bytes (capacity {cap}): {comp_bytes:,} "
           f"vs raw bf16 {raw:,} -> {raw / comp_bytes:.2f}x smaller")

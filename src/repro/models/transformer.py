@@ -8,7 +8,6 @@ PackKV computation-aware decompression path per layer.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax
@@ -211,9 +210,20 @@ def prefill_into_slot(params: dict, cfg: ArchConfig, pack_cfg: PackKVConfig,
     Returns (last-token logits [1, V], updated cache). ``slot`` may be a
     traced scalar, so one compiled program serves every slot per prompt
     length.
-    """
-    from ..core.cache import insert_row
 
+    Paged caches admit through a DENSE mini-cache sized to the prompt (the
+    compression math is identical, so the bytes are), then scatter it into
+    freshly-popped pool pages — the slot's resident footprint is
+    ``ceil(prompt_blocks / page_size)`` pages, not ``capacity`` tokens.
+    """
+    from ..core.cache import insert_row, insert_row_paged, paged_mini_spec
+
+    if pack_cfg.paged:
+        dense_cfg, cap_mini, n_pages = paged_mini_spec(
+            pack_cfg, batch["tokens"].shape[-1]
+        )
+        logits, row = prefill(params, cfg, dense_cfg, cap_mini, batch)
+        return logits, insert_row_paged(cache, slot, row, n_pages)
     logits, row = prefill(params, cfg, pack_cfg, capacity, batch)
     return logits, insert_row(cache, slot, row)
 
@@ -246,6 +256,8 @@ def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,
     from ..distributed.sharding import _ACTIVE_MESH as mesh
 
     def _use_cp(cache_l) -> bool:
+        if cache_l.pages is not None:  # paged pool is not context-sharded
+            return False
         if mesh is None or "model" not in mesh.axis_names:
             return False
         n = mesh.shape["model"]
@@ -276,7 +288,18 @@ def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,
                 qd, read.raw_k, read.raw_v, read.resid_k, read.resid_v,
                 read.n_comp, read.n_resid, sm_scale,
             )
+        elif cache_l.pages is not None and backend == "pallas":
+            # page-indexed fused kernel: context tiles resolve their
+            # physical page in-kernel, no gathered copy is materialized
+            from ..kernels import paged_decode_attention
+
+            cache_l = append_token(cache_l, k, v)
+            attn = paged_decode_attention(
+                qd, cache_l, sm_scale, n_bucket=n_bucket, backend=backend,
+            )
         else:
+            # paged + xla reads through the page-table gather inside
+            # slice_compressed; dense mode slices the contiguous prefix
             cache_l = append_token(cache_l, k, v)
             read = slice_compressed(cache_l, n_bucket)
             attn = packed_decode_attention(

@@ -19,7 +19,20 @@ Build sequence (mirrors a production bring-up):
 scheduler (same submit/run_wave surface); model families whose decode
 state cannot be row-recycled yet (rwkv6 / hybrid_rglru recurrent state)
 fall back to its legacy lock-step wave. See docs/serving.md for the slot
-table layout, admission policy and per-row counter plumbing.
+table layout, admission policy and per-row counter plumbing, and
+docs/architecture.md for the paged pool.
+
+Invariants the scheduler maintains (and the cache layer relies on):
+  * the host-side token counts (``_Active.cached_tokens``) upper-bound the
+    device counters — buckets and page reservations are computed without a
+    device sync and are always safe over-estimates;
+  * in paged mode, reserved pages (sum over active slots of worst-case
+    ``ceil(min(capacity, prompt + max_new) / page_size)``) never exceed
+    ``pool_pages - page_watermark`` — the in-graph free-list can never
+    over-pop, so oversubscribed pools serve mixed traffic exactly;
+  * a retired slot's pages are back in the pool (``reset_slot``) before
+    the next admission runs, so FIFO admission makes progress whenever any
+    slot retires.
 """
 from __future__ import annotations
 
@@ -51,6 +64,13 @@ class EngineConfig:
     bucket_unit: int = 256  # smallest bucket; power-of-two multiples up to capacity
     decode_chunk: int = 8  # decode steps per donated multi-step launch (1 = per-token)
     log_launches: bool = False  # keep per-launch telemetry (unbounded; bench only)
+    # paged compressed region (see docs/architecture.md):
+    paged: bool = False  # page-pool storage + page-reservation admission
+    page_size: int = 256  # tokens per physical page (power of two, >= block)
+    pool_pages: int | None = None  # physical pages; None = max_batch * capacity
+    #   / page_size (no oversubscription). Setting it lower oversubscribes:
+    #   admission then blocks on page reservations instead of free slots.
+    page_watermark: int = 0  # spare pages admission always holds back
 
 
 class Engine:
@@ -60,6 +80,26 @@ class Engine:
         self.params = params
         self.ecfg = ecfg
         self.api = get_model(cfg)
+        if ecfg.paged:
+            if not self.api.supports_slots:
+                raise ValueError(
+                    f"family {cfg.family!r} cannot serve paged (no slot ops; "
+                    "its recurrent decode state is not page-addressable)"
+                )
+            if ecfg.capacity % ecfg.page_size:
+                raise ValueError(
+                    f"capacity {ecfg.capacity} not a multiple of page_size "
+                    f"{ecfg.page_size}"
+                )
+            pool_pages = (
+                ecfg.pool_pages
+                if ecfg.pool_pages is not None
+                else ecfg.max_batch * ecfg.capacity // ecfg.page_size
+            )
+            pack_cfg = dataclasses.replace(
+                pack_cfg, paged=True, page_size=ecfg.page_size,
+                pool_pages=pool_pages,
+            )
         self.pack_cfg = (
             self._calibrate(pack_cfg) if (
                 ecfg.calibrate
@@ -110,7 +150,9 @@ class Engine:
                 rng.normal(size=(B, self.cfg.n_patches, self.cfg.d_model)),
                 jnp.float32,
             )
-        none_cfg = dataclasses.replace(pack_cfg, policy="none")
+        # calibration reads raw prefill K/V from a dense layout; paged
+        # placement is irrelevant to spec choice, so strip it here
+        none_cfg = dataclasses.replace(pack_cfg, policy="none", paged=False)
         cap = max(S + self.cfg.n_patches * (self.cfg.input_mode == "tokens_patches"),
                   pack_cfg.block)
         cap = -(-cap // pack_cfg.block) * pack_cfg.block
@@ -160,12 +202,20 @@ class Engine:
         return np.asarray(toks), int(n_exec), cache
 
     def bucket_for(self, n_max: int) -> int | None:
-        """Launch bucket covering ``n_max`` compressed tokens (None = full)."""
+        """Launch bucket covering ``n_max`` compressed tokens (None = full).
+
+        Paged engines bucket the PAGE COUNT: the unit is raised to the page
+        size so every bucket is a whole number of pages and the gather /
+        page-indexed kernels see page-aligned launches.
+        """
         if not self.ecfg.bucketed:
             return None
         from ..core.cache import bucket_length
 
-        return bucket_length(n_max, self.ecfg.capacity, self.ecfg.bucket_unit)
+        unit = self.ecfg.bucket_unit
+        if self.ecfg.paged:
+            unit = max(unit, self.ecfg.page_size)
+        return bucket_length(n_max, self.ecfg.capacity, unit)
 
     def alloc_slot_cache(self):
         """Slot-table decode cache: max_batch rows, per-row counters."""
@@ -233,6 +283,9 @@ class SlotStats:
     completed: int = 0
     slot_reuses: int = 0  # admissions into a previously-used slot
     wall_s: float = 0.0
+    # paged admission telemetry (zeros for dense engines):
+    admission_blocks: int = 0  # admissions deferred for lack of free pages
+    pages_reserved_peak: int = 0  # max simultaneously-reserved pool pages
 
     @property
     def occupancy(self) -> float:
@@ -280,6 +333,15 @@ class SlotServer:
     on the very next step. Per-request greedy outputs are bit-identical to
     a batch-size-1 ``Engine.generate`` run (per-row cache state + per-row
     RoPE positions + row-independent attention).
+
+    PAGED engines admit on FREE PAGES, not free slots: each admitted
+    request reserves its worst-case page count (``ceil(min(capacity,
+    prompt + max_new) / page_size)``) and admission blocks — FIFO order
+    preserved — while reservations plus the watermark would overflow the
+    pool. Reservations are the host-side guarantee that the in-graph
+    free-list never over-pops, which is what makes oversubscription
+    (``pool_pages < max_batch * capacity / page_size``) safe under mixed
+    traffic.
     """
 
     def __init__(self, engine: Engine, eos_id: int | None = None):
@@ -303,11 +365,57 @@ class SlotServer:
         self.queue: deque[Request] = deque()
         self.done: dict[int, Request] = {}
         self.stats = SlotStats(n_slots=self.n_slots)
+        self._reserved: dict[int, int] = {}  # slot -> reserved pool pages
+
+    # -- paged admission accounting ----------------------------------------
+    @property
+    def _pages_avail(self) -> int:
+        """Pool pages not yet reserved (minus the watermark)."""
+        ecfg = self.engine.ecfg
+        total = self.engine.pack_cfg.pool_pages
+        return total - ecfg.page_watermark - sum(self._reserved.values())
+
+    def _pages_needed(self, req: Request) -> int:
+        """Worst-case resident pages over the request's lifetime: its
+        compressed tokens never exceed min(capacity, prompt + max_new)."""
+        from ..utils import cdiv
+
+        ecfg = self.engine.ecfg
+        hi = min(ecfg.capacity, len(req.tokens) + req.max_new)
+        return cdiv(hi, ecfg.page_size)
 
     # -- queue --------------------------------------------------------------
     def submit(self, req: Request) -> None:
         if req.max_new < 1:
             raise ValueError(f"request {req.rid}: max_new must be >= 1")
+        if self.engine.ecfg.paged:
+            ecfg = self.engine.ecfg
+            pack = self.engine.pack_cfg
+            # prefill block-flushes the WHOLE prompt, so its block-aligned
+            # length must fit the compressed capacity outright (a longer
+            # one would pop more pages than a table row holds)
+            lb = (len(req.tokens) // pack.block) * pack.block
+            if lb > ecfg.capacity:
+                raise ValueError(
+                    f"request {req.rid}: block-aligned prompt length {lb} "
+                    f"exceeds compressed capacity {ecfg.capacity}"
+                )
+            hi = len(req.tokens) + req.max_new
+            if hi > ecfg.capacity + pack.residual:
+                # over-contract rows stop flushing at capacity (their page
+                # reservation stays a true bound) and would degrade their
+                # own residual — enforce the documented upstream rejection
+                raise ValueError(
+                    f"request {req.rid}: prompt + max_new = {hi} exceeds "
+                    f"capacity + residual = {ecfg.capacity + pack.residual}"
+                )
+            total = self.engine.pack_cfg.pool_pages
+            need = self._pages_needed(req)
+            if need > total - ecfg.page_watermark:
+                raise ValueError(
+                    f"request {req.rid} needs {need} pages but the pool "
+                    f"admits at most {total - ecfg.page_watermark}"
+                )
         self.queue.append(req)
 
     @property
@@ -321,19 +429,30 @@ class SlotServer:
         self.done[act.req.rid] = act.req
         self.slots[i] = None
         self.cache = self.engine.free_slot(self.cache, i)
+        self._reserved.pop(i, None)  # paged: pages return with the reset
         self.stats.completed += 1
         return act.req
 
     def _admit(self) -> list[Request]:
         finished: list[Request] = []
+        paged = self.engine.ecfg.paged
         for i in range(self.n_slots):
             if not self.queue:
                 break
             if self.slots[i] is not None:
                 continue
+            if paged and self._pages_needed(self.queue[0]) > self._pages_avail:
+                # page-count admission: keep FIFO order, wait for a retire
+                self.stats.admission_blocks += 1
+                break
             req = self.queue.popleft()
             if self.cache is None:
                 self.cache = self.engine.alloc_slot_cache()
+            if paged:
+                self._reserved[i] = self._pages_needed(req)
+                self.stats.pages_reserved_peak = max(
+                    self.stats.pages_reserved_peak, sum(self._reserved.values())
+                )
             logits, self.cache = self.engine.insert_request(
                 self.cache, i, req.tokens
             )

@@ -1,0 +1,422 @@
+"""Paged tiered KV pool (ISSUE 4): free-list invariants, paged-vs-dense
+bit-identity, and page-count admission.
+
+Invariants under test:
+  * The free-list allocator hands out unique pages, returns a retired
+    slot's pages exactly, and reuses them — under interleaved
+    insert/append/reset traffic and under adversarial (hypothesis)
+    insert/evict sequences.
+  * Every read of a paged cache — page-table gather (xla) or in-kernel
+    page indexing (pallas) — is BIT-IDENTICAL to the dense storage mode at
+    ragged per-row lengths, including n_comp = 0, lengths straddling a
+    page boundary, and a completely full pool.
+  * ``SlotServer`` with an oversubscribed pool (pool_pages < max_batch *
+    capacity / page_size) blocks admission on page reservations, keeps
+    FIFO order, and still serves mixed traffic exactly.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKES
+from repro.core.cache import (
+    PackKVConfig,
+    alloc_layer_cache,
+    alloc_page_pool,
+    append_token,
+    gather_paged,
+    insert_prefill,
+    live_pages,
+    pool_pop_prefix,
+    pool_pop_rows,
+    pool_push_row,
+    prefill_cache,
+    reset_slot,
+    slice_compressed,
+)
+from repro.data import synthetic_kv
+from repro.kernels import ops
+from repro.models import get_model
+from repro.serving import Engine, EngineConfig, Request, SlotServer
+
+B, H, G, D = 3, 2, 2, 64
+CAP, PAGE, R = 1024, 256, 96
+SM = 0.125
+
+
+def _kv(rng, n, b=1):
+    return (jnp.asarray(synthetic_kv(rng, b, H, n, D)),
+            jnp.asarray(synthetic_kv(rng, b, H, n, D)))
+
+
+def _pair(policy="packkv", pool_pages=None):
+    """(dense, paged) cache pair of identical capacity."""
+    dense = alloc_layer_cache(PackKVConfig(policy=policy, residual=R),
+                              B, H, D, CAP)
+    paged = alloc_layer_cache(
+        PackKVConfig(policy=policy, residual=R, paged=True, page_size=PAGE,
+                     pool_pages=pool_pages),
+        B, H, D, CAP,
+    )
+    return dense, paged
+
+
+def _attend(cache, q, n_bucket=None, backend="xla"):
+    cfg = cache.cfg
+    if cfg.policy == "none":
+        c = slice_compressed(cache, n_bucket)
+        return ops.dense_decode_attention(
+            q, c.raw_k, c.raw_v, c.resid_k, c.resid_v, c.n_comp, c.n_resid, SM)
+    if cache.pages is not None:
+        return ops.paged_decode_attention(q, cache, SM, n_bucket=n_bucket,
+                                          backend=backend, tile_l=64)
+    c = slice_compressed(cache, n_bucket)
+    return ops.packed_decode_attention(
+        q, c.k, c.v, c.resid_k, c.resid_v, c.n_comp, c.n_resid, SM,
+        backend=backend, tile_l=64)
+
+
+# ---------------------------------------------------------------------------
+# free-list allocator invariants
+# ---------------------------------------------------------------------------
+
+
+def _free_set(pool):
+    return set(np.asarray(pool.free[: int(pool.n_free)]).tolist())
+
+
+def test_pool_alloc_free_reuse():
+    pool = alloc_page_pool(batch=3, capacity=CAP, page_size=PAGE)  # 12 pages
+    assert pool.n_pool_pages == 12 and pool.max_pages == 4
+    assert _free_set(pool) == set(range(12))
+
+    # batched per-row pops are unique and shrink the stack
+    pool = pool_pop_rows(pool, jnp.array([True, False, True]),
+                         jnp.array([0, 0, 0]))
+    t = np.asarray(pool.page_table)
+    assert int(pool.n_free) == 10 and t[0, 0] != t[2, 0]
+    assert {int(t[0, 0]), int(t[2, 0])} & _free_set(pool) == set()
+
+    # static prefix pop for a prompt
+    pool, phys = pool_pop_prefix(pool, 1, 3)
+    assert int(pool.n_free) == 7 and len(set(np.asarray(phys).tolist())) == 3
+    np.testing.assert_array_equal(np.asarray(pool.page_table)[1, :3],
+                                  np.asarray(phys))
+
+    # pushing a row back restores exactly its pages
+    before = _free_set(pool)
+    pool = pool_push_row(pool, 1, jnp.int32(3))
+    assert int(pool.n_free) == 10
+    assert _free_set(pool) == before | set(np.asarray(phys).tolist())
+
+    # zero-page push is a no-op
+    pool2 = pool_push_row(pool, 0, jnp.int32(0))
+    assert int(pool2.n_free) == int(pool.n_free)
+
+
+def test_live_pages():
+    assert int(live_pages(jnp.int32(0), 256)) == 0
+    assert int(live_pages(jnp.int32(1), 256)) == 1
+    assert int(live_pages(jnp.int32(256), 256)) == 1
+    assert int(live_pages(jnp.int32(257), 256)) == 2
+
+
+def test_pool_accounting_under_slot_traffic(rng):
+    """Interleaved insert/append/reset keeps n_free == pool - live pages."""
+    _, cache = _pair()
+    step = jax.jit(append_token)
+
+    def check(c):
+        used = int(np.sum(np.ceil(np.asarray(c.n_comp) / PAGE)))
+        assert int(c.pages.n_free) == c.pages.n_pool_pages - used
+        # live table prefixes reference distinct physical pages
+        live = [
+            np.asarray(c.pages.page_table)[b, : int(np.ceil(n / PAGE))]
+            for b, n in enumerate(np.asarray(c.n_comp))
+        ]
+        flat = np.concatenate(live) if live else np.zeros(0)
+        assert len(set(flat.tolist())) == len(flat)
+
+    k0, v0 = _kv(rng, 300)
+    cache = insert_prefill(cache, 0, k0, v0)
+    check(cache)
+    k1, v1 = _kv(rng, 70)
+    cache = insert_prefill(cache, 1, k1, v1)
+    check(cache)
+    for _ in range(120):  # pushes row 0 across a page boundary
+        kt, vt = _kv(rng, 1, b=B)
+        cache = step(cache, kt, vt)
+    check(cache)
+    cache = reset_slot(cache, 0)
+    assert int(cache.n_comp[0]) == 0
+    check(cache)
+    # recycled slot reuses returned pages
+    k2, v2 = _kv(rng, 500)
+    cache = insert_prefill(cache, 0, k2, v2)
+    check(cache)
+
+
+@pytest.mark.parametrize("policy", ["packkv", "none"])
+def test_slot_ops_match_dense(rng, policy):
+    """The paged cache reproduces the dense cache's attention bit-for-bit
+    through interleaved insert/append/reset traffic (the dense path is
+    itself bit-identical to B=1 references, tests/test_slot_cache.py)."""
+    dense, paged = _pair(policy)
+    step = jax.jit(append_token)
+    q = jnp.asarray(rng.normal(size=(B, H * G, D)).astype(np.float32))
+
+    k0, v0 = _kv(rng, 300)
+    k1, v1 = _kv(rng, 70)
+    for slot, (k, v) in ((0, (k0, v0)), (1, (k1, v1))):
+        dense = insert_prefill(dense, slot, k, v)
+        paged = insert_prefill(paged, slot, k, v)
+    for _ in range(100):
+        kt, vt = _kv(rng, 1, b=B)
+        dense = step(dense, kt, vt)
+        paged = step(paged, kt, vt)
+    np.testing.assert_array_equal(np.asarray(dense.n_comp),
+                                  np.asarray(paged.n_comp))
+    np.testing.assert_array_equal(np.asarray(_attend(dense, q)),
+                                  np.asarray(_attend(paged, q)))
+
+    dense, paged = reset_slot(dense, 0), reset_slot(paged, 0)
+    k2, v2 = _kv(rng, 200)
+    dense = insert_prefill(dense, 0, k2, v2)
+    paged = insert_prefill(paged, 0, k2, v2)
+    for _ in range(40):
+        kt, vt = _kv(rng, 1, b=B)
+        dense = step(dense, kt, vt)
+        paged = step(paged, kt, vt)
+    np.testing.assert_array_equal(np.asarray(_attend(dense, q)),
+                                  np.asarray(_attend(paged, q)))
+
+
+# ---------------------------------------------------------------------------
+# kernel-level bit-identity at ragged lengths (both backends)
+# ---------------------------------------------------------------------------
+
+
+def _ragged_pair(rng, lengths, policy="packkv"):
+    dense, paged = _pair(policy)
+    for b, n in enumerate(lengths):
+        if n:
+            k, v = _kv(rng, n)
+            dense = insert_prefill(dense, b, k, v)
+            paged = insert_prefill(paged, b, k, v)
+    return dense, paged
+
+
+# dead row, page-boundary straddle (300 -> 256 + 44 resid), exactly one page,
+# and (256, 320, 260) pushing multiple rows past page 1
+@pytest.mark.parametrize("lengths", [(0, 300, 256), (256, 320, 260)])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_paged_attention_bit_identical(rng, lengths, backend):
+    dense, paged = _ragged_pair(rng, lengths)
+    q = jnp.asarray(rng.normal(size=(B, H * G, D)).astype(np.float32))
+    for n_bucket in (None, 512):
+        want = _attend(dense, q, n_bucket, backend)
+        got = _attend(paged, q, n_bucket, backend)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_flush_capped_at_capacity(rng):
+    """A row driven past capacity stops flushing: n_comp never exceeds
+    capacity and no page beyond the row's reservation is ever popped (the
+    invariant behind the scheduler's reservation ledger)."""
+    cfg = PackKVConfig(paged=True, page_size=PAGE, residual=R)
+    cache = alloc_layer_cache(cfg, B, H, D, CAP)
+    k0, v0 = _kv(rng, CAP)  # slot 0 starts at capacity
+    cache = insert_prefill(cache, 0, k0, v0)
+    free_before = int(cache.pages.n_free)
+    step = jax.jit(append_token)
+    for _ in range(R + 8):  # would cross the capacity boundary unguarded
+        kt, vt = _kv(rng, 1, b=B)
+        cache = step(cache, kt, vt)
+    assert int(cache.n_comp[0]) == CAP  # clamped, not grown
+    # rows 1/2 legitimately popped one page each for their own appends;
+    # row 0 (at capacity) popped NOTHING beyond its reservation
+    others = int(np.sum(np.ceil(np.asarray(cache.n_comp)[1:] / PAGE)))
+    assert int(cache.pages.n_free) == free_before - others
+    q = jnp.asarray(rng.normal(size=(B, H * G, D)).astype(np.float32))
+    assert np.isfinite(np.asarray(_attend(cache, q))).all()
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_paged_attention_full_pool(rng, backend):
+    """Every pool page allocated (all rows at capacity): still exact."""
+    dense, paged = _ragged_pair(rng, (CAP, CAP, CAP))
+    assert int(paged.pages.n_free) == 0
+    q = jnp.asarray(rng.normal(size=(B, H * G, D)).astype(np.float32))
+    np.testing.assert_array_equal(
+        np.asarray(_attend(paged, q, None, backend)),
+        np.asarray(_attend(dense, q, None, backend)))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_paged_tier_matvecs_bit_identical(rng, backend):
+    """kpack scores / vpack out through the page table == the dense launch
+    on the gathered view (tile skipping included)."""
+    dense, paged = _ragged_pair(rng, (300, 70, 0))
+    nv = paged.n_comp
+    n_tokens = 512
+    view = gather_paged(paged, n_tokens)
+    q = jnp.asarray(rng.normal(size=(B, H * G, D)).astype(np.float32))
+    s_paged = ops.packed_qk_scores_paged(
+        q, paged.k, paged.pages, n_tokens, SM, n_valid=nv, backend=backend,
+        tile_l=64)
+    s_dense = ops.packed_qk_scores(q, view.k, SM, n_valid=nv, backend=backend,
+                                   tile_l=64)
+    np.testing.assert_array_equal(np.asarray(s_paged), np.asarray(s_dense))
+    w = jax.nn.softmax(jnp.asarray(
+        rng.normal(size=(B, H * G, n_tokens)).astype(np.float32)), -1)
+    o_paged = ops.packed_weighted_v_paged(
+        w, paged.v, paged.pages, n_valid=nv, backend=backend, tile_l=64)
+    o_dense = ops.packed_weighted_v(w, view.v, n_valid=nv, backend=backend,
+                                    tile_l=64)
+    np.testing.assert_array_equal(np.asarray(o_paged), np.asarray(o_dense))
+
+
+def test_gather_matches_prefix_slice(rng):
+    """gather_paged == slice_compressed contract: a paged cache sliced to a
+    bucket exposes exactly the dense cache's sliced buffers (live bytes)."""
+    dense, paged = _ragged_pair(rng, (300, 70, 0))
+    for n_bucket in (256, 512, None):
+        dv = slice_compressed(dense, n_bucket)
+        pv = slice_compressed(paged, n_bucket)  # gathers
+        assert pv.pages is None and pv.k.capacity == dv.k.capacity
+        for b, n in enumerate(np.asarray(dense.n_comp)):
+            n = int(min(n, n_bucket or CAP))
+            np.testing.assert_array_equal(
+                np.asarray(pv.k.scale)[b, :, :n], np.asarray(dv.k.scale)[b, :, :n])
+            for tp, td in zip(pv.k.tiers, dv.k.tiers):
+                w = tp.width
+                np.testing.assert_array_equal(
+                    np.asarray(tp.payload)[b, ..., : n * w // 32],
+                    np.asarray(td.payload)[b, ..., : n * w // 32])
+
+
+# ---------------------------------------------------------------------------
+# scheduler: paged serving exact + oversubscribed admission blocking
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = SMOKES["llama2-7b"]
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _serve(cfg, params, policy, backend, paged, pool_pages=None, reqs=None):
+    eng = Engine(cfg, params, PackKVConfig(policy=policy),
+                 EngineConfig(capacity=512, max_batch=2, calib_tokens=128,
+                              decode_chunk=4, bucketed=True, bucket_unit=64,
+                              backend=backend, paged=paged, page_size=128,
+                              pool_pages=pool_pages))
+    srv = SlotServer(eng)
+    for r in reqs:
+        srv.submit(r)
+    srv.run()
+    return srv
+
+
+def _mixed_reqs(vocab, seed=3):
+    r = np.random.default_rng(seed)
+    return [
+        Request(rid=0, max_new=6, tokens=r.integers(0, vocab, 70)),
+        Request(rid=1, max_new=3, tokens=r.integers(0, vocab, 40)),
+        Request(rid=2, max_new=9, tokens=r.integers(0, vocab, 100)),
+        Request(rid=3, max_new=4, tokens=r.integers(0, vocab, 30)),
+    ]
+
+
+@pytest.mark.parametrize("policy,backend",
+                         [("packkv", "xla"), ("packkv", "pallas"),
+                          ("none", "xla")])
+def test_paged_serving_exact(smoke_setup, policy, backend):
+    cfg, params = smoke_setup
+    d = _serve(cfg, params, policy, backend, False,
+               reqs=_mixed_reqs(cfg.vocab))
+    p = _serve(cfg, params, policy, backend, True,
+               reqs=_mixed_reqs(cfg.vocab))
+    assert set(d.done) == set(p.done)
+    for rid in d.done:
+        np.testing.assert_array_equal(d.done[rid].output, p.done[rid].output)
+    assert p.stats.pages_reserved_peak > 0
+
+
+def test_oversubscribed_admission_blocks(smoke_setup):
+    """pool_pages=3 < max_batch * capacity/page (8): big requests (2 pages
+    each) serialize through the pool, admission blocks, outputs exact."""
+    cfg, params = smoke_setup
+    reqs = lambda: [Request(rid=i, max_new=8,
+                            tokens=r2.integers(0, cfg.vocab, 200))
+                    for i in range(3)]
+    r2 = np.random.default_rng(5)
+    d = _serve(cfg, params, "packkv", "xla", False, reqs=reqs())
+    r2 = np.random.default_rng(5)
+    p = _serve(cfg, params, "packkv", "xla", True, pool_pages=3, reqs=reqs())
+    for rid in d.done:
+        np.testing.assert_array_equal(d.done[rid].output, p.done[rid].output)
+    assert p.stats.admission_blocks > 0
+    assert p.stats.pages_reserved_peak <= 3
+    # a request that can never fit the pool is rejected at submit
+    eng = Engine(cfg, params, PackKVConfig(),
+                 EngineConfig(capacity=512, max_batch=2, calib_tokens=128,
+                              paged=True, page_size=128, pool_pages=2))
+    srv = SlotServer(eng)
+    with pytest.raises(ValueError, match="pages"):
+        srv.submit(Request(rid=9, max_new=100,
+                           tokens=np.zeros(400, np.int64)))
+    # ... and so is one beyond the capacity + residual contract (its row
+    # would stop flushing at capacity and degrade its own residual)
+    with pytest.raises(ValueError, match="capacity"):
+        srv.submit(Request(rid=10, max_new=300,
+                           tokens=np.zeros(400, np.int64)))
+    # ... and so is a prompt whose block-aligned length alone exceeds
+    # capacity (prefill would pop more pages than a table row holds, even
+    # though prompt + max_new fits capacity + residual)
+    with pytest.raises(ValueError, match="block-aligned"):
+        srv.submit(Request(rid=11, max_new=1,
+                           tokens=np.zeros(576, np.int64)))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: free-list under adversarial insert/evict sequences
+# ---------------------------------------------------------------------------
+
+
+def test_free_list_sequences_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    N_SLOTS, POOL, MAXP = 4, 8, 4
+
+    @hyp.given(st.lists(
+        st.tuples(st.integers(0, N_SLOTS - 1), st.integers(0, MAXP)),
+        max_size=30))
+    @hyp.settings(deadline=None, max_examples=50)
+    def run(ops_seq):
+        pool = alloc_page_pool(batch=N_SLOTS, capacity=MAXP * PAGE,
+                               page_size=PAGE, pool_pages=POOL)
+        held = {s: 0 for s in range(N_SLOTS)}  # model: pages per slot
+        for slot, n in ops_seq:
+            # evict whatever the slot holds, then insert an n-page request
+            # (skipped when it would oversubscribe — the scheduler's job)
+            pool = pool_push_row(pool, slot, jnp.int32(held[slot]))
+            held[slot] = 0
+            if sum(held.values()) + n > POOL:
+                continue
+            pool, phys = pool_pop_prefix(pool, slot, n)
+            held[slot] = n
+            assert len(set(np.asarray(phys).tolist())) == n
+        # accounting: stack height mirrors the model exactly, and live
+        # pages across slots are disjoint
+        assert int(pool.n_free) == POOL - sum(held.values())
+        live = [np.asarray(pool.page_table)[s, :n] for s, n in held.items()]
+        flat = np.concatenate(live) if live else np.zeros(0)
+        assert len(set(flat.tolist())) == len(flat)
+        assert set(flat.tolist()) | _free_set(pool) == set(range(POOL))
+
+    run()

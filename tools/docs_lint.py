@@ -1,0 +1,74 @@
+"""Docs lint: resolve README/docs cross-links and doctest README snippets.
+
+Checks, for README.md and every docs/*.md file:
+  * relative markdown links point at files that exist in the repo;
+  * fragment links (``file.md#anchor`` / ``#anchor``) match a heading in
+    the target file (GitHub slugification);
+then runs ``doctest`` over README.md's ``>>>`` examples with ``src`` on
+the path.
+
+Run:  python tools/docs_lint.py       (CI fast lane runs this)
+Exit code: number of broken links (+1 if doctests fail).
+"""
+from __future__ import annotations
+
+import doctest
+import re
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def slugify(heading: str) -> str:
+    """GitHub-style heading anchor."""
+    s = re.sub(r"[`*_]", "", heading.strip()).lower()
+    s = re.sub(r"[^\w\- ]", "", s)
+    return s.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set[str]:
+    return {slugify(h) for h in HEADING_RE.findall(path.read_text())}
+
+
+def check_file(path: Path) -> list[str]:
+    errors = []
+    for target in LINK_RE.findall(path.read_text()):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        ref, _, frag = target.partition("#")
+        dest = (path.parent / ref).resolve() if ref else path
+        if ref and not dest.exists():
+            errors.append(f"{path.relative_to(REPO)}: broken link -> {target}")
+            continue
+        if frag and dest.suffix == ".md" and slugify(frag) not in anchors_of(dest):
+            errors.append(
+                f"{path.relative_to(REPO)}: missing anchor -> {target}"
+            )
+    return errors
+
+
+def main() -> int:
+    files = [REPO / "README.md", *sorted((REPO / "docs").glob("*.md"))]
+    errors: list[str] = []
+    for f in files:
+        if not f.exists():
+            errors.append(f"missing doc file: {f.relative_to(REPO)}")
+            continue
+        errors.extend(check_file(f))
+    for e in errors:
+        print(f"LINT: {e}")
+
+    sys.path.insert(0, str(REPO / "src"))
+    fails, tried = doctest.testfile(
+        str(REPO / "README.md"), module_relative=False, verbose=False
+    )
+    print(f"docs lint: {len(files)} files, {len(errors)} broken links; "
+          f"README doctests: {tried - fails}/{tried} pass")
+    return len(errors) + (1 if fails else 0)
+
+
+if __name__ == "__main__":
+    sys.exit(main())
