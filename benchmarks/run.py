@@ -15,6 +15,7 @@ from . import (
     bench_k_compression,
     bench_pack_size,
     bench_paged,
+    bench_prefix,
     bench_ragged,
     bench_repacking,
     bench_scaling,
@@ -35,6 +36,7 @@ BENCHES = {
     "beyond_continuous_batching": bench_continuous.main,
     "beyond_ragged_length_aware": bench_ragged.main,
     "beyond_paged_pool": bench_paged.main,
+    "beyond_prefix_cache": bench_prefix.main,
 }
 
 

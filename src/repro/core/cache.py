@@ -41,6 +41,11 @@ Invariants this module maintains (see docs/architecture.md for diagrams):
     holds ZERO pool pages in paged mode.
   * a slot's live pages are the dense prefix ``page_table[b, :ceil(n_comp
     / page_size)]``; entries past it are stale but always in-range ids.
+  * pool pages are REFCOUNTED (``PagePool.ref``): a page is free iff its
+    count is zero, distinct slots (and the serving prefix index) may hold
+    the same physical page, and a page with ``ref > 1`` is immutable —
+    ``append_token``'s flush copies-on-write before mutating it. See the
+    ``PagePool`` docstring and docs/architecture.md for the full contract.
 """
 from __future__ import annotations
 
@@ -122,21 +127,28 @@ class PackKVConfig:
 
 @pytree_dataclass(meta_fields=("page_size",))
 class PagePool:
-    """Free-list page allocator + per-slot page tables (paged mode only).
+    """Refcounted page allocator + per-slot page tables (paged mode only).
 
     ONE pool instance serves K, V and (policy='none') raw storage of a
     layer: they append in lock-step, so a single physical page id addresses
     the K page, the V page and the raw page holding the same
-    ``page_size``-token span. Invariants:
+    ``page_size``-token span. The refcount contract (PR 5; the PR-4
+    exclusive-ownership invariant is the ``ref <= 1`` special case):
 
-      * ``free[:n_free]`` are exactly the unallocated physical page ids
-        (entries above ``n_free`` are stale pops, never read).
+      * ``ref[p]`` counts the HOLDERS of physical page ``p``: each slot row
+        whose live table prefix contains ``p`` plus (serving) the host-side
+        prefix index. ``ref[p] == 0`` ⇔ ``p`` is free ⇔ ``p`` is on the
+        stack: ``free[:n_free]`` are exactly the ``ref == 0`` ids (entries
+        above ``n_free`` are stale pops, never read).
       * a slot's live pages are the DENSE PREFIX
         ``page_table[b, :ceil(n_comp[b] / page_size)]``; entries past that
         prefix are stale but always in-range ids (gathers never go OOB).
-      * a physical page is owned by at most one (slot, logical index):
-        pops hand out unique ids, and a slot's pages return to the stack
-        (``reset_slot`` / re-insert) before the slot is reused.
+      * pops hand out unique ids at ``ref = 1``; releasing a holder
+        (``pool_release_row`` / ``release_pages``) decrements, and a page
+        returns to the stack exactly when its count reaches zero.
+      * a page with ``ref > 1`` is READ-ONLY: ``append_token``'s flush
+        copy-on-write pops a private replacement before mutating it, so
+        shared bytes never change while anyone else holds the page.
       * pool exhaustion is the SCHEDULER's job to prevent (page-reservation
         admission in ``serving.engine.SlotServer``); in-graph pops clamp
         their stack reads, so an impossible over-pop corrupts data but
@@ -146,6 +158,7 @@ class PagePool:
     page_table: Array  # i32 [B, max_pages] logical -> physical page id
     free: Array  # i32 [n_pool_pages] stack of free physical page ids
     n_free: Array  # i32 [] live stack height
+    ref: Array  # i32 [n_pool_pages] holders per page (0 == free)
     page_size: int
 
     @property
@@ -198,6 +211,7 @@ def alloc_page_pool(
         # descending stack so pops hand out 0, 1, 2, ... (deterministic)
         free=jnp.arange(P - 1, -1, -1, dtype=jnp.int32),
         n_free=jnp.int32(P),
+        ref=jnp.zeros((P,), jnp.int32),
         page_size=page_size,
     )
 
@@ -474,27 +488,33 @@ def live_pages(n_comp: Array, page_size: int) -> Array:
 def pool_pop_rows(pool: PagePool, need: Array, lp: Array) -> PagePool:
     """Pop one page for every row with ``need[b]`` and record it at logical
     index ``lp[b]`` of that row's table. Rows without ``need`` keep their
-    current entry. Pops are unique (distinct stack positions per row)."""
+    current entry. Pops are unique (distinct stack positions per row) and
+    land at ``ref = 1``."""
     B = need.shape[0]
+    P = pool.n_pool_pages
     rank = jnp.cumsum(need.astype(jnp.int32)) - 1  # position among needers
-    pos = jnp.clip(pool.n_free - 1 - rank, 0, pool.n_pool_pages - 1)
+    pos = jnp.clip(pool.n_free - 1 - rank, 0, P - 1)
     phys = pool.free[pos]
     rows = jnp.arange(B)
     lp_c = jnp.clip(lp, 0, pool.max_pages - 1)
     cur = pool.page_table[rows, lp_c]
     table = pool.page_table.at[rows, lp_c].set(jnp.where(need, phys, cur))
+    ref = pool.ref.at[jnp.where(need, phys, P)].set(1, mode="drop")
     n_free = jnp.maximum(pool.n_free - need.astype(jnp.int32).sum(), 0)
-    return dataclasses.replace(pool, page_table=table, n_free=n_free)
+    return dataclasses.replace(pool, page_table=table, ref=ref, n_free=n_free)
 
 
-def pool_pop_prefix(pool: PagePool, slot, k: int) -> tuple[PagePool, Array]:
-    """Pop ``k`` (STATIC) pages and write them to ``page_table[slot, :k]``.
+def pool_pop_prefix(pool: PagePool, slot, k: int,
+                    lp0: int = 0) -> tuple[PagePool, Array]:
+    """Pop ``k`` (STATIC) pages and write them to
+    ``page_table[slot, lp0:lp0 + k]`` at ``ref = 1``.
 
     Returns (pool, phys i32 [k]). Used by prefill-insert, where the page
-    count is static because the prompt length is."""
-    if k > pool.max_pages:  # static: fails at trace time with a clear error
+    count is static because the prompt length is; ``lp0 > 0`` places the
+    pops after a shared prefix mapped by ``pool_map_prefix``."""
+    if lp0 + k > pool.max_pages:  # static: fails at trace time, clear error
         raise ValueError(
-            f"prompt needs {k} pages but a slot's table holds "
+            f"prompt needs {lp0 + k} pages but a slot's table holds "
             f"{pool.max_pages}; its block-aligned length exceeds the "
             "compressed capacity — reject upstream (SlotServer.submit does)"
         )
@@ -503,10 +523,12 @@ def pool_pop_prefix(pool: PagePool, slot, k: int) -> tuple[PagePool, Array]:
     pos = jnp.clip(pool.n_free - k + jnp.arange(k), 0, pool.n_pool_pages - 1)
     phys = pool.free[pos]
     table = jax.lax.dynamic_update_slice(
-        pool.page_table, phys[None, :], (jnp.asarray(slot, jnp.int32), 0)
+        pool.page_table, phys[None, :], (jnp.asarray(slot, jnp.int32), lp0)
     )
+    ref = pool.ref.at[phys].set(1)
     n_free = jnp.maximum(pool.n_free - k, 0)
-    return dataclasses.replace(pool, page_table=table, n_free=n_free), phys
+    return dataclasses.replace(pool, page_table=table, ref=ref,
+                               n_free=n_free), phys
 
 
 def pool_pop_all_rows(pool: PagePool, k: int) -> tuple[PagePool, Array]:
@@ -521,23 +543,80 @@ def pool_pop_all_rows(pool: PagePool, k: int) -> tuple[PagePool, Array]:
                    pool.n_pool_pages - 1)
     phys = pool.free[pos].reshape(B, k)
     table = pool.page_table.at[:, :k].set(phys)
+    ref = pool.ref.at[phys.reshape(-1)].set(1)
     n_free = jnp.maximum(pool.n_free - total, 0)
-    return dataclasses.replace(pool, page_table=table, n_free=n_free), phys
+    return dataclasses.replace(pool, page_table=table, ref=ref,
+                               n_free=n_free), phys
 
 
-def pool_push_row(pool: PagePool, slot, n_pages: Array) -> PagePool:
-    """Return row ``slot``'s first ``n_pages`` (traced) table entries to the
-    free stack. The table row is left stale (entries stay in-range)."""
+def _pool_release_ids(pool: PagePool, ids: Array) -> PagePool:
+    """Drop ONE reference per entry of ``ids`` (i32 [m]).
+
+    Entries ``>= n_pool_pages`` are sentinels (ignored); duplicates are
+    allowed and each costs one reference (two rows COW-releasing the same
+    shared page in one flush). Pages whose count reaches zero return to the
+    free stack exactly once. Upstream contract violations are CONTAINED:
+    per-id decrements are clamped to the page's current count (an id's
+    occurrences past its refcount are dropped), so a count never goes
+    negative, a free page is never double-pushed, and the conservation
+    invariant survives to point at the buggy caller. O(m²) on the
+    duplicate mask — m is a batch or table width.
+    """
+    P = pool.n_pool_pages
+    ids = jnp.asarray(ids, jnp.int32)
+    ids_c = jnp.clip(ids, 0, P - 1)
+    in_range = ids < P
+    eq = ids[:, None] == ids[None, :]
+    # occurrence rank among duplicates; only the first ref[id] occurrences
+    # actually decrement (the clamp that contains over-releases)
+    occ = jnp.sum(jnp.tril(eq, -1) & in_range[None, :], axis=1)
+    valid = in_range & (occ < pool.ref[ids_c])
+    ref = pool.ref.at[jnp.where(valid, ids, P)].add(-1, mode="drop")
+    hit0 = valid & (occ == 0) & (ref[ids_c] == 0)
+    dst = jnp.where(hit0, pool.n_free + jnp.cumsum(hit0) - 1, P)
+    free = pool.free.at[dst].set(ids, mode="drop")
+    return dataclasses.replace(
+        pool, ref=ref, free=free, n_free=pool.n_free + hit0.sum()
+    )
+
+
+def pool_release_row(pool: PagePool, slot, n_pages: Array) -> PagePool:
+    """Release row ``slot``'s first ``n_pages`` (traced) table entries: one
+    reference each; pages reaching ``ref == 0`` go back to the free stack.
+    The table row is left stale (entries stay in-range)."""
     mp = pool.max_pages
     row = jax.lax.dynamic_slice(
         pool.page_table, (jnp.asarray(slot, jnp.int32), 0), (1, mp)
     )[0]
-    ar = jnp.arange(mp)
     k = jnp.clip(jnp.asarray(n_pages, jnp.int32), 0, mp)
-    # out-of-range positions are dropped, so only k entries actually land
-    pos = jnp.where(ar < k, pool.n_free + ar, pool.n_pool_pages)
-    free = pool.free.at[pos].set(row, mode="drop")
-    return dataclasses.replace(pool, free=free, n_free=pool.n_free + k)
+    ids = jnp.where(jnp.arange(mp) < k, row, pool.n_pool_pages)
+    return _pool_release_ids(pool, ids)
+
+
+def pool_map_prefix(pool: PagePool, slot, phys: Array) -> PagePool:
+    """SHARE: map already-allocated pages into ``page_table[slot, :k]`` by
+    reference (``ref += 1``). ``phys``: i32 [k], STATIC k; every entry must
+    currently have ``ref >= 1`` (held by another slot or the prefix index),
+    so a mapped page is never simultaneously on the free stack."""
+    k = phys.shape[0]
+    if k == 0:
+        return pool
+    table = jax.lax.dynamic_update_slice(
+        pool.page_table, phys[None, :], (jnp.asarray(slot, jnp.int32), 0)
+    )
+    ref = pool.ref.at[phys].add(1)
+    return dataclasses.replace(pool, page_table=table, ref=ref)
+
+
+def pool_acquire_ids(pool: PagePool, ids: Array) -> PagePool:
+    """Add one reference per entry of ``ids`` (sentinel ``>= n_pool_pages``
+    entries ignored). The prefix index pins its cached pages with this —
+    acquired BEFORE the owning slot releases, so the count never dips to
+    zero in between."""
+    P = pool.n_pool_pages
+    ids = jnp.asarray(ids, jnp.int32)
+    ref = pool.ref.at[jnp.where(ids < P, ids, P)].add(1, mode="drop")
+    return dataclasses.replace(pool, ref=ref)
 
 
 def _pool_write_rows(
@@ -649,8 +728,9 @@ def gather_paged(cache: LayerKVCache, n_bucket: int | None = None) -> LayerKVCac
     assert cache.pages is not None
     page = cache.cfg.page_size
     n = cache.capacity if n_bucket is None else min(n_bucket, cache.capacity)
-    assert n % page == 0, (n, page)
-    idx = cache.pages.page_table[:, : n // page]
+    from .tiered import page_prefix_ids
+
+    idx = page_prefix_ids(cache.pages.page_table, n, page)
     if cache.cfg.policy == "none":
         from .tiered import gather_pool_leaf
 
@@ -787,6 +867,15 @@ def _flush_paged(c: LayerKVCache, need: Array, blk_k: Array,
     on a page boundary pop a fresh page first. Masked rows route their page
     write out of range (dropped) so they never race a live page.
 
+    COPY-ON-WRITE: a row about to mutate a page with ``ref > 1`` (shared
+    with another slot or pinned by the prefix index) pops a private
+    replacement instead — the page write is read-modify-write, so reading
+    the SHARED page and writing the FRESH one copies the prefix bytes and
+    lands the new block in a single op. The shared page's bytes never
+    change, and the row drops its reference to it. (The serving path keeps
+    shared pages full, so COW never fires there — it is the safety net that
+    makes ``ref > 1`` pages immutable unconditionally.)
+
     Rows at capacity NEVER flush (the dense path would overwrite its own
     last block — contained; here an over-cap flush would pop a page the
     scheduler's reservation ledger never counted, so the cap is what makes
@@ -796,25 +885,34 @@ def _flush_paged(c: LayerKVCache, need: Array, blk_k: Array,
     """
     cfg = c.cfg
     page = cfg.page_size
+    pool = c.pages
+    P = pool.n_pool_pages
     lp = c.n_comp // page  # logical page the block lands in
     wo = c.n_comp % page  # within-page token offset (block-aligned)
-    pool = pool_pop_rows(c.pages, need & (wo == 0), lp)
     rows = jnp.arange(need.shape[0])
-    phys = pool.page_table[rows, jnp.clip(lp, 0, pool.max_pages - 1)]
-    phys_w = jnp.where(need, phys, pool.n_pool_pages)  # mask -> dropped
+    lp_c = jnp.clip(lp, 0, pool.max_pages - 1)
+    old = pool.page_table[rows, lp_c]
+    cow = need & (wo > 0) & (pool.ref[old] > 1)  # mid-page write, shared
+    pool = pool_pop_rows(pool, (need & (wo == 0)) | cow, lp)
+    phys = pool.page_table[rows, lp_c]
+    # COW rows READ the shared page (so its prefix is copied through the
+    # RMW) and drop their reference to it; everyone else reads in place
+    phys_r = jnp.where(cow, old, phys)
+    pool = _pool_release_ids(pool, jnp.where(cow, old, P))
+    phys_w = jnp.where(need, phys, P)  # mask -> dropped
     if cfg.policy == "none":
         return dataclasses.replace(
             c,
             pages=pool,
-            raw_k=_pool_write_rows(c.raw_k, blk_k, phys, phys_w, wo, axis=-2),
-            raw_v=_pool_write_rows(c.raw_v, blk_v, phys, phys_w, wo, axis=-2),
+            raw_k=_pool_write_rows(c.raw_k, blk_k, phys_r, phys_w, wo, axis=-2),
+            raw_v=_pool_write_rows(c.raw_v, blk_v, phys_r, phys_w, wo, axis=-2),
         )
     kc, vc = compress_block(blk_k, blk_v, cfg, c.k.chan_perm, c.v.chan_perm)
     return dataclasses.replace(
         c,
         pages=pool,
-        k=_pool_write_tiered(c.k, kc, phys, phys_w, wo),
-        v=_pool_write_tiered(c.v, vc, phys, phys_w, wo),
+        k=_pool_write_tiered(c.k, kc, phys_r, phys_w, wo),
+        v=_pool_write_tiered(c.v, vc, phys_r, phys_w, wo),
     )
 
 
@@ -918,7 +1016,7 @@ def reset_slot(cache: LayerKVCache, slot) -> LayerKVCache:
 
 
 def _reset_slot_paged(cache: LayerKVCache, slot) -> LayerKVCache:
-    pool = pool_push_row(
+    pool = pool_release_row(
         cache.pages, slot,
         live_pages(cache.n_comp[slot], cache.cfg.page_size),
     )
@@ -1011,49 +1109,68 @@ def paged_mini_spec(cfg: PackKVConfig, L: int) -> tuple[PackKVConfig, int, int]:
 
 
 def insert_row_paged(cache: LayerKVCache, slot, row: LayerKVCache,
-                     n_pages: int) -> LayerKVCache:
+                     n_pages: int, n_shared: int = 0,
+                     shared_phys: Optional[Array] = None) -> LayerKVCache:
     """Scatter a DENSE single-row cache into row ``slot`` of a paged cache.
 
     ``row`` is a dense-layout batch-1 cache (e.g. a prompt compressed by a
     B=1 ``prefill_cache``) whose compressed capacity is ``n_pages`` whole
     pages (STATIC — derived from the static prompt length). The slot's old
-    pages go back to the free stack, ``n_pages`` fresh ones are popped, and
-    the row's compressed bytes land in them page-by-page; residual buffer,
-    counters and ``chan_perm`` are scattered slot-wise. Works on flat and
+    pages are released, ``n_pages - n_shared`` fresh ones are popped, and
+    the row's newly-compressed bytes land in them page-by-page; residual
+    buffer, counters and ``chan_perm`` are scattered slot-wise.
+
+    PREFIX SHARING: ``shared_phys`` (i32 [n_shared], STATIC length) maps
+    already-allocated pages into the table's leading entries BY REFERENCE
+    (``pool_map_prefix``) — their bytes are not touched and ``row``'s first
+    ``n_shared`` pages of compressed content are ignored (they were seeded
+    FROM those pages, see ``seed_prefix_from_pages``). Works on flat and
     stacked ([n_layers, ...]) caches; ``slot`` may be traced.
     """
     if cache.n_comp.ndim == 2:  # stacked: identical op per layer
         return jax.vmap(
-            lambda c, r: _insert_row_paged(c, slot, r, n_pages)
+            lambda c, r: _insert_row_paged(c, slot, r, n_pages, n_shared,
+                                           shared_phys)
         )(cache, row)
-    return _insert_row_paged(cache, slot, row, n_pages)
+    return _insert_row_paged(cache, slot, row, n_pages, n_shared, shared_phys)
 
 
 def _insert_row_paged(cache: LayerKVCache, slot, row: LayerKVCache,
-                      n_pages: int) -> LayerKVCache:
+                      n_pages: int, n_shared: int = 0,
+                      shared_phys: Optional[Array] = None) -> LayerKVCache:
     cfg = cache.cfg
-    # 1) free whatever the slot held (no-op for a reset/fresh slot)
-    pool = pool_push_row(
+    page = cfg.page_size
+    # 1) release whatever the slot held (no-op for a reset/fresh slot)
+    pool = pool_release_row(
         cache.pages, slot, live_pages(cache.n_comp[slot], cfg.page_size)
     )
-    # 2) pop the prompt's pages into the table row's dense prefix
-    pool, phys = pool_pop_prefix(pool, slot, n_pages)
+    # 2) map the shared prefix by reference, pop fresh pages for the rest
+    if n_shared:
+        pool = pool_map_prefix(pool, slot, shared_phys)
+    pool, phys = pool_pop_prefix(pool, slot, n_pages - n_shared, lp0=n_shared)
     new = dataclasses.replace(cache, pages=pool)
-    # 3) scatter the compressed bytes into the popped pages
-    if n_pages:
+    # 3) scatter the newly-compressed bytes into the popped pages
+    if n_pages - n_shared:
         if cfg.policy == "none":
+            sfx = lambda a: a[..., n_shared * page:, :]
             new = dataclasses.replace(
                 new,
-                raw_k=_scatter_pages(cache.raw_k, row.raw_k, phys[None],
+                raw_k=_scatter_pages(cache.raw_k, sfx(row.raw_k), phys[None],
                                      axis=-2),
-                raw_v=_scatter_pages(cache.raw_v, row.raw_v, phys[None],
+                raw_v=_scatter_pages(cache.raw_v, sfx(row.raw_v), phys[None],
                                      axis=-2),
             )
         else:
+            from .tiered import slice_tiered_suffix
+
             new = dataclasses.replace(
                 new,
-                k=_scatter_pages_tiered(cache.k, row.k, phys[None]),
-                v=_scatter_pages_tiered(cache.v, row.v, phys[None]),
+                k=_scatter_pages_tiered(
+                    cache.k, slice_tiered_suffix(row.k, n_shared * page),
+                    phys[None]),
+                v=_scatter_pages_tiered(
+                    cache.v, slice_tiered_suffix(row.v, n_shared * page),
+                    phys[None]),
             )
     # 4) per-slot metadata: channel permutation, residual, counters
     if cfg.policy != "none":
@@ -1072,4 +1189,166 @@ def _insert_row_paged(cache: LayerKVCache, slot, row: LayerKVCache,
         resid_v=new.resid_v.at[slot].set(row.resid_v[0].astype(new.resid_v.dtype)),
         n_comp=new.n_comp.at[slot].set(row.n_comp[0]),
         n_resid=new.n_resid.at[slot].set(row.n_resid[0]),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Prefix sharing (refcounted pages; the host side lives in serving/engine.py)
+# ---------------------------------------------------------------------------
+
+
+def _per_layer(cache: LayerKVCache, fn):
+    """Apply ``fn`` per layer of a possibly-stacked cache pytree."""
+    if cache.n_comp.ndim == 2:  # stacked [n_layers, B]
+        return jax.vmap(fn)(cache)
+    return fn(cache)
+
+
+def share_pages(cache: LayerKVCache, slot, phys: Array) -> LayerKVCache:
+    """Map already-allocated pages into the leading table entries of row
+    ``slot`` BY REFERENCE (``ref += 1``; bytes untouched). ``phys``: i32
+    [k], STATIC length; counters/metadata are the caller's to set (a full
+    admission goes through ``insert_row_paged``, which composes this with
+    the suffix pops). Stacked-aware; ``slot`` may be traced."""
+    return _per_layer(
+        cache,
+        lambda c: dataclasses.replace(
+            c, pages=pool_map_prefix(c.pages, slot, phys)
+        ),
+    )
+
+
+def acquire_pages(cache: LayerKVCache, ids: Array) -> LayerKVCache:
+    """Add one reference per entry of ``ids`` on every layer's pool —
+    how the host-side prefix index pins cached pages. Sentinel entries
+    (``>= pool_pages``) are ignored, so callers can pad to a fixed length
+    for a single jit specialization."""
+    return _per_layer(
+        cache,
+        lambda c: dataclasses.replace(
+            c, pages=pool_acquire_ids(c.pages, ids)
+        ),
+    )
+
+
+def release_pages(cache: LayerKVCache, ids: Array) -> LayerKVCache:
+    """Drop one reference per entry of ``ids`` on every layer's pool; pages
+    reaching ``ref == 0`` return to the free stack (prefix-index eviction).
+    Sentinel entries are ignored (fixed-length padding, as above)."""
+    return _per_layer(
+        cache,
+        lambda c: dataclasses.replace(
+            c, pages=_pool_release_ids(c.pages, ids)
+        ),
+    )
+
+
+def seed_prefix_from_pages(cache: LayerKVCache, mini: LayerKVCache,
+                           phys: Array, n_prefix: int,
+                           k_perm: Optional[Array] = None,
+                           v_perm: Optional[Array] = None) -> LayerKVCache:
+    """Seed a DENSE mini-cache with a shared compressed prefix.
+
+    Gathers the ``n_prefix`` tokens held by pool pages ``phys`` (i32 [k],
+    STATIC — ``k * page_size == n_prefix``) of the paged ``cache`` into the
+    leading tokens of ``mini`` and sets ``n_comp = n_prefix``, ``n_resid =
+    0``. ``k_perm``/``v_perm`` ([..., H, D], from the prefix index entry)
+    restore the channel calibration the prefix was compressed under — the
+    chunked prefill then appends suffix blocks under the SAME permutation,
+    which is what makes a cache-hit admission bit-identical to a cold run.
+    Both caches may be stacked ([n_layers, ...])."""
+    from .tiered import gather_pool_leaf, gather_tiered_pages, write_tiered_prefix
+
+    def one(c: LayerKVCache, m: LayerKVCache, kp, vp) -> LayerKVCache:
+        idx = phys[None]  # [1, k]
+        if c.cfg.policy == "none":
+            rk = gather_pool_leaf(c.raw_k, idx, token_axis=-2)
+            rv = gather_pool_leaf(c.raw_v, idx, token_axis=-2)
+            m = dataclasses.replace(
+                m,
+                raw_k=m.raw_k.at[..., :n_prefix, :].set(rk.astype(m.raw_k.dtype)),
+                raw_v=m.raw_v.at[..., :n_prefix, :].set(rv.astype(m.raw_v.dtype)),
+            )
+        else:
+            mk = write_tiered_prefix(m.k, gather_tiered_pages(c.k, idx))
+            mv = write_tiered_prefix(m.v, gather_tiered_pages(c.v, idx))
+            m = dataclasses.replace(
+                m,
+                k=dataclasses.replace(mk, chan_perm=kp[None]),
+                v=dataclasses.replace(mv, chan_perm=vp[None]),
+            )
+        B = m.n_comp.shape[0]
+        return dataclasses.replace(
+            m,
+            n_comp=jnp.full((B,), n_prefix, jnp.int32),
+            n_resid=jnp.zeros((B,), jnp.int32),
+        )
+
+    if cache.n_comp.ndim == 2:  # stacked: per-layer perms ride along
+        if k_perm is None:
+            return jax.vmap(lambda c, m: one(c, m, None, None))(cache, mini)
+        return jax.vmap(one)(cache, mini, k_perm, v_perm)
+    return one(cache, mini, k_perm, v_perm)
+
+
+def prefill_append(cache: LayerKVCache, k: Array, v: Array,
+                   calibrate: bool) -> LayerKVCache:
+    """Append one segment of prefill K/V ([B,H,S,D], static S) to a DENSE
+    cache at each row's own ``n_comp`` (the chunked-prefill building block).
+
+    Preconditions (chunked prefill maintains both): ``n_resid == 0`` and
+    ``n_comp`` block-aligned on every row. Complete blocks compress under
+    the cache's EXISTING ``chan_perm``; ``calibrate=True`` — only the first
+    segment of a cold chunked prefill — computes the permutation from THIS
+    segment (the "page-0 calibration" that makes a shared prefix reusable:
+    any request matching at least one page inherits the identical
+    calibration data). The sub-block remainder goes to the residual.
+    """
+    cfg = cache.cfg
+    S = k.shape[-2]
+    Lb = (S // cfg.block) * cfg.block
+    new = cache
+    if Lb:
+        kb, vb = k[..., :Lb, :], v[..., :Lb, :]
+        if cfg.policy == "none":
+            new = dataclasses.replace(
+                new,
+                raw_k=row_update_tokens(new.raw_k, kb, new.n_comp),
+                raw_v=row_update_tokens(new.raw_v, vb, new.n_comp),
+            )
+        else:
+            if calibrate:
+                k_perm, v_perm = calibrate_channel_tiers(kb, vb, cfg)
+            else:
+                k_perm, v_perm = new.k.chan_perm, new.v.chan_perm
+            kc, vc = compress_block(kb, vb, cfg, k_perm, v_perm)
+            new = dataclasses.replace(
+                new,
+                k=append_block_rows(
+                    dataclasses.replace(new.k, chan_perm=k_perm), kc,
+                    new.n_comp),
+                v=append_block_rows(
+                    dataclasses.replace(new.v, chan_perm=v_perm), vc,
+                    new.n_comp),
+            )
+    elif calibrate and cfg.policy != "none":
+        # sub-block prompt: identity calibration, same as prefill_cache
+        k_perm, v_perm = calibrate_channel_tiers(k[..., :0, :], v[..., :0, :],
+                                                 cfg)
+        new = dataclasses.replace(
+            new,
+            k=dataclasses.replace(new.k, chan_perm=k_perm),
+            v=dataclasses.replace(new.v, chan_perm=v_perm),
+        )
+    rem = S - Lb
+    if rem:
+        new = dataclasses.replace(
+            new,
+            resid_k=row_update_tokens(new.resid_k, k[..., Lb:, :],
+                                      new.n_resid),
+            resid_v=row_update_tokens(new.resid_v, v[..., Lb:, :],
+                                      new.n_resid),
+        )
+    return dataclasses.replace(
+        new, n_comp=new.n_comp + Lb, n_resid=new.n_resid + rem
     )

@@ -424,6 +424,66 @@ def slice_tiered_prefix(cache: TieredCache, n: int) -> TieredCache:
     )
 
 
+def slice_tiered_suffix(cache: TieredCache, start: int) -> TieredCache:
+    """Static suffix view: every buffer's tokens from ``start`` onward.
+
+    The mirror of ``slice_tiered_prefix`` — ``start`` must be a python int
+    multiple of ``4 * pack_size`` (page starts always are). Used to scatter
+    only the NEWLY-compressed pages of a prefix-cache admission while the
+    shared prefix is mapped by reference."""
+    if start == 0:
+        return cache
+    spec = cache.spec
+    assert start % (4 * spec.pack_size) == 0, (start, spec.pack_size)
+    P0 = start // spec.pack_size
+    tiers = tuple(
+        TierBuffer(
+            payload=t.payload[..., start * t.width // 32:],
+            mins=t.mins[..., P0:],
+            shifts=t.shifts[..., P0 // 4:],
+            width=t.width,
+            pack_size=t.pack_size,
+        )
+        for t in cache.tiers
+    )
+    return TieredCache(
+        tiers=tiers,
+        chan_perm=cache.chan_perm,
+        scale=cache.scale[..., start:],
+        zero=cache.zero[..., start:],
+        spec=spec,
+    )
+
+
+def write_tiered_prefix(dst: TieredCache, src: TieredCache) -> TieredCache:
+    """Write ``src``'s whole token range into the leading tokens of ``dst``.
+
+    Data leaves only (payload/mins/shifts/scale/zero); ``dst.chan_perm`` is
+    kept — per-slot metadata is the caller's to set. ``src.capacity`` must
+    be a multiple of ``4 * pack_size`` (gathered whole pages always are).
+    Used to seed a dense mini-cache with a shared compressed prefix."""
+    n = src.capacity
+    spec = dst.spec
+    assert n % (4 * spec.pack_size) == 0, (n, spec.pack_size)
+    put = lambda d, s: d.at[..., : s.shape[-1]].set(s.astype(d.dtype))
+    tiers = tuple(
+        TierBuffer(
+            payload=put(dt.payload, st.payload) if dt.width else dt.payload,
+            mins=put(dt.mins, st.mins),
+            shifts=put(dt.shifts, st.shifts),
+            width=dt.width,
+            pack_size=dt.pack_size,
+        )
+        for dt, st in zip(dst.tiers, src.tiers)
+    )
+    return dataclasses.replace(
+        dst,
+        tiers=tiers,
+        scale=put(dst.scale, src.scale),
+        zero=put(dst.zero, src.zero),
+    )
+
+
 def alloc_tiered_pool(
     batch: int, h_kv: int, n_pool_pages: int, page_size: int, spec: TierSpec
 ) -> TieredCache:
@@ -457,6 +517,31 @@ def alloc_tiered_pool(
         zero=jnp.zeros((h_kv, n_pool_pages, page_size), jnp.float32),
         spec=spec,
     )
+
+
+def page_prefix_ids(page_table: Array, n_tokens: int, page_size: int) -> Array:
+    """THE page-resolution arithmetic: the page-table prefix addressing the
+    first ``n_tokens`` of every row.
+
+    ``n_tokens`` is STATIC and must be a whole number of pages (buckets are
+    page-aligned by ``Engine.bucket_for``). Every dense-view consumer —
+    ``cache.gather_paged``, the kernel-side rank-1 metadata prep in
+    ``kernels/ops.py`` and the tier gathers below — resolves pages through
+    this one helper so the ``[B, n_tokens // page_size]`` contract lives in
+    exactly one place.
+    """
+    assert n_tokens % page_size == 0, (n_tokens, page_size)
+    return page_table[..., : n_tokens // page_size]
+
+
+def gather_page_meta(leaf: Array, page_table: Array, n_tokens: int,
+                     page_size: int) -> Array:
+    """Rank-1 per-token metadata (scale/zero) gathered through the table.
+
+    The paged Pallas kernels resolve payload pages IN-KERNEL but take
+    scale/zero as dense rank-1 inputs — this is that kernel-side metadata
+    prep, sharing ``page_prefix_ids`` with the full gathers."""
+    return gather_pool_leaf(leaf, page_prefix_ids(page_table, n_tokens, page_size))
 
 
 def gather_pool_leaf(leaf: Array, idx: Array, token_axis: int = -1) -> Array:

@@ -13,7 +13,12 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..core.tiered import TieredCache, chan_inverse_perm, gather_pool_leaf
+from ..core.tiered import (
+    TieredCache,
+    chan_inverse_perm,
+    gather_page_meta,
+    page_prefix_ids,
+)
 from . import ref
 from .kpack_matvec import kpack_tier_scores, kpack_tier_scores_paged
 from .packed_attention import fused_packed_attention, fused_packed_attention_paged
@@ -153,10 +158,10 @@ def packed_qk_scores_paged(
     """
     B, H, D = q.shape
     h_kv = kc.scale.shape[0]
-    idx = pages.page_table[:, : n_tokens // pages.page_size]
     if backend == "xla":
         from ..core.tiered import gather_tiered_pages
 
+        idx = page_prefix_ids(pages.page_table, n_tokens, pages.page_size)
         return packed_qk_scores(
             q, gather_tiered_pages(kc, idx), sm_scale, n_valid=n_valid,
             backend="xla",
@@ -178,7 +183,9 @@ def packed_qk_scores_paged(
         )
         off += c
     qsum = jnp.sum(qf, axis=-1, keepdims=True)
-    flatm = lambda a: gather_pool_leaf(a, idx).reshape(BH, n_tokens)
+    flatm = lambda a: gather_page_meta(
+        a, pages.page_table, n_tokens, pages.page_size
+    ).reshape(BH, n_tokens)
     zc = jnp.where(ref.valid_mask(nv, n_tokens, lead=2), flatm(kc.zero)[:, None, :], 0.0)
     scores = si * flatm(kc.scale)[:, None, :] + qsum * zc
     return (scores * sm_scale).reshape(B, H, n_tokens)
@@ -201,17 +208,19 @@ def packed_weighted_v_paged(
     """
     B, H, n_tokens = w.shape
     h_kv = vc.scale.shape[0]
-    idx = pages.page_table[:, : n_tokens // pages.page_size]
     if backend == "xla":
         from ..core.tiered import gather_tiered_pages
 
+        idx = page_prefix_ids(pages.page_table, n_tokens, pages.page_size)
         return packed_weighted_v(
             w, gather_tiered_pages(vc, idx), n_valid=n_valid, backend="xla"
         )
     G = H // h_kv
     BH = B * h_kv
     nv = _rows_to_bh(n_valid, B, h_kv)
-    flatm = lambda a: gather_pool_leaf(a, idx).reshape(BH, n_tokens)
+    flatm = lambda a: gather_page_meta(
+        a, pages.page_table, n_tokens, pages.page_size
+    ).reshape(BH, n_tokens)
     wf = w.astype(jnp.float32).reshape(BH, G, n_tokens)
     ws = wf * flatm(vc.scale)[:, None, :]
     parts = [

@@ -40,6 +40,13 @@ def main() -> int:
     ap.add_argument("--pool-pages", type=int, default=None,
                     help="pool size in pages; < batch*capacity/page_size "
                     "oversubscribes (admission blocks on reservations)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="shared-prefix page cache: refcounted page reuse "
+                    "across requests + suffix-only prefill (requires "
+                    "--paged; docs/serving.md)")
+    ap.add_argument("--prefix-cache-pages", type=int, default=None,
+                    help="max pool pages the prefix index may pin "
+                    "(default unbounded; pool pressure still evicts LRU)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -53,7 +60,9 @@ def main() -> int:
     pack = PackKVConfig(policy=args.policy)
     ecfg = EngineConfig(capacity=args.capacity, max_batch=args.batch,
                         backend=args.backend, paged=args.paged,
-                        page_size=args.page_size, pool_pages=args.pool_pages)
+                        page_size=args.page_size, pool_pages=args.pool_pages,
+                        prefix_cache=args.prefix_cache,
+                        prefix_cache_pages=args.prefix_cache_pages)
     t0 = time.time()
     engine = Engine(cfg, params, pack, ecfg)
     print(f"engine built in {time.time() - t0:.1f}s; policy={args.policy}")
@@ -66,10 +75,14 @@ def main() -> int:
                 and cfg.input_mode == "tokens")
     server = SlotServer(engine) if use_slot else WaveServer(engine)
     rng = np.random.default_rng(args.seed)
+    # --prefix-cache demo traffic: every request opens with the same
+    # two-page "system prompt" so later admissions hit the index
+    sys_prompt = (rng.integers(0, cfg.vocab, 2 * args.page_size)
+                  if args.prefix_cache else np.zeros(0, np.int64))
     for rid in range(args.requests):
         plen = int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
-        server.submit(Request(rid=rid, max_new=args.max_new,
-                              tokens=rng.integers(0, cfg.vocab, plen)))
+        toks = np.concatenate([sys_prompt, rng.integers(0, cfg.vocab, plen)])
+        server.submit(Request(rid=rid, max_new=args.max_new, tokens=toks))
     t0 = time.time()
     n_tok = 0
     if use_slot:
@@ -93,6 +106,11 @@ def main() -> int:
                   f"{args.page_size} tokens, peak reserved "
                   f"{s.pages_reserved_peak}, {s.admission_blocks} "
                   f"admission blocks")
+        if args.prefix_cache:
+            print(f"prefix cache: {s.prefix_hits}/{s.prefix_lookups} hits "
+                  f"(rate {s.prefix_hit_rate:.2f}), "
+                  f"{s.prefix_pages_shared} pages shared by reference, "
+                  f"{s.prefix_evictions} evictions")
 
     # cache memory report (the paper's deliverable). Byte counts are
     # static-shape-determined, so the allocated slot cache suffices — and

@@ -151,6 +151,31 @@ def flash_attention(
     return outs.reshape(B, Hq, S, Dh)
 
 
+def ctx_attention(q: Array, k_all: Array, v_all: Array, n_ctx: int,
+                  sm_scale: float) -> Array:
+    """Segment attention for chunked prefill: queries over [context | self].
+
+    q: [B, Hq, S, Dh]; k_all/v_all: [B, Hkv, n_ctx + S, Dh] where the first
+    ``n_ctx`` (STATIC) keys are read-only context (fully visible to every
+    query — they are strictly in the past) and the remaining S are the
+    segment's own keys (causal). One f32 softmax: segments are at most one
+    page of queries, so the [S, n_ctx + S] score tile stays small.
+    """
+    B, Hq, S, Dh = q.shape
+    Hkv = k_all.shape[1]
+    T = k_all.shape[2]
+    qg = q.astype(jnp.float32).reshape(B, Hkv, Hq // Hkv, S, Dh)
+    s = jnp.einsum("bhgsd,bhtd->bhgst", qg,
+                   k_all.astype(jnp.float32)) * sm_scale
+    mask = jnp.arange(T)[None, :] <= (n_ctx + jnp.arange(S))[:, None]
+    s = jnp.where(mask, s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(s - m), 0.0)
+    out = jnp.einsum("bhgst,bhtd->bhgsd", p, v_all.astype(jnp.float32))
+    out = out / jnp.maximum(p.sum(-1)[..., None], 1e-30)
+    return out.reshape(B, Hq, S, Dh).astype(q.dtype)
+
+
 # ---------------------------------------------------------------------------
 # attention block params
 # ---------------------------------------------------------------------------

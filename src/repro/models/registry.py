@@ -43,6 +43,12 @@ class ModelApi:
     prefill_into_slot: Optional[Callable] = None
     reset_slot: Optional[Callable] = None
     decode_multi: Optional[Callable] = None
+    # Prefix-cache admission (PR 5): chunked prefill that maps a matched
+    # page-aligned prompt prefix into the slot by reference and computes
+    # only the suffix. None for families without page-addressable KV
+    # (rwkv6 / hybrid_rglru recurrent state) — the Engine rejects
+    # --prefix-cache for those with a clear error.
+    prefill_prefix: Optional[Callable] = None
 
     @property
     def supports_slots(self) -> bool:
@@ -76,6 +82,7 @@ def _transformer_api() -> ModelApi:
         prefill_into_slot=transformer.prefill_into_slot,
         reset_slot=transformer.reset_cache_slot,
         decode_multi=transformer.decode_steps,
+        prefill_prefix=transformer.prefill_into_slot_prefix,
     )
 
 

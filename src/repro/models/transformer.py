@@ -25,6 +25,7 @@ from ..core.cache import (
 from ..kernels import dense_decode_attention, packed_decode_attention
 from .layers import (
     attention_init,
+    ctx_attention,
     dense_init,
     flash_attention,
     mlp_apply,
@@ -233,6 +234,118 @@ def reset_cache_slot(cache, slot):
     from ..core.cache import reset_slot
 
     return reset_slot(cache, slot)
+
+
+def _prefill_segment(params: dict, cfg: ArchConfig, pack_cfg: PackKVConfig,
+                     mini, tokens: Array, n_ctx: int):
+    """One chunk of a chunked prefill: forward ``tokens`` ([1, S]) with the
+    mini-cache's first ``n_ctx`` (STATIC) compressed tokens as read-only
+    context, appending the segment's own K/V to the mini-cache.
+
+    The compressed context is DEQUANTIZED for the segment's attention (the
+    'none' policy reads its raw pages directly) — the defining numeric of
+    the prefix-cache regime: a chunk's output depends only on the prompt
+    prefix up to its end, never on later tokens, so any page-aligned resume
+    point is exact. Returns (last-token logits [1, V], mini).
+    """
+    from ..core.cache import prefill_append
+    from ..core.tiered import dequantize_tiered, slice_tiered_prefix
+
+    h = params["embed"][tokens]
+    B, S, _ = h.shape
+    positions = n_ctx + jnp.arange(S)
+    sm_scale = 1.0 / (cfg.hd ** 0.5)
+
+    def body(hh, xs):
+        layer_params, cache_l = xs
+        hn = rmsnorm(hh, layer_params["ln1"])
+        q, k, v = qkv_proj(
+            layer_params["attn"], hn, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            positions, cfg.rope_theta, cfg.qk_norm, cfg.use_rope,
+        )
+        if n_ctx:
+            if pack_cfg.policy == "none":
+                ck = cache_l.raw_k[..., :n_ctx, :]
+                cv = cache_l.raw_v[..., :n_ctx, :]
+            else:
+                ck = jnp.swapaxes(dequantize_tiered(
+                    slice_tiered_prefix(cache_l.k, n_ctx)), -1, -2)
+                cv = jnp.swapaxes(dequantize_tiered(
+                    slice_tiered_prefix(cache_l.v, n_ctx)), -1, -2)
+            k_all = jnp.concatenate(
+                [ck.astype(jnp.float32), k.astype(jnp.float32)], axis=2)
+            v_all = jnp.concatenate(
+                [cv.astype(jnp.float32), v.astype(jnp.float32)], axis=2)
+        else:
+            k_all, v_all = k, v
+        attn = ctx_attention(q, k_all, v_all, n_ctx, sm_scale)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.hd)
+        hh = hh + jnp.dot(attn.astype(hh.dtype), layer_params["attn"]["wo"])
+        m, _ = _apply_mlp(cfg, layer_params, rmsnorm(hh, layer_params["ln2"]))
+        hh = hh + m
+        cache_l = prefill_append(cache_l, k, v, calibrate=(n_ctx == 0))
+        return hh, cache_l
+
+    h, mini = jax.lax.scan(body, h, (params["layers"], mini))
+    h = rmsnorm(h[:, -1:], params["final_ln"])
+    logits = jnp.dot(h, params["head"])[:, 0].astype(jnp.float32)
+    return logits, mini
+
+
+def prefill_into_slot_prefix(params: dict, cfg: ArchConfig,
+                             pack_cfg: PackKVConfig, capacity: int, cache,
+                             slot, batch: dict, prefix_phys: Array,
+                             k_perm: Array, v_perm: Array, *, n_prefix: int):
+    """Prefix-cache admission: CHUNKED prefill with suffix-only compute.
+
+    The prompt is processed in page-aligned chunks through a dense B=1
+    mini-cache; each chunk attends to the already-compressed earlier pages
+    as read-only context and chunk 0 calibrates the channel permutation.
+    Because a chunk's computation depends only on the prompt prefix up to
+    its end, resuming from ANY page boundary reproduces a cold run
+    bit-for-bit: the ``n_prefix`` (STATIC, page-aligned, < prompt length)
+    tokens whose compressed pool pages ``prefix_phys`` (i32
+    [n_prefix / page_size]) were matched by the host-side prefix index are
+    mapped into the slot BY REFERENCE — zero attention-query FLOPs, zero
+    compression work, zero page pops for shared tokens.
+
+    ``k_perm``/``v_perm`` ([n_layers, Hkv, D], from the index entry) carry
+    the donor's page-0 calibration so suffix blocks compress under the
+    identical permutation; both are ignored when ``n_prefix == 0`` (a COLD
+    admission under a prefix-cache engine runs the same chunked math, which
+    is what makes a later hit on its registered pages exact). Returns
+    (last-token logits [1, V], updated stacked cache).
+    """
+    from ..core.cache import (
+        insert_row_paged,
+        paged_mini_spec,
+        seed_prefix_from_pages,
+    )
+
+    assert pack_cfg.paged, "prefix-cache admission requires the paged pool"
+    tokens = batch["tokens"]
+    S = tokens.shape[-1]
+    page = pack_cfg.page_size
+    Lb = (S // pack_cfg.block) * pack_cfg.block
+    Lp = (Lb // page) * page  # the prompt's own cacheable (full-page) prefix
+    assert n_prefix % page == 0 and n_prefix <= Lp and n_prefix < S, (
+        n_prefix, Lp, S)
+    dense_cfg, cap_mini, n_pages = paged_mini_spec(pack_cfg, S)
+    mini = alloc_cache(cfg, dense_cfg, 1, cap_mini)
+    if n_prefix:
+        mini = seed_prefix_from_pages(cache, mini, prefix_phys, n_prefix,
+                                      k_perm, v_perm)
+    bounds = list(range(n_prefix, Lp + 1, page))
+    if S > Lp:
+        bounds.append(S)
+    logits = None
+    for s0, s1 in zip(bounds, bounds[1:]):
+        logits, mini = _prefill_segment(params, cfg, pack_cfg, mini,
+                                        tokens[:, s0:s1], n_ctx=s0)
+    cache = insert_row_paged(cache, slot, mini, n_pages,
+                             n_shared=n_prefix // page,
+                             shared_phys=prefix_phys)
+    return logits, cache
 
 
 def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,

@@ -71,6 +71,12 @@ class EngineConfig:
     #   / page_size (no oversubscription). Setting it lower oversubscribes:
     #   admission then blocks on page reservations instead of free slots.
     page_watermark: int = 0  # spare pages admission always holds back
+    # shared-prefix page cache (requires paged; see docs/serving.md):
+    prefix_cache: bool = False  # content-addressed prefix reuse across requests
+    prefix_cache_pages: int | None = None  # max pages the index may pin
+    #   (None = unbounded; pool-pressure eviction still applies either way)
+    debug_invariants: bool = False  # assert refcount conservation after every
+    #   admit/retire (device sync per check — tests/bring-up only)
 
 
 class Engine:
@@ -80,6 +86,24 @@ class Engine:
         self.params = params
         self.ecfg = ecfg
         self.api = get_model(cfg)
+        if ecfg.prefix_cache:
+            if self.api.prefill_prefix is None:
+                raise ValueError(
+                    f"family {cfg.family!r} cannot serve --prefix-cache: its "
+                    "recurrent decode state has no page-addressable KV pages "
+                    "to share (WaveServer-only family) — drop --prefix-cache"
+                )
+            if not ecfg.paged:
+                raise ValueError(
+                    "--prefix-cache requires --paged: shared prefixes live "
+                    "in the refcounted page pool"
+                )
+            if cfg.window:
+                raise ValueError(
+                    "--prefix-cache does not support sliding-window "
+                    f"attention (window={cfg.window}): evicted window "
+                    "tokens break page-aligned prefix identity"
+                )
         if ecfg.paged:
             if not self.api.supports_slots:
                 raise ValueError(
@@ -126,6 +150,23 @@ class Engine:
             )
             self._reset = jax.jit(self.api.reset_slot)
             self._mask_free = jax.jit(mask_free_slots)
+        if ecfg.prefix_cache:
+            from ..core.cache import acquire_pages, release_pages
+
+            # one compile per (prompt length, matched-prefix length) pair
+            self._insert_prefix = jax.jit(
+                partial(self.api.prefill_prefix, cfg=cfg,
+                        pack_cfg=self.pack_cfg, capacity=ecfg.capacity),
+                static_argnames=("n_prefix",),
+            )
+            # index pin/unpin ops take sentinel-padded fixed-length id
+            # vectors, so each compiles exactly once
+            self._acquire_pages = jax.jit(acquire_pages)
+            self._release_pages = jax.jit(release_pages)
+            self._dummy_perm = jnp.broadcast_to(
+                jnp.arange(cfg.hd, dtype=jnp.int32),
+                (cfg.n_layers, cfg.n_kv_heads, cfg.hd),
+            )
         if self.api.decode_multi is not None:
             # donated multi-step decode: the chunk loop updates the cache
             # buffers in place (no per-token copy) and one dispatch covers
@@ -231,6 +272,41 @@ class Engine:
         )
         return logits[0], cache
 
+    def insert_request_prefix(self, cache, slot: int, tokens: np.ndarray,
+                              pages, perms):
+        """Jitted chunked prefill-insert (prefix-cache engines only).
+
+        ``pages``: physical ids of the matched page-aligned prompt prefix
+        (mapped into the slot by reference — empty for a cold admission);
+        ``perms``: the index entry's (k_perm, v_perm) calibration, or None
+        (cold / policy 'none'). Returns (last logits [V], cache)."""
+        batch = {"tokens": jnp.asarray(np.asarray(tokens)[None], jnp.int32)}
+        phys = jnp.asarray(np.asarray(pages, np.int64), jnp.int32)
+        kp, vp = perms if perms is not None else (self._dummy_perm,
+                                                  self._dummy_perm)
+        logits, cache = self._insert_prefix(
+            self.params, cache=cache, slot=jnp.int32(slot), batch=batch,
+            prefix_phys=phys, k_perm=kp, v_perm=vp,
+            n_prefix=len(pages) * self.ecfg.page_size,
+        )
+        return logits[0], cache
+
+    def _pad_ids(self, ids) -> Array:
+        """Sentinel-pad page ids to the fixed per-slot table width so the
+        pin/unpin jits compile once (sentinel entries are dropped)."""
+        width = self.ecfg.capacity // self.ecfg.page_size
+        out = np.full((width,), self.pack_cfg.pool_pages, np.int64)
+        out[: len(ids)] = np.asarray(ids, np.int64)
+        return jnp.asarray(out, jnp.int32)
+
+    def index_acquire(self, cache, ids):
+        """Pin pages for the prefix index (+1 ref each)."""
+        return self._acquire_pages(cache, self._pad_ids(ids))
+
+    def index_release(self, cache, ids):
+        """Unpin evicted index pages (-1 ref; freed at zero)."""
+        return self._release_pages(cache, self._pad_ids(ids))
+
     def free_slot(self, cache, slot: int):
         return self._reset(cache, jnp.int32(slot))
 
@@ -286,6 +362,16 @@ class SlotStats:
     # paged admission telemetry (zeros for dense engines):
     admission_blocks: int = 0  # admissions deferred for lack of free pages
     pages_reserved_peak: int = 0  # max simultaneously-reserved pool pages
+    # prefix-cache telemetry (zeros when the feature is off):
+    prefix_lookups: int = 0  # admissions that consulted the prefix index
+    prefix_hits: int = 0  # admissions that matched >= 1 full page
+    prefix_pages_shared: int = 0  # pages mapped by reference (cumulative)
+    prefix_evictions: int = 0  # index entries dropped (pressure or cap)
+
+    @property
+    def prefix_hit_rate(self) -> float:
+        return self.prefix_hits / self.prefix_lookups if self.prefix_lookups \
+            else 0.0
 
     @property
     def occupancy(self) -> float:
@@ -296,6 +382,105 @@ class SlotStats:
     @property
     def decode_tok_s(self) -> float:
         return self.tokens_out / self.wall_s if self.wall_s else 0.0
+
+
+class _PrefixNode:
+    """One full compressed page of a cached prompt prefix (trie node)."""
+
+    __slots__ = ("chunk", "page", "parent", "children", "last_used", "perms")
+
+    def __init__(self, chunk: bytes, page: int, parent):
+        self.chunk = chunk  # raw token ids of this page's span (the key)
+        self.page = page  # physical pool page id (one index reference held)
+        self.parent = parent  # None for depth-0 nodes
+        self.children: dict[bytes, "_PrefixNode"] = {}
+        self.last_used = 0
+        self.perms = None  # depth-0 only: (k_perm, v_perm) device arrays
+
+
+class PrefixIndex:
+    """Host-side content-addressed prefix index over FULL compressed pages.
+
+    A trie keyed by page-aligned chunks of raw prompt token ids; each node
+    owns exactly one physical pool page and holds ONE device reference on
+    it (``core.cache.acquire_pages``), so cached pages survive their
+    originating slot's retirement and are never handed out by the
+    allocator. Lookup walks the longest matching chain; eviction removes
+    LRU LEAVES only (an interior page is still reachable through its
+    children), skipping pages currently mapped into a live slot by
+    reference — evicting those would break the scheduler's reservation
+    bound (a shared page is reserved by NO slot). Depth-0 nodes carry the
+    donor's page-0 channel calibration so a hit compresses its suffix under
+    the identical permutation. Pure host state: every device mutation is
+    the ``SlotServer``'s, through ``Engine.index_acquire/index_release``.
+    """
+
+    def __init__(self, page_size: int):
+        self.page_size = page_size
+        self.roots: dict[bytes, _PrefixNode] = {}
+        self.n_held = 0  # pages the index holds a reference on
+        self.pages: set[int] = set()  # their ids (each in exactly one node)
+        self._clock = 0
+
+    def chunks(self, tokens) -> list[bytes]:
+        """Page-aligned raw-token-id chunks (the trie keys)."""
+        t = np.ascontiguousarray(np.asarray(tokens, np.int64))
+        p = self.page_size
+        return [t[i * p:(i + 1) * p].tobytes() for i in range(len(t) // p)]
+
+    def touch(self, node: _PrefixNode) -> None:
+        self._clock += 1
+        node.last_used = self._clock
+
+    def descend(self, parent, chunk: bytes):
+        m = self.roots if parent is None else parent.children
+        return m.get(chunk)
+
+    def lookup(self, tokens, max_pages: int):
+        """Longest-prefix match, LRU-bumping the path.
+
+        Returns (page ids, (k_perm, v_perm) | None)."""
+        pages: list[int] = []
+        perms = None
+        node = None
+        for chunk in self.chunks(tokens)[:max_pages]:
+            node = self.descend(node, chunk)
+            if node is None:
+                break
+            self.touch(node)
+            if node.perms is not None:
+                perms = node.perms
+            pages.append(node.page)
+        return pages, perms
+
+    def insert(self, parent, chunk: bytes, page: int, perms=None):
+        node = _PrefixNode(chunk, page, parent)
+        self.touch(node)
+        node.perms = perms if parent is None else None
+        (self.roots if parent is None else parent.children)[chunk] = node
+        self.n_held += 1
+        self.pages.add(page)
+        return node
+
+    def evict_lru(self, protected: set[int]):
+        """Drop the least-recently-used unprotected LEAF; returns its page
+        id (the caller must release the device reference) or None."""
+        best = None
+        stack = list(self.roots.values())
+        while stack:
+            n = stack.pop()
+            stack.extend(n.children.values())
+            if n.children or n.page in protected:
+                continue
+            if best is None or n.last_used < best.last_used:
+                best = n
+        if best is None:
+            return None
+        owner = self.roots if best.parent is None else best.parent.children
+        del owner[best.chunk]
+        self.n_held -= 1
+        self.pages.discard(best.page)
+        return best.page
 
 
 class _Active:
@@ -342,6 +527,18 @@ class SlotServer:
     free-list never over-pops, which is what makes oversubscription
     (``pool_pages < max_batch * capacity / page_size``) safe under mixed
     traffic.
+
+    PREFIX-CACHE engines additionally keep a host-side ``PrefixIndex``:
+    admission looks up the longest page-aligned prompt prefix already
+    compressed in the pool, maps those pages into the new slot BY
+    REFERENCE (refcounted — they reserve ZERO new pages), runs the chunked
+    prefill only over the uncovered suffix, and registers the admitted
+    prompt's full pages back into the index. Under pool pressure the
+    scheduler EVICTS cold cached prefixes (LRU leaves not mapped into any
+    live slot) instead of blocking admission. Cache-hit admissions are
+    bit-identical to cold ones: see ``models.transformer.
+    prefill_into_slot_prefix`` for why page boundaries are exact resume
+    points.
     """
 
     def __init__(self, engine: Engine, eos_id: int | None = None):
@@ -365,15 +562,23 @@ class SlotServer:
         self.queue: deque[Request] = deque()
         self.done: dict[int, Request] = {}
         self.stats = SlotStats(n_slots=self.n_slots)
-        self._reserved: dict[int, int] = {}  # slot -> reserved pool pages
+        self._reserved: dict[int, int] = {}  # slot -> NEWLY-allocatable pages
+        self._index = (PrefixIndex(engine.ecfg.page_size)
+                       if engine.ecfg.prefix_cache else None)
+        self._slot_shared: dict[int, tuple[int, ...]] = {}  # slot -> mapped
 
     # -- paged admission accounting ----------------------------------------
     @property
     def _pages_avail(self) -> int:
-        """Pool pages not yet reserved (minus the watermark)."""
+        """Pool pages not spoken for: total minus the watermark, minus every
+        slot's reservation of pages it may NEWLY allocate, minus pages the
+        prefix index pins. Donor pages counted by both a reservation and
+        the index are double-counted — conservative, never unsafe — and
+        index pages are reclaimable on demand (``_evict_to_fit``)."""
         ecfg = self.engine.ecfg
         total = self.engine.pack_cfg.pool_pages
-        return total - ecfg.page_watermark - sum(self._reserved.values())
+        held = self._index.n_held if self._index is not None else 0
+        return total - ecfg.page_watermark - sum(self._reserved.values()) - held
 
     def _pages_needed(self, req: Request) -> int:
         """Worst-case resident pages over the request's lifetime: its
@@ -383,6 +588,94 @@ class SlotServer:
         ecfg = self.engine.ecfg
         hi = min(ecfg.capacity, len(req.tokens) + req.max_new)
         return cdiv(hi, ecfg.page_size)
+
+    def _match(self, req: Request) -> tuple[list[int], object]:
+        """Longest page-aligned prefix the index can serve for ``req``.
+
+        Capped one token short of the prompt so the suffix is never empty
+        (admission needs last-token logits to seed decode)."""
+        max_m = (len(req.tokens) - 1) // self.engine.ecfg.page_size
+        return self._index.lookup(req.tokens, max_m)
+
+    def _live_shared(self) -> set[int]:
+        return {p for t in self._slot_shared.values() for p in t}
+
+    def _evict_to_fit(self, need_new: int, protected: set[int]) -> bool:
+        """Reclaim index-pinned pages (LRU leaves first) until ``need_new``
+        fits, instead of blocking admission. Never evicts pages mapped into
+        a live slot by reference (they are covered by NO reservation) or
+        the pages just matched for the pending admission."""
+        if self._index is None:
+            return need_new <= self._pages_avail
+        protected = protected | self._live_shared()
+        while need_new > self._pages_avail:
+            page = self._index.evict_lru(protected)
+            if page is None:
+                return False
+            self.cache = self.engine.index_release(self.cache, [page])
+            self.stats.prefix_evictions += 1
+        return True
+
+    def _register(self, req: Request, slot: int) -> None:
+        """Index every full compressed page of the freshly-admitted prompt.
+
+        Matched pages already have nodes (bumped); new pages get nodes and
+        one device reference each. Registration respects
+        ``prefix_cache_pages`` by evicting LRU leaves first and simply
+        stops when nothing is evictable (a shorter registered chain is
+        still a correct trie)."""
+        pack = self.engine.pack_cfg
+        page = self.engine.ecfg.page_size
+        k = (len(req.tokens) // pack.block) * pack.block // page
+        if not k:
+            return
+        cap = self.engine.ecfg.prefix_cache_pages
+        row = np.asarray(self.cache.pages.page_table[0, slot, :k])
+        perms = None
+        if pack.policy != "none":
+            perms = (self.cache.k.chan_perm[:, slot],
+                     self.cache.v.chan_perm[:, slot])
+        protected = self._live_shared() | {int(p) for p in row}
+        acquired: list[int] = []
+        parent = None
+        for d, chunk in enumerate(self._index.chunks(req.tokens)[:k]):
+            node = self._index.descend(parent, chunk)
+            if node is None:
+                if cap is not None and self._index.n_held >= cap:
+                    ev = self._index.evict_lru(protected)
+                    if ev is None:
+                        break
+                    self.cache = self.engine.index_release(self.cache, [ev])
+                    self.stats.prefix_evictions += 1
+                node = self._index.insert(parent, chunk, int(row[d]),
+                                          perms if d == 0 else None)
+                acquired.append(int(row[d]))
+            else:
+                self._index.touch(node)
+            parent = node
+        if acquired:
+            self.cache = self.engine.index_acquire(self.cache, acquired)
+
+    def _check_invariants(self) -> None:
+        """Debug mode: refcount conservation after every admit/retire.
+
+        ``free ⇔ ref == 0`` in both directions — the number of held pages
+        plus the stack height equals the pool size, and every stack entry
+        has a zero count. Device sync per call; gate on
+        ``EngineConfig.debug_invariants``."""
+        if not (self.engine.ecfg.debug_invariants and self.engine.ecfg.paged
+                and self.cache is not None):
+            return
+        pool = self.cache.pages
+        ref = np.asarray(pool.ref[0])
+        nf = int(pool.n_free[0])
+        free = np.asarray(pool.free[0])
+        P = ref.shape[0]
+        assert int((ref > 0).sum()) + nf == P, (ref, nf)
+        assert int((ref == 0).sum()) == nf, (ref, nf)
+        assert (ref[free[:nf]] == 0).all(), (ref, free[:nf])
+        if self._index is not None:
+            assert all(int(ref[p]) >= 1 for p in self._index.pages)
 
     # -- queue --------------------------------------------------------------
     def submit(self, req: Request) -> None:
@@ -430,7 +723,9 @@ class SlotServer:
         self.slots[i] = None
         self.cache = self.engine.free_slot(self.cache, i)
         self._reserved.pop(i, None)  # paged: pages return with the reset
+        self._slot_shared.pop(i, None)  # shared pages: ref back to the index
         self.stats.completed += 1
+        self._check_invariants()
         return act.req
 
     def _admit(self) -> list[Request]:
@@ -441,21 +736,42 @@ class SlotServer:
                 break
             if self.slots[i] is not None:
                 continue
-            if paged and self._pages_needed(self.queue[0]) > self._pages_avail:
-                # page-count admission: keep FIFO order, wait for a retire
-                self.stats.admission_blocks += 1
-                break
+            head = self.queue[0]
+            match_pages: list[int] = []
+            match_perms = None
+            if self._index is not None and self.cache is not None:
+                match_pages, match_perms = self._match(head)
+            if paged:
+                # suffix-only reservation: shared prefix pages reserve 0 —
+                # the slot can only ever NEWLY pop pages past the match
+                need_new = self._pages_needed(head) - len(match_pages)
+                if need_new > self._pages_avail and \
+                        not self._evict_to_fit(need_new, set(match_pages)):
+                    # page-count admission: keep FIFO order, wait for retire
+                    self.stats.admission_blocks += 1
+                    break
             req = self.queue.popleft()
             if self.cache is None:
                 self.cache = self.engine.alloc_slot_cache()
             if paged:
-                self._reserved[i] = self._pages_needed(req)
+                self._reserved[i] = self._pages_needed(req) - len(match_pages)
                 self.stats.pages_reserved_peak = max(
                     self.stats.pages_reserved_peak, sum(self._reserved.values())
                 )
-            logits, self.cache = self.engine.insert_request(
-                self.cache, i, req.tokens
-            )
+            if self._index is not None:
+                self.stats.prefix_lookups += 1
+                if match_pages:
+                    self.stats.prefix_hits += 1
+                    self.stats.prefix_pages_shared += len(match_pages)
+                logits, self.cache = self.engine.insert_request_prefix(
+                    self.cache, i, req.tokens, match_pages, match_perms
+                )
+                self._slot_shared[i] = tuple(int(p) for p in match_pages)
+                self._register(req, i)
+            else:
+                logits, self.cache = self.engine.insert_request(
+                    self.cache, i, req.tokens
+                )
             tok = int(jnp.argmax(logits))
             self.slots[i] = _Active(req, tok, self.eos_id)
             self._last_tok[i] = tok
@@ -464,6 +780,7 @@ class SlotServer:
             if self._ever_used[i]:
                 self.stats.slot_reuses += 1
             self._ever_used[i] = True
+            self._check_invariants()
             if self.slots[i].done:  # max_new == 1 or instant EOS
                 finished.append(self._retire(i))
         return finished

@@ -10,5 +10,15 @@ def rng():
     return np.random.default_rng(0)
 
 
+def ref_conserved(pool):
+    """Shared page-pool refcount invariant: free ⇔ ref == 0, both ways
+    (used by tests/test_paged.py and tests/test_prefix_cache.py)."""
+    ref = np.asarray(pool.ref)
+    nf = int(pool.n_free)
+    assert int((ref == 0).sum()) == nf, (ref, nf)
+    assert int((ref > 0).sum()) + nf == pool.n_pool_pages
+    assert (ref[np.asarray(pool.free)[:nf]] == 0).all()
+
+
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")

@@ -30,7 +30,7 @@ from repro.core.cache import (
     live_pages,
     pool_pop_prefix,
     pool_pop_rows,
-    pool_push_row,
+    pool_release_row,
     prefill_cache,
     reset_slot,
     slice_compressed,
@@ -86,32 +86,40 @@ def _free_set(pool):
     return set(np.asarray(pool.free[: int(pool.n_free)]).tolist())
 
 
+from conftest import ref_conserved as _ref_conserved
+
+
 def test_pool_alloc_free_reuse():
     pool = alloc_page_pool(batch=3, capacity=CAP, page_size=PAGE)  # 12 pages
     assert pool.n_pool_pages == 12 and pool.max_pages == 4
     assert _free_set(pool) == set(range(12))
+    _ref_conserved(pool)
 
-    # batched per-row pops are unique and shrink the stack
+    # batched per-row pops are unique, land at ref == 1, shrink the stack
     pool = pool_pop_rows(pool, jnp.array([True, False, True]),
                          jnp.array([0, 0, 0]))
     t = np.asarray(pool.page_table)
     assert int(pool.n_free) == 10 and t[0, 0] != t[2, 0]
     assert {int(t[0, 0]), int(t[2, 0])} & _free_set(pool) == set()
+    assert int(pool.ref[t[0, 0]]) == 1 and int(pool.ref[t[2, 0]]) == 1
+    _ref_conserved(pool)
 
     # static prefix pop for a prompt
     pool, phys = pool_pop_prefix(pool, 1, 3)
     assert int(pool.n_free) == 7 and len(set(np.asarray(phys).tolist())) == 3
     np.testing.assert_array_equal(np.asarray(pool.page_table)[1, :3],
                                   np.asarray(phys))
+    _ref_conserved(pool)
 
-    # pushing a row back restores exactly its pages
+    # releasing a row restores exactly its pages (ref 1 -> 0 -> stack)
     before = _free_set(pool)
-    pool = pool_push_row(pool, 1, jnp.int32(3))
+    pool = pool_release_row(pool, 1, jnp.int32(3))
     assert int(pool.n_free) == 10
     assert _free_set(pool) == before | set(np.asarray(phys).tolist())
+    _ref_conserved(pool)
 
-    # zero-page push is a no-op
-    pool2 = pool_push_row(pool, 0, jnp.int32(0))
+    # zero-page release is a no-op
+    pool2 = pool_release_row(pool, 0, jnp.int32(0))
     assert int(pool2.n_free) == int(pool.n_free)
 
 
@@ -130,13 +138,16 @@ def test_pool_accounting_under_slot_traffic(rng):
     def check(c):
         used = int(np.sum(np.ceil(np.asarray(c.n_comp) / PAGE)))
         assert int(c.pages.n_free) == c.pages.n_pool_pages - used
-        # live table prefixes reference distinct physical pages
+        _ref_conserved(c.pages)
+        # live table prefixes reference distinct physical pages (ref == 1:
+        # no sharing in this exclusive-ownership traffic)
         live = [
             np.asarray(c.pages.page_table)[b, : int(np.ceil(n / PAGE))]
             for b, n in enumerate(np.asarray(c.n_comp))
         ]
         flat = np.concatenate(live) if live else np.zeros(0)
         assert len(set(flat.tolist())) == len(flat)
+        assert (np.asarray(c.pages.ref)[flat.astype(int)] == 1).all()
 
     k0, v0 = _kv(rng, 300)
     cache = insert_prefill(cache, 0, k0, v0)
@@ -404,7 +415,7 @@ def test_free_list_sequences_hypothesis():
         for slot, n in ops_seq:
             # evict whatever the slot holds, then insert an n-page request
             # (skipped when it would oversubscribe — the scheduler's job)
-            pool = pool_push_row(pool, slot, jnp.int32(held[slot]))
+            pool = pool_release_row(pool, slot, jnp.int32(held[slot]))
             held[slot] = 0
             if sum(held.values()) + n > POOL:
                 continue

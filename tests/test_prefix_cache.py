@@ -1,0 +1,420 @@
+"""Shared-prefix page cache (ISSUE 5): refcounted copy-on-write pages, the
+scheduler's prefix index, and suffix-only prefill.
+
+Invariants under test:
+  * Refcount conservation — ``free ⇔ ref == 0`` in both directions — holds
+    through interleaved pop/share/acquire/release/COW/reset traffic, both
+    deterministically and under adversarial (hypothesis) op sequences.
+  * NO ALIASED MUTATION: a page's bytes never change while ``ref > 1``.
+    ``append_token``'s flush copy-on-writes a private replacement, and the
+    mutating row stays bit-identical to a dense twin driven identically.
+  * A prefix-cache-hit admission is BIT-IDENTICAL to a cold run of the same
+    prompt (both backends, both policies), reserves only its unshared
+    suffix, and under pool pressure the scheduler evicts cold cached
+    prefixes instead of blocking admission.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKES
+from repro.core.cache import (
+    PackKVConfig,
+    acquire_pages,
+    alloc_layer_cache,
+    alloc_page_pool,
+    append_token,
+    insert_prefill,
+    pool_pop_prefix,
+    pool_release_row,
+    release_pages,
+    reset_slot,
+    share_pages,
+    slice_compressed,
+)
+from repro.data import synthetic_kv
+from repro.kernels import ops
+from repro.models import get_model
+from repro.serving import Engine, EngineConfig, Request, SlotServer
+
+B, H, G, D = 3, 2, 2, 64
+CAP, PAGE, R = 1024, 256, 96
+SM = 0.125
+
+
+def _kv(rng, n, b=1):
+    return (jnp.asarray(synthetic_kv(rng, b, H, n, D)),
+            jnp.asarray(synthetic_kv(rng, b, H, n, D)))
+
+
+def _pair(policy="packkv", pool_pages=None):
+    dense = alloc_layer_cache(PackKVConfig(policy=policy, residual=R),
+                              B, H, D, CAP)
+    paged = alloc_layer_cache(
+        PackKVConfig(policy=policy, residual=R, paged=True, page_size=PAGE,
+                     pool_pages=pool_pages),
+        B, H, D, CAP,
+    )
+    return dense, paged
+
+
+def _attend(cache, q, backend="xla"):
+    cfg = cache.cfg
+    if cfg.policy == "none":
+        c = slice_compressed(cache, None)
+        return ops.dense_decode_attention(
+            q, c.raw_k, c.raw_v, c.resid_k, c.resid_v, c.n_comp, c.n_resid, SM)
+    if cache.pages is not None:
+        return ops.paged_decode_attention(q, cache, SM, backend=backend,
+                                          tile_l=64)
+    return ops.packed_decode_attention(
+        q, cache.k, cache.v, cache.resid_k, cache.resid_v, cache.n_comp,
+        cache.n_resid, SM, backend=backend, tile_l=64)
+
+
+from conftest import ref_conserved as _conserved  # free ⇔ ref == 0
+
+
+# ---------------------------------------------------------------------------
+# pool-level: share / acquire / release refcounting
+# ---------------------------------------------------------------------------
+
+
+def test_share_release_refcounts(rng):
+    _, cache = _pair()
+    k0, v0 = _kv(rng, 2 * PAGE)  # exactly two full pages, empty residual
+    cache = insert_prefill(cache, 0, k0, v0)
+    pool = cache.pages
+    phys = jnp.asarray(np.asarray(pool.page_table)[0, :2])
+    _conserved(pool)
+
+    # the index pins both pages: ref 1 -> 2, stack untouched
+    cache = acquire_pages(cache, phys)
+    assert (np.asarray(cache.pages.ref)[np.asarray(phys)] == 2).all()
+    _conserved(cache.pages)
+
+    # a recipient slot maps them by reference: ref 3, no pops
+    nf = int(cache.pages.n_free)
+    cache = share_pages(cache, 2, phys)
+    assert int(cache.pages.n_free) == nf
+    assert (np.asarray(cache.pages.ref)[np.asarray(phys)] == 3).all()
+    np.testing.assert_array_equal(
+        np.asarray(cache.pages.page_table)[2, :2], np.asarray(phys))
+    _conserved(cache.pages)
+
+    # donor retires: pages stay allocated (index + recipient still hold)
+    cache = reset_slot(cache, 0)
+    assert (np.asarray(cache.pages.ref)[np.asarray(phys)] == 2).all()
+    assert int(cache.pages.n_free) == nf
+    _conserved(cache.pages)
+
+    # recipient's references released; index eviction frees the pages
+    cache = dataclasses.replace(
+        cache, pages=pool_release_row(cache.pages, 2, jnp.int32(2)))
+    assert (np.asarray(cache.pages.ref)[np.asarray(phys)] == 1).all()
+    cache = release_pages(cache, phys)
+    assert (np.asarray(cache.pages.ref)[np.asarray(phys)] == 0).all()
+    assert int(cache.pages.n_free) == nf + 2
+    _conserved(cache.pages)
+
+    # sentinel-padded ids are ignored (the engine's fixed-width jit calls)
+    P = cache.pages.n_pool_pages
+    before = np.asarray(cache.pages.ref).copy()
+    cache = acquire_pages(cache, jnp.asarray([P, P + 3], jnp.int32))
+    np.testing.assert_array_equal(np.asarray(cache.pages.ref), before)
+
+
+def test_shared_page_reads_alias(rng):
+    """A recipient row reading mapped pages sees the donor's exact bytes
+    (policy 'none': counters set manually; attention must match row 0)."""
+    _, cache = _pair("none")
+    k0, v0 = _kv(rng, 2 * PAGE)
+    cache = insert_prefill(cache, 0, k0, v0)
+    phys = jnp.asarray(np.asarray(cache.pages.page_table)[0, :2])
+    cache = share_pages(cache, 1, phys)
+    cache = dataclasses.replace(
+        cache,
+        n_comp=cache.n_comp.at[1].set(2 * PAGE),
+        resid_k=cache.resid_k.at[1].set(cache.resid_k[0]),
+        resid_v=cache.resid_v.at[1].set(cache.resid_v[0]),
+        n_resid=cache.n_resid.at[1].set(cache.n_resid[0]),
+    )
+    q1 = jnp.asarray(rng.normal(size=(1, H * G, D)).astype(np.float32))
+    q = jnp.concatenate([q1, q1, jnp.zeros_like(q1)], axis=0)
+    out = np.asarray(_attend(cache, q))
+    np.testing.assert_array_equal(out[0], out[1])
+
+
+# ---------------------------------------------------------------------------
+# copy-on-write: shared bytes immutable, mutating row stays exact
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("policy", ["packkv", "none"])
+def test_cow_preserves_shared_bytes(rng, policy):
+    """Drive a row into a mid-page flush while its partial page is pinned
+    (ref 2). The flush must pop a private replacement: the pinned page's
+    bytes stay frozen, refcounts stay conserved, and the row's attention
+    stays bit-identical to a dense twin driven identically."""
+    dense, paged = _pair(policy)
+    L = PAGE + 128  # page 0 full, page 1 half full (128 of 256 tokens)
+    k0, v0 = _kv(rng, L)
+    dense = insert_prefill(dense, 0, k0, v0)
+    paged = insert_prefill(paged, 0, k0, v0)
+    old_phys = int(np.asarray(paged.pages.page_table)[0, 1])
+    paged = acquire_pages(paged, jnp.asarray([old_phys], jnp.int32))
+    assert int(paged.pages.ref[old_phys]) == 2
+
+    def page_bytes(c):
+        leaf = c.raw_k if c.cfg.policy == "none" else c.k.scale
+        return np.asarray(leaf[:, old_phys]).copy()
+
+    frozen = page_bytes(paged)
+    step = jax.jit(append_token)
+    for _ in range(R + 8):  # forces a flush into page 1 at offset 128
+        kt, vt = _kv(rng, 1, b=B)
+        dense = step(dense, kt, vt)
+        paged = step(paged, kt, vt)
+    assert int(np.asarray(paged.n_comp)[0]) > L - L % 64  # flush happened
+    # the pinned page never mutated, the row moved to a private copy
+    np.testing.assert_array_equal(page_bytes(paged), frozen)
+    new_phys = int(np.asarray(paged.pages.page_table)[0, 1])
+    assert new_phys != old_phys
+    assert int(paged.pages.ref[old_phys]) == 1  # row's reference dropped
+    assert int(paged.pages.ref[new_phys]) == 1
+    _conserved(paged.pages)
+    # ... and the COW row still reads exactly what the dense twin holds
+    q = jnp.asarray(rng.normal(size=(B, H * G, D)).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(_attend(paged, q)),
+                                  np.asarray(_attend(dense, q)))
+
+
+def test_exclusive_pages_never_cow(rng):
+    """ref == 1 traffic never pops extra pages: PR-4 accounting intact."""
+    _, paged = _pair()
+    k0, v0 = _kv(rng, PAGE + 128)
+    paged = insert_prefill(paged, 0, k0, v0)
+    free_before = int(paged.pages.n_free)
+    step = jax.jit(append_token)
+    for _ in range(R + 8):
+        kt, vt = _kv(rng, 1, b=B)
+        paged = step(paged, kt, vt)
+    # rows 1/2 popped one page each for their own first flush; row 0 only
+    # wrote its existing partial page — no COW pop
+    used = int(np.sum(np.ceil(np.asarray(paged.n_comp) / PAGE)))
+    assert int(paged.pages.n_free) == paged.pages.n_pool_pages - used
+    assert free_before - int(paged.pages.n_free) == 2
+    _conserved(paged.pages)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: refcount conservation under adversarial share/evict sequences
+# ---------------------------------------------------------------------------
+
+
+def test_refcount_sequences_hypothesis():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    N_SLOTS, POOL, MAXP = 4, 8, 4
+
+    from repro.core.cache import (
+        _pool_release_ids,
+        pool_acquire_ids,
+        pool_map_prefix,
+    )
+
+    @hyp.given(st.lists(
+        st.tuples(st.integers(0, 3), st.integers(0, N_SLOTS - 1),
+                  st.integers(0, MAXP)),
+        max_size=40))
+    @hyp.settings(deadline=None, max_examples=50)
+    def run(ops_seq):
+        pool = alloc_page_pool(batch=N_SLOTS, capacity=MAXP * PAGE,
+                               page_size=PAGE, pool_pages=POOL)
+        held = {s: [] for s in range(N_SLOTS)}  # model: page ids per slot
+        pinned: list[int] = []  # model of the index's references
+        model_ref = {p: 0 for p in range(POOL)}
+
+        def release_slot(s):
+            pool2 = pool_release_row(pool, s, jnp.int32(len(held[s])))
+            for p in held[s]:
+                model_ref[p] -= 1
+            held[s] = []
+            return pool2
+
+        for op, slot, n in ops_seq:
+            if op == 0:  # evict + insert an n-page request
+                pool = release_slot(slot)
+                if n > sum(1 for p in range(POOL) if model_ref[p] == 0):
+                    continue  # oversubscription is the scheduler's to avoid
+                pool, phys = pool_pop_prefix(pool, slot, n)
+                held[slot] = [int(p) for p in np.asarray(phys)]
+                for p in held[slot]:
+                    model_ref[p] += 1
+            elif op == 1:  # share another slot's pages by reference
+                src = (slot + 1) % N_SLOTS
+                k = min(n, len(held[src]))
+                if k == 0:
+                    continue
+                pool = release_slot(slot)
+                pool = pool_map_prefix(
+                    pool, slot, jnp.asarray(held[src][:k], jnp.int32))
+                held[slot] = held[src][:k]
+                for p in held[slot]:
+                    model_ref[p] += 1
+            elif op == 2:  # index pins a held page
+                if not held[slot]:
+                    continue
+                p = held[slot][n % len(held[slot])]
+                pool = pool_acquire_ids(pool, jnp.asarray([p], jnp.int32))
+                pinned.append(p)
+                model_ref[p] += 1
+            else:  # index releases its oldest pin
+                if not pinned:
+                    continue
+                p = pinned.pop(0)
+                pool = _pool_release_ids(pool, jnp.asarray([p], jnp.int32))
+                model_ref[p] -= 1
+
+            ref = np.asarray(pool.ref)
+            for p in range(POOL):
+                assert int(ref[p]) == model_ref[p], (p, ref, model_ref)
+            assert int(pool.n_free) == sum(
+                1 for p in range(POOL) if model_ref[p] == 0)
+            free = set(np.asarray(pool.free)[: int(pool.n_free)].tolist())
+            assert free == {p for p in range(POOL) if model_ref[p] == 0}
+
+    run()
+
+
+# ---------------------------------------------------------------------------
+# scheduler: hit == cold bit-identity, suffix-only reservation, eviction
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = SMOKES["llama2-7b"]
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, policy, backend, pool_pages=None,
+            prefix_cache_pages=None):
+    return Engine(
+        cfg, params, PackKVConfig(policy=policy),
+        EngineConfig(capacity=512, max_batch=2, calib_tokens=128,
+                     decode_chunk=4, bucketed=True, bucket_unit=64,
+                     backend=backend, paged=True, page_size=128,
+                     pool_pages=pool_pages, prefix_cache=True,
+                     prefix_cache_pages=prefix_cache_pages,
+                     debug_invariants=True))
+
+
+def _serve(eng, reqs):
+    srv = SlotServer(eng)
+    for r in reqs:
+        srv.submit(r)
+    srv.run()
+    return srv
+
+
+SYS = np.random.default_rng(11).integers(0, 512, 300)  # 2 full 128-pages
+
+
+def _shared_reqs(vocab):
+    r = np.random.default_rng(5)
+    mk = lambda rid, n, mn: Request(
+        rid=rid, max_new=mn,
+        tokens=np.concatenate([SYS, r.integers(0, vocab, n)]))
+    return [mk(0, 40, 6), mk(1, 60, 5), mk(2, 25, 7)]
+
+
+@pytest.fixture(scope="module")
+def pkx_engine(smoke_setup):
+    cfg, params = smoke_setup
+    return _engine(cfg, params, "packkv", "xla")
+
+
+@pytest.mark.parametrize("policy,backend",
+                         [("packkv", "xla"), ("packkv", "pallas"),
+                          ("none", "xla")])
+def test_prefix_hit_bit_identical_to_cold(smoke_setup, pkx_engine, policy,
+                                          backend):
+    """Requests sharing a 2-page system prompt: later admissions hit the
+    index, reserve only their suffix, and every output is bit-identical to
+    a cold run of the same request on a fresh server (the index lives in
+    the SlotServer, so a fresh server on the same engine IS a cold run)."""
+    cfg, params = smoke_setup
+    eng = (pkx_engine if (policy, backend) == ("packkv", "xla")
+           else _engine(cfg, params, policy, backend))
+    warm = _serve(eng, _shared_reqs(cfg.vocab))
+    s = warm.stats
+    assert s.prefix_lookups == 3 and s.prefix_hits == 2
+    assert s.prefix_pages_shared == 4  # 2 pages x 2 hitting requests
+    assert 0 < s.prefix_hit_rate < 1
+    # suffix-only reservation: a hit reserves need_total - 2 pages
+    from repro.utils import cdiv
+
+    reqs = _shared_reqs(cfg.vocab)
+    needs = [cdiv(min(512, len(r.tokens) + r.max_new), 128) for r in reqs]
+    assert s.pages_reserved_peak <= needs[0] + needs[1] - 2
+    for r in reqs:  # cold run of each request alone, fresh server
+        cold = _serve(eng, [r])
+        np.testing.assert_array_equal(warm.done[r.rid].output,
+                                      cold.done[r.rid].output)
+
+
+def test_identical_prompt_resubmitted(smoke_setup, pkx_engine):
+    """An exactly repeated prompt hits (match capped one token short of the
+    prompt so the suffix is never empty) and reproduces itself."""
+    cfg, params = smoke_setup
+    toks = np.random.default_rng(9).integers(0, cfg.vocab, 256)  # 2 pages
+    srv = SlotServer(pkx_engine)
+    srv.submit(Request(rid=0, max_new=4, tokens=toks))
+    srv.run()
+    srv.submit(Request(rid=1, max_new=4, tokens=toks))
+    srv.run()
+    assert srv.stats.prefix_hits == 1
+    assert srv.stats.prefix_pages_shared == 1  # capped below the full prompt
+    np.testing.assert_array_equal(srv.done[0].output, srv.done[1].output)
+
+
+def test_eviction_under_pool_pressure(smoke_setup):
+    """A tight pool: the index's cold pages are evicted to admit a large
+    request instead of blocking, and outputs stay exact."""
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params, "packkv", "xla", pool_pages=5)
+    srv = SlotServer(eng)
+    r = np.random.default_rng(13)
+    small = Request(rid=0, max_new=4, tokens=r.integers(0, cfg.vocab, 300))
+    srv.submit(small)
+    srv.run()
+    assert srv._index.n_held == 2  # two full pages registered
+    big_toks = r.integers(0, cfg.vocab, 500)
+    srv.submit(Request(rid=1, max_new=8, tokens=big_toks))  # needs 4 of 5
+    srv.run()
+    assert srv.stats.prefix_evictions >= 1
+    assert srv.stats.admission_blocks == 0
+    cold = _serve(eng, [Request(rid=1, max_new=8, tokens=big_toks)])
+    np.testing.assert_array_equal(srv.done[1].output, cold.done[1].output)
+
+
+def test_index_cap_trims_registration(smoke_setup):
+    """prefix_cache_pages bounds the pages the index pins."""
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params, "packkv", "xla", prefix_cache_pages=1)
+    srv = _serve(eng, _shared_reqs(cfg.vocab))
+    assert srv._index.n_held <= 1
+    assert srv.stats.prefix_hits >= 1  # page 0 still matches
+
+
+def test_prefix_cache_requires_paged_and_slots(smoke_setup):
+    cfg, params = smoke_setup
+    with pytest.raises(ValueError, match="requires --paged"):
+        Engine(cfg, params, PackKVConfig(),
+               EngineConfig(capacity=512, prefix_cache=True, paged=False))

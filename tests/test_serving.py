@@ -129,6 +129,17 @@ def test_slot_server_eos_eviction(rng):
     assert srv.slots == [None]
 
 
+def test_recurrent_families_reject_prefix_cache():
+    """rwkv6 / rglru decode state has no page-addressable KV pages:
+    --prefix-cache must fail loudly at engine build (the check fires before
+    params are touched), not be silently ignored by the WaveServer path."""
+    for name in ("rwkv6-1.6b", "recurrentgemma-9b"):
+        cfg = SMOKES[name]
+        with pytest.raises(ValueError, match="prefix-cache"):
+            Engine(cfg, None, PackKVConfig(policy="none"),
+                   EngineConfig(capacity=256, paged=True, prefix_cache=True))
+
+
 def test_rglru_engine_windowed(rng):
     cfg = SMOKES["recurrentgemma-9b"]
     params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
