@@ -34,6 +34,7 @@ BENCHES = {
     "fig17_scaling": bench_scaling.main,
     "beyond_grad_compress": bench_grad_compress.main,
     "beyond_continuous_batching": bench_continuous.main,
+    "beyond_mixed_latency": bench_continuous.main_mixed_latency,
     "beyond_ragged_length_aware": bench_ragged.main,
     "beyond_paged_pool": bench_paged.main,
     "beyond_prefix_cache": bench_prefix.main,

@@ -1,8 +1,11 @@
 """Serving launcher: calibrated PackKV engine + slot-scheduled requests.
 
+Every family (transformer, rwkv6, hybrid_rglru) serves through the one
+chunk-interleaved ``SlotServer`` engine.
+
 Example:
   PYTHONPATH=src python -m repro.launch.serve --arch llama2-7b --smoke \
-      --requests 12 --max-new 32 --policy packkv --server slot
+      --requests 12 --max-new 32 --policy packkv
 """
 from __future__ import annotations
 
@@ -15,7 +18,7 @@ import numpy as np
 from ..configs import get_arch
 from ..core.cache import PackKVConfig
 from ..models import get_model
-from ..serving import Engine, EngineConfig, Request, SlotServer, WaveServer
+from ..serving import Engine, EngineConfig, Request, SlotServer
 from ..utils import tree_bytes
 
 
@@ -30,9 +33,10 @@ def main() -> int:
     ap.add_argument("--capacity", type=int, default=1024)
     ap.add_argument("--policy", default="packkv", choices=["packkv", "none", "kivi"])
     ap.add_argument("--backend", default="xla", choices=["xla", "pallas"])
-    ap.add_argument("--server", default="slot", choices=["slot", "wave"],
-                    help="slot = continuous batching; wave = wave-chunked "
-                    "compat wrapper (auto-fallback for recurrent families)")
+    ap.add_argument("--prefill-chunk-pages", type=int, default=1,
+                    help="admission chunk budget in pages per scheduler "
+                    "step; decode never stalls more than one chunk "
+                    "(0 = legacy monolithic prefill; docs/serving.md)")
     ap.add_argument("--paged", action="store_true",
                     help="paged compressed region: shared page pool + "
                     "page-reservation admission (docs/architecture.md)")
@@ -62,18 +66,22 @@ def main() -> int:
                         backend=args.backend, paged=args.paged,
                         page_size=args.page_size, pool_pages=args.pool_pages,
                         prefix_cache=args.prefix_cache,
-                        prefix_cache_pages=args.prefix_cache_pages)
+                        prefix_cache_pages=args.prefix_cache_pages,
+                        prefill_chunk_pages=args.prefill_chunk_pages)
     t0 = time.time()
     engine = Engine(cfg, params, pack, ecfg)
     print(f"engine built in {time.time() - t0:.1f}s; policy={args.policy}")
-    if args.policy == "packkv":
-        ks, vs = engine.pack_cfg.k_spec_static, engine.pack_cfg.v_spec_static
+    ks, vs = engine.pack_cfg.k_spec_static, engine.pack_cfg.v_spec_static
+    if args.policy == "packkv" and ks is not None:  # recurrent: no KV tiers
         print(f"calibrated K tiers {ks.widths}×{ks.counts}; "
               f"V tiers {vs.widths}×{vs.counts}")
 
-    use_slot = (args.server == "slot" and engine.api.supports_slots
-                and cfg.input_mode == "tokens")
-    server = SlotServer(engine) if use_slot else WaveServer(engine)
+    if cfg.input_mode != "tokens":
+        raise SystemExit(
+            f"{args.arch} takes input_mode {cfg.input_mode!r}; the request "
+            "queue carries token prompts only — batch such inputs through "
+            "Engine.generate instead")
+    server = SlotServer(engine)
     rng = np.random.default_rng(args.seed)
     # --prefix-cache demo traffic: every request opens with the same
     # two-page "system prompt" so later admissions hit the index
@@ -84,33 +92,26 @@ def main() -> int:
         toks = np.concatenate([sys_prompt, rng.integers(0, cfg.vocab, plen)])
         server.submit(Request(rid=rid, max_new=args.max_new, tokens=toks))
     t0 = time.time()
-    n_tok = 0
-    if use_slot:
-        done = server.run()
-        n_tok = sum(len(r.output) for r in done)
-    else:
-        while server.queue:
-            wave = server.run_wave()
-            n_tok += sum(r.max_new for r in wave)
-            print(f"wave of {len(wave)} served")
+    done = server.run()
+    n_tok = sum(len(r.output) for r in done)
     dt = time.time() - t0
     print(f"{args.requests} requests, {n_tok} tokens in {dt:.1f}s "
           f"({n_tok / dt:.1f} tok/s on CPU)")
-    if use_slot:
-        s = server.stats
-        print(f"slot scheduler: {s.decode_steps} decode steps, "
-              f"occupancy {s.occupancy:.2f}, {s.slot_reuses} slot reuses, "
-              f"{s.admitted} admitted / {s.completed} completed")
-        if args.paged:
-            print(f"paged pool: {engine.pack_cfg.pool_pages} pages of "
-                  f"{args.page_size} tokens, peak reserved "
-                  f"{s.pages_reserved_peak}, {s.admission_blocks} "
-                  f"admission blocks")
-        if args.prefix_cache:
-            print(f"prefix cache: {s.prefix_hits}/{s.prefix_lookups} hits "
-                  f"(rate {s.prefix_hit_rate:.2f}), "
-                  f"{s.prefix_pages_shared} pages shared by reference, "
-                  f"{s.prefix_evictions} evictions")
+    s = server.stats
+    print(f"slot scheduler: {s.decode_steps} decode steps, "
+          f"occupancy {s.occupancy:.2f}, {s.slot_reuses} slot reuses, "
+          f"{s.admitted} admitted / {s.completed} completed, "
+          f"{s.prefill_chunks} prefill chunks")
+    if args.paged:
+        print(f"paged pool: {engine.pack_cfg.pool_pages} pages of "
+              f"{args.page_size} tokens, peak reserved "
+              f"{s.pages_reserved_peak}, {s.admission_blocks} "
+              f"admission blocks")
+    if args.prefix_cache:
+        print(f"prefix cache: {s.prefix_hits}/{s.prefix_lookups} hits "
+              f"(rate {s.prefix_hit_rate:.2f}), "
+              f"{s.prefix_pages_shared} pages shared by reference, "
+              f"{s.prefix_evictions} evictions")
 
     # cache memory report (the paper's deliverable). Byte counts are
     # static-shape-determined, so the allocated slot cache suffices — and

@@ -151,6 +151,80 @@ def flash_attention(
     return outs.reshape(B, Hq, S, Dh)
 
 
+def resume_attention(
+    q: Array,
+    k_all: Array,
+    v_all: Array,
+    n_ctx: int,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    kv_chunk: int = 1024,
+    sm_scale: float | None = None,
+) -> Array:
+    """Chunk-resumable flash attention: queries at absolute positions
+    ``n_ctx + arange(Sc)`` over a FULL-length key scratch.
+
+    q: [B, Hq, Sc, Dh]; k_all/v_all: [B, Hkv, T, Dh] where only the first
+    ``n_ctx + Sc`` keys are valid — later entries are unwritten scratch,
+    excluded by the causal mask exactly like a not-yet-reached key in the
+    monolithic pass. Mirrors ``flash_attention``'s inner loop op-for-op
+    (same kv tiling ``kc = min(kv_chunk, T)``, same einsum contractions,
+    same NEG_INF masking and running m/l/o merge) so each query row's
+    output is BIT-IDENTICAL to the row a monolithic ``flash_attention``
+    over the full T-token sequence computes: per-row results depend only
+    on that row's masked key set, and the reduction order over keys is the
+    chunk scan in both. This is what lets the chunked-interleaved prefill
+    reproduce the monolithic engine's floats (see docs/serving.md).
+    """
+    B, Hq, Sc, Dh = q.shape
+    Hkv = k_all.shape[1]
+    G = Hq // Hkv
+    T = k_all.shape[2]
+    scale = sm_scale if sm_scale is not None else 1.0 / math.sqrt(Dh)
+    kc = min(kv_chunk, T)
+    assert T % kc == 0, (T, kc)
+    nk = T // kc
+
+    qg = q.reshape(B, Hkv, G, Sc, Dh)
+    k_ch = jnp.moveaxis(k_all.reshape(B, Hkv, nk, kc, Dh), 2, 0)
+    v_ch = jnp.moveaxis(v_all.reshape(B, Hkv, nk, kc, Dh), 2, 0)
+    kv_pos_base = jnp.arange(nk) * kc
+    qpos = n_ctx + jnp.arange(Sc)  # [Sc] absolute positions
+
+    def inner(acc, ys):
+        ki, vi, kpb = ys
+        m_p, l_p, o_p = acc
+        kpos = kpb + jnp.arange(kc)  # [kc]
+        s = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qg.astype(jnp.float32), ki.astype(jnp.float32)
+        ) * scale
+        mask = jnp.ones((Sc, kc), bool)
+        if causal:
+            mask &= qpos[:, None] >= kpos[None, :]
+        if window:
+            mask &= qpos[:, None] - kpos[None, :] < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_n = jnp.maximum(m_p, s.max(-1))
+        alpha = jnp.exp(m_p - m_n)
+        p = jnp.exp(s - m_n[..., None])
+        p = jnp.where(mask, p, 0.0)
+        l_n = l_p * alpha + p.sum(-1)
+        o_n = o_p * alpha[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, vi.astype(jnp.float32)
+        )
+        return (m_n, l_n, o_n), None
+
+    m0 = jnp.full((B, Hkv, G, Sc), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sc), jnp.float32)
+    o0 = jnp.zeros((B, Hkv, G, Sc, Dh), jnp.float32)
+    (m, l, o), _ = jax.lax.scan(
+        jax.checkpoint(inner), (m0, l0, o0), (k_ch, v_ch, kv_pos_base)
+    )
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.astype(q.dtype).reshape(B, Hq, Sc, Dh)
+
+
 def ctx_attention(q: Array, k_all: Array, v_all: Array, n_ctx: int,
                   sm_scale: float) -> Array:
     """Segment attention for chunked prefill: queries over [context | self].

@@ -8,15 +8,29 @@ ModelApi:
   decode_step(params, cfg, cache, token, backend=...) -> (logits, cache)
   alloc_cache(cfg, pack_cfg, batch, capacity) -> cache pytree
 
-Slot ops (continuous batching; None for families whose decode state cannot
-be row-recycled yet — rwkv6/rglru carry recurrent per-layer state):
+Slot ops (continuous batching — EVERY family implements these; the decode
+state is row-recycled whether it is a paged KV cache or O(1) recurrent
+state):
   prefill_into_slot(params, cfg, pack_cfg, capacity, cache, slot, batch)
       -> (last_logits [1, V], cache with row ``slot`` replaced)
   reset_slot(cache, slot) -> cache with row ``slot`` freed
+  mask_free(cache, active) -> cache with inactive rows re-zeroed after a
+      ride-along decode step
   decode_multi(params, cfg, cache, token, active, n_steps, eos_id,
                t_max=..., backend=..., n_bucket=...)
       -> (tokens [t_max, B], n_exec, cache) — donated multi-step decode
       chunk (jit with donate_argnames=("cache",); see transformer.decode_steps)
+      None for recurrent families (per-token launches there).
+
+Chunked admission (PR 6 — interleaved prefill/decode; every family):
+  prefill_chunk_init(cfg, pack_cfg, capacity, prompt_len=S) -> scratch
+  prefill_chunk(params, cfg, pack_cfg, scratch, tokens, n_ctx=...)
+      -> (last_logits [1, V], scratch) — one bounded chunk; STATIC n_ctx
+  prefill_chunk_insert(cfg, pack_cfg, capacity, cache, slot, scratch)
+      -> cache with row ``slot`` built from the finished scratch
+Chunk boundaries must be page-aligned (transformer: exact flash resume
+points; rwkv6: WKV chunk alignment) — the scheduler only ever cuts at
+``prefill_chunk_pages * page_size`` multiples.
 """
 from __future__ import annotations
 
@@ -42,6 +56,7 @@ class ModelApi:
     alloc_cache: Callable
     prefill_into_slot: Optional[Callable] = None
     reset_slot: Optional[Callable] = None
+    mask_free: Optional[Callable] = None
     decode_multi: Optional[Callable] = None
     # Prefix-cache admission (PR 5): chunked prefill that maps a matched
     # page-aligned prompt prefix into the slot by reference and computes
@@ -49,10 +64,26 @@ class ModelApi:
     # (rwkv6 / hybrid_rglru recurrent state) — the Engine rejects
     # --prefix-cache for those with a clear error.
     prefill_prefix: Optional[Callable] = None
+    # Chunked interleaved admission (PR 6; see module docstring):
+    prefill_chunk_init: Optional[Callable] = None
+    prefill_chunk: Optional[Callable] = None
+    prefill_chunk_insert: Optional[Callable] = None
+    # Prefix-cache × chunked admission (transformer only): per-segment
+    # resume through a paged mini-cache (bounds from prefix_chunk_bounds).
+    prefix_chunk_bounds: Optional[Callable] = None
+    prefix_chunk_init: Optional[Callable] = None
+    prefix_chunk: Optional[Callable] = None
+    prefix_chunk_insert: Optional[Callable] = None
 
     @property
     def supports_slots(self) -> bool:
         return self.prefill_into_slot is not None
+
+    @property
+    def supports_paged(self) -> bool:
+        """Page-addressable KV (paged pool, buckets, prefix cache). The
+        recurrent families' O(1) state has no pages to address."""
+        return self.prefill_prefix is not None
 
 
 def _make_loss(forward_train):
@@ -72,6 +103,8 @@ def _make_loss(forward_train):
 
 
 def _transformer_api() -> ModelApi:
+    from ..core.cache import mask_free_slots
+
     return ModelApi(
         init=transformer.init_params,
         forward_train=transformer.forward_train,
@@ -81,8 +114,16 @@ def _transformer_api() -> ModelApi:
         alloc_cache=transformer.alloc_cache,
         prefill_into_slot=transformer.prefill_into_slot,
         reset_slot=transformer.reset_cache_slot,
+        mask_free=mask_free_slots,
         decode_multi=transformer.decode_steps,
         prefill_prefix=transformer.prefill_into_slot_prefix,
+        prefill_chunk_init=transformer.prefill_chunk_init,
+        prefill_chunk=transformer.prefill_chunk,
+        prefill_chunk_insert=transformer.prefill_chunk_insert,
+        prefix_chunk_bounds=transformer.prefix_chunk_bounds,
+        prefix_chunk_init=transformer.prefix_chunk_init,
+        prefix_chunk=transformer.prefix_chunk,
+        prefix_chunk_insert=transformer.prefix_chunk_insert,
     )
 
 
@@ -96,6 +137,12 @@ def _rwkv_api() -> ModelApi:
         alloc_cache=lambda cfg, pack_cfg, batch, capacity: rwkv6.alloc_state(
             cfg, batch
         ),
+        prefill_into_slot=rwkv6.prefill_into_slot,
+        reset_slot=rwkv6.reset_state_slot,
+        mask_free=rwkv6.mask_free_rows,
+        prefill_chunk_init=rwkv6.prefill_chunk_init,
+        prefill_chunk=rwkv6.prefill_chunk,
+        prefill_chunk_insert=rwkv6.prefill_chunk_insert,
     )
 
 
@@ -109,6 +156,12 @@ def _rglru_api() -> ModelApi:
         alloc_cache=lambda cfg, pack_cfg, batch, capacity: rglru.alloc_state(
             cfg, pack_cfg, batch
         ),
+        prefill_into_slot=rglru.prefill_into_slot,
+        reset_slot=rglru.reset_state_slot,
+        mask_free=rglru.mask_free_rows,
+        prefill_chunk_init=rglru.prefill_chunk_init,
+        prefill_chunk=rglru.prefill_chunk,
+        prefill_chunk_insert=rglru.prefill_chunk_insert,
     )
 
 

@@ -23,7 +23,10 @@ from ..core.cache import (
     PackKVConfig,
     alloc_layer_cache,
     append_token,
+    insert_row,
+    mask_free_slots,
     prefill_cache,
+    reset_slot,
 )
 from ..kernels import dense_decode_attention, packed_decode_attention
 from ..utils import pytree_dataclass
@@ -34,6 +37,7 @@ from .layers import (
     mlp_apply,
     mlp_init,
     qkv_proj,
+    resume_attention,
     rmsnorm,
     rmsnorm_init,
 )
@@ -53,7 +57,7 @@ class RGState:
     cache: object  # LayerKVCache stacked [n_groups, ...] (window capacity)
     tail_lru_h: Array  # f32 [n_tail, B, R]
     tail_conv: Array  # bf16 [n_tail, B, CONV_W-1, R]
-    pos: Array  # i32 []
+    pos: Array  # i32 [B] per-row decoded length (slot-table bookkeeping)
 
 
 # ---------------------------------------------------------------------------
@@ -232,7 +236,7 @@ def alloc_state(cfg: ArchConfig, pack_cfg: PackKVConfig, batch: int) -> RGState:
         cache=jax.vmap(one_cache)(jnp.arange(n_groups)),
         tail_lru_h=jnp.zeros((n_tail, batch, R), jnp.float32),
         tail_conv=jnp.zeros((n_tail, batch, CONV_W - 1, R), jnp.bfloat16),
-        pos=jnp.zeros((), jnp.int32),
+        pos=jnp.zeros((batch,), jnp.int32),
     )
 
 
@@ -274,7 +278,7 @@ def prefill(params: dict, cfg: ArchConfig, pack_cfg: PackKVConfig, capacity: int
         lru_h=lru, conv=conv, cache=cache,
         tail_lru_h=jnp.stack(tails_l) if n_tail else jnp.zeros((0, B, cfg.lru_dim or cfg.d_model), jnp.float32),
         tail_conv=jnp.stack(tails_c) if n_tail else jnp.zeros((0, B, CONV_W - 1, cfg.lru_dim or cfg.d_model), jnp.bfloat16),
-        pos=jnp.int32(T),
+        pos=jnp.full((B,), T, jnp.int32),
     )
     return logits, state
 
@@ -312,7 +316,7 @@ def decode_step(params: dict, cfg: ArchConfig, cache: RGState, token: Array,
     W = cfg.window
     h = params["embed"][token[:, 0]]  # [B, D]
     pos = state.pos
-    positions = pos + jnp.arange(1)
+    positions = pos[:, None, None]  # [B,1,1]: per-row RoPE positions
     sm_scale = 1.0 / (cfg.hd ** 0.5)
 
     def group_body(hh, xs):
@@ -376,3 +380,184 @@ def decode_step(params: dict, cfg: ArchConfig, cache: RGState, token: Array,
         pos=pos + 1,
     )
     return logits, new_state
+
+
+# ---------------------------------------------------------------------------
+# slot ops (continuous batching) + chunked admission
+# ---------------------------------------------------------------------------
+# A slot is one batch row of every state leaf: the windowed attention caches
+# go through the core helpers (insert_row / reset_slot / mask_free_slots, the
+# same ones the transformer families use), the O(1) recurrent leaves are
+# plain row scatters. Leaf batch axes: grouped [n_groups, 2, B, ...], cache
+# counters [n_groups, B], tail [n_tail, B, ...], pos [B].
+
+
+def insert_state_row(state: RGState, slot, row: RGState) -> RGState:
+    """Scatter a B=1 prefill's state into row ``slot`` (traced ok)."""
+    put2 = lambda dst, src: dst.at[:, :, slot].set(src[:, :, 0])
+    put1 = lambda dst, src: dst.at[:, slot].set(src[:, 0])
+    return RGState(
+        lru_h=put2(state.lru_h, row.lru_h),
+        conv=put2(state.conv, row.conv),
+        cache=insert_row(state.cache, slot, row.cache),
+        tail_lru_h=put1(state.tail_lru_h, row.tail_lru_h),
+        tail_conv=put1(state.tail_conv, row.tail_conv),
+        pos=state.pos.at[slot].set(row.pos[0]),
+    )
+
+
+def prefill_into_slot(params: dict, cfg: ArchConfig, pack_cfg, capacity: int,
+                      cache: RGState, slot, batch: dict):
+    """Admit ONE request into row ``slot`` at its TRUE length. The old
+    WaveServer left-pad wave fed pad tokens through the RG-LRU recurrence
+    AND the window cache; a B=1 prefill scattered into the row cannot."""
+    logits, row = prefill(params, cfg, pack_cfg, capacity, batch)
+    return logits, insert_state_row(cache, slot, row)
+
+
+def reset_state_slot(state: RGState, slot) -> RGState:
+    """Recycle row ``slot``: window-cache counters to zero via the core
+    reset, recurrent leaves zeroed outright (they have no masking counter —
+    a stale LRU state would leak into the next occupant's first token)."""
+    z2 = lambda a: a.at[:, :, slot].set(jnp.zeros_like(a[:, :, slot]))
+    z1 = lambda a: a.at[:, slot].set(jnp.zeros_like(a[:, slot]))
+    return RGState(
+        lru_h=z2(state.lru_h),
+        conv=z2(state.conv),
+        cache=reset_slot(state.cache, slot),
+        tail_lru_h=z1(state.tail_lru_h),
+        tail_conv=z1(state.tail_conv),
+        pos=state.pos.at[slot].set(0),
+    )
+
+
+def mask_free_rows(state: RGState, active: Array) -> RGState:
+    """Re-zero state rows of inactive slots after a ride-along decode
+    (``where`` so even a NaN in a dead row cannot survive)."""
+    def m(a, lead):  # ``active`` broadcast at batch axis ``lead``
+        am = active.reshape((1,) * lead + (-1,) + (1,) * (a.ndim - lead - 1))
+        return jnp.where(am, a, jnp.zeros_like(a))
+
+    return RGState(
+        lru_h=m(state.lru_h, 2),
+        conv=m(state.conv, 2),
+        cache=mask_free_slots(state.cache, active),
+        tail_lru_h=m(state.tail_lru_h, 1),
+        tail_conv=m(state.tail_conv, 1),
+        pos=jnp.where(active, state.pos, 0),
+    )
+
+
+def prefill_chunk_init(cfg: ArchConfig, pack_cfg, capacity: int,
+                       *, prompt_len: int) -> dict:
+    """Chunked-admission scratch: zero B=1 recurrent state plus a raw bf16
+    K/V scratch per attention layer sized to the FULL prompt (the window
+    cache is built once at insert — compression is deferred, so chunked
+    bytes match the monolithic prefill's)."""
+    n_groups, n_tail = divmod(cfg.n_layers, 3)
+    R = cfg.lru_dim or cfg.d_model
+    return {
+        "k": jnp.zeros((n_groups, 1, cfg.n_kv_heads, prompt_len, cfg.hd),
+                       jnp.bfloat16),
+        "v": jnp.zeros((n_groups, 1, cfg.n_kv_heads, prompt_len, cfg.hd),
+                       jnp.bfloat16),
+        "lru_h": jnp.zeros((n_groups, 2, 1, R), jnp.float32),
+        "conv": jnp.zeros((n_groups, 2, 1, CONV_W - 1, R), jnp.bfloat16),
+        "tail_lru_h": jnp.zeros((n_tail, 1, R), jnp.float32),
+        "tail_conv": jnp.zeros((n_tail, 1, CONV_W - 1, R), jnp.bfloat16),
+    }
+
+
+def prefill_chunk(params: dict, cfg: ArchConfig, pack_cfg, scratch: dict,
+                  tokens: Array, *, n_ctx: int):
+    """One bounded chunk of an interleaved admission (STATIC ``n_ctx``).
+
+    Recurrent blocks resume exactly — the conv history is the last
+    CONV_W-1 inputs and the LRU carry is the scan state, both carried in
+    ``scratch`` — and attention resumes via ``resume_attention`` over the
+    full-prompt K/V scratch (bit-identical per query row to the monolithic
+    ``flash_attention``, window mask included). Composing chunks therefore
+    reproduces the one-shot prefill's floats (see the transformer twin)."""
+    B, Sc = tokens.shape
+    h = params["embed"][tokens]
+    positions = n_ctx + jnp.arange(Sc)
+
+    def group_body(hh, xs):
+        gp, lru, conv, k_s, v_s = xs
+        new_lru, new_conv = [], []
+        for r in range(2):
+            rp = jax.tree_util.tree_map(lambda a: a[r], gp["rec"])
+            hh, hist, hf = _rec_block_seq(rp, cfg, hh, conv[r], lru[r])
+            new_lru.append(hf)
+            new_conv.append(hist)
+        x = rmsnorm(hh, gp["attn"]["ln"])
+        q, k, v = qkv_proj(
+            gp["attn"]["attn"], x, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            positions, cfg.rope_theta,
+        )
+        k_s = jax.lax.dynamic_update_slice_in_dim(
+            k_s, k.astype(k_s.dtype), n_ctx, axis=2
+        )
+        v_s = jax.lax.dynamic_update_slice_in_dim(
+            v_s, v.astype(v_s.dtype), n_ctx, axis=2
+        )
+        # static live-prefix slice (see the transformer twin): unwritten
+        # scratch keys are masked zeros — dropping them keeps each chunk's
+        # attention at Sc*(n_ctx+Sc) work, tiled cleanly past 1024
+        t_used = n_ctx + Sc
+        if t_used > 1024:
+            t_used = min(k_s.shape[2], -(-t_used // 1024) * 1024)
+        attn = resume_attention(q, k_s[:, :, :t_used], v_s[:, :, :t_used],
+                                n_ctx, causal=True, window=cfg.window)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, Sc, cfg.n_heads * cfg.hd)
+        hh = hh + jnp.dot(attn.astype(hh.dtype), gp["attn"]["attn"]["wo"])
+        hh = hh + mlp_apply(gp["attn"]["mlp"], rmsnorm(hh, gp["attn"]["mlp_ln"]))
+        return hh, (jnp.stack(new_lru), jnp.stack(new_conv), k_s, v_s)
+
+    h, (lru, conv, k_s, v_s) = jax.lax.scan(
+        group_body, h,
+        (params["groups"], scratch["lru_h"], scratch["conv"],
+         scratch["k"], scratch["v"]),
+    )
+    n_tail = scratch["tail_lru_h"].shape[0]
+    tails_l, tails_c = [], []
+    for t in range(n_tail):
+        tp = jax.tree_util.tree_map(lambda a: a[t], params["tail"])
+        h, hist, hf = _rec_block_seq(
+            tp, cfg, h, scratch["tail_conv"][t], scratch["tail_lru_h"][t]
+        )
+        tails_l.append(hf)
+        tails_c.append(hist)
+    hl = rmsnorm(h[:, -1:], params["final_ln"])
+    logits = jnp.dot(hl, params["head"])[:, 0].astype(jnp.float32)
+    new_scratch = {
+        "k": k_s, "v": v_s, "lru_h": lru, "conv": conv,
+        "tail_lru_h": jnp.stack(tails_l) if n_tail else scratch["tail_lru_h"],
+        "tail_conv": jnp.stack(tails_c) if n_tail else scratch["tail_conv"],
+    }
+    return logits, new_scratch
+
+
+def prefill_chunk_insert(cfg: ArchConfig, pack_cfg, capacity: int,
+                         cache: RGState, slot, scratch: dict) -> RGState:
+    """Finish a chunked admission: compress the last ``min(T, window)``
+    scratch tokens per attention layer into a fresh B=1 window cache —
+    the SAME ``prefill_cache`` call (same inputs, so same bytes) the
+    monolithic prefill makes — and scatter the whole row into ``slot``."""
+    T = scratch["k"].shape[3]
+    W = cfg.window
+    Wc = min(T, W)
+
+    def one_group(carry, ys):
+        k, v = ys
+        cache_l = alloc_layer_cache(pack_cfg, 1, cfg.n_kv_heads, cfg.hd, W)
+        cache_l = prefill_cache(cache_l, k[..., -Wc:, :], v[..., -Wc:, :])
+        return carry, cache_l
+
+    _, row_cache = jax.lax.scan(one_group, 0, (scratch["k"], scratch["v"]))
+    row = RGState(
+        lru_h=scratch["lru_h"], conv=scratch["conv"], cache=row_cache,
+        tail_lru_h=scratch["tail_lru_h"], tail_conv=scratch["tail_conv"],
+        pos=jnp.full((1,), T, jnp.int32),
+    )
+    return insert_state_row(cache, slot, row)

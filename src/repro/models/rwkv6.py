@@ -43,7 +43,7 @@ class RwkvState:
     S: Array  # f32 [n_layers, B, H, N, N] wkv state
     tm_x: Array  # bf16 [n_layers, B, D] last token (time-mix shift)
     cm_x: Array  # bf16 [n_layers, B, D] last token (channel-mix shift)
-    pos: Array  # i32 []
+    pos: Array  # i32 [B] per-row decoded length (slot-table bookkeeping)
 
 
 def init_layer(key, cfg: ArchConfig) -> dict:
@@ -161,29 +161,45 @@ def _time_mix_seq(p: dict, cfg: ArchConfig, x: Array, x_prev: Array, S0: Array):
         S = w_t[..., :, None] * S + kv
         return S, y
 
-    if T % CHUNK_C == 0:
-        # chunked matmul form (§Perf H2): state r/w once per chunk
-        y4, S = _wkv_chunked(r, k, v, w, u, S0)
-        y = y4.reshape(B, T, D)
-    else:
-        rs, ks_, vs, ws = (jnp.moveaxis(a, 1, 0) for a in (r, k, v, w))
-        # chunked remat fallback: saving S per step costs T·|S| at backward
-        # peak (34 GB at 4k×16 local batch); checkpoint WKV_CHUNK-step
-        # chunks instead (§Perf M3).
-        C = WKV_CHUNK if T % WKV_CHUNK == 0 else 1
+    def _seq(r_, k_, v_, w_, S_init):
+        """Sequential scan over [B, t, H, N] slices; remat-chunked when the
+        span is long (saving S per step costs t·|S| at backward peak — 34 GB
+        at 4k×16 local batch; checkpoint WKV_CHUNK-step chunks, §Perf M3)."""
+        t = r_.shape[1]
+        rs, ks_, vs, ws = (jnp.moveaxis(a, 1, 0) for a in (r_, k_, v_, w_))
+        C = WKV_CHUNK if t % WKV_CHUNK == 0 and t > WKV_CHUNK else 1
         if C > 1:
-            chunked = lambda a: a.reshape(T // C, C, *a.shape[1:])
+            chunked = lambda a: a.reshape(t // C, C, *a.shape[1:])
             rs, ks_, vs, ws = (chunked(a) for a in (rs, ks_, vs, ws))
 
             @jax.checkpoint
             def chunk_step(S, inp):
                 return jax.lax.scan(step, S, inp)
 
-            S, ys = jax.lax.scan(chunk_step, S0, (rs, ks_, vs, ws))
-            ys = ys.reshape(T, *ys.shape[2:])
+            S, ys = jax.lax.scan(chunk_step, S_init, (rs, ks_, vs, ws))
+            ys = ys.reshape(t, *ys.shape[2:])
         else:
-            S, ys = jax.lax.scan(step, S0, (rs, ks_, vs, ws))
-        y = jnp.moveaxis(ys, 0, 1).reshape(B, T, D)  # [B,T,D]
+            S, ys = jax.lax.scan(step, S_init, (rs, ks_, vs, ws))
+        return jnp.moveaxis(ys, 0, 1), S  # [B, t, H, N], S
+
+    # MIXED path: chunked matmul form (§Perf H2) over the CHUNK_C-aligned
+    # prefix, sequential scan over the sub-chunk tail. Always taking the
+    # chunked form for the aligned bulk (instead of only when T % CHUNK_C
+    # == 0) makes the recurrence COMPOSE bit-exactly across any 16-aligned
+    # split: running [0, Tb) then [Tb, T) from the carried state replays
+    # the identical per-chunk scan — the invariant the chunk-interleaved
+    # SlotServer admission relies on (chunk sizes are page multiples).
+    Tb = (T // CHUNK_C) * CHUNK_C
+    if Tb == 0:
+        y4, S = _seq(r, k, v, w, S0)
+    elif Tb == T:
+        y4, S = _wkv_chunked(r, k, v, w, u, S0)
+    else:
+        y_a, S_mid = _wkv_chunked(r[:, :Tb], k[:, :Tb], v[:, :Tb], w[:, :Tb],
+                                  u, S0)
+        y_b, S = _seq(r[:, Tb:], k[:, Tb:], v[:, Tb:], w[:, Tb:], S_mid)
+        y4 = jnp.concatenate([y_a, y_b], axis=1)
+    y = y4.reshape(B, T, D)
     y = rmsnorm(y.astype(x.dtype), p["ln_x"]) * g.astype(x.dtype)
     return (y @ p["wo"]), S, x[:, -1]
 
@@ -234,33 +250,112 @@ def alloc_state(cfg: ArchConfig, batch: int) -> RwkvState:
         S=jnp.zeros((L, batch, H, N, N), jnp.float32),
         tm_x=jnp.zeros((L, batch, D), jnp.bfloat16),
         cm_x=jnp.zeros((L, batch, D), jnp.bfloat16),
-        pos=jnp.zeros((), jnp.int32),
+        pos=jnp.zeros((batch,), jnp.int32),
     )
+
+
+def _forward_seq(params: dict, cfg: ArchConfig, tokens: Array,
+                 state: RwkvState):
+    """Run a token span through the recurrence, RESUMING from ``state``
+    (zero state == a cold prefill). Because the mixed WKV path composes
+    bit-exactly at CHUNK_C-aligned splits and the token-shift/channel-mix
+    carries are exactly the last token, prefilling [0, c) then [c, T) from
+    the carried state reproduces the one-shot prefill — the chunked
+    admission path IS this function called per chunk."""
+    B, T = tokens.shape
+    h = params["embed"][tokens]
+
+    def body(hh, xs):
+        lp, S0, tm0, cm0 = xs
+        xin = rmsnorm(hh, lp["ln1"])
+        y, S, tm_x = _time_mix_seq(lp, cfg, xin, tm0, S0)
+        hh = hh + y
+        xc = rmsnorm(hh, lp["ln2"])
+        c, cm_x = _channel_mix_seq(lp, xc, cm0)
+        return hh + c, (S, tm_x, cm_x)
+
+    h, (S, tm_x, cm_x) = jax.lax.scan(
+        body, h, (params["layers"], state.S, state.tm_x, state.cm_x)
+    )
+    hl = rmsnorm(h[:, -1:], params["final_ln"])
+    logits = jnp.dot(hl, params["head"])[:, 0].astype(jnp.float32)
+    return logits, RwkvState(S=S, tm_x=tm_x, cm_x=cm_x, pos=state.pos + T)
 
 
 def prefill(params: dict, cfg: ArchConfig, pack_cfg, capacity, batch: dict):
     """Run the prompt through the recurrence; state is the 'cache'."""
     tokens = batch["tokens"]
-    B, T = tokens.shape
-    D = cfg.d_model
-    H = cfg.wkv_heads or cfg.n_heads
-    N = D // H
-    h = params["embed"][tokens]
+    return _forward_seq(params, cfg, tokens, alloc_state(cfg, tokens.shape[0]))
 
-    def body(hh, lp):
-        z = jnp.zeros((B, D), hh.dtype)
-        S0 = jnp.zeros((B, H, N, N), jnp.float32)
-        xin = rmsnorm(hh, lp["ln1"])
-        y, S, tm_x = _time_mix_seq(lp, cfg, xin, z, S0)
-        hh = hh + y
-        xc = rmsnorm(hh, lp["ln2"])
-        c, cm_x = _channel_mix_seq(lp, xc, z)
-        return hh + c, (S, tm_x, cm_x)
 
-    h, (S, tm_x, cm_x) = jax.lax.scan(body, h, params["layers"])
-    hl = rmsnorm(h[:, -1:], params["final_ln"])
-    logits = jnp.dot(hl, params["head"])[:, 0].astype(jnp.float32)
-    return logits, RwkvState(S=S, tm_x=tm_x, cm_x=cm_x, pos=jnp.int32(T))
+# -- slot ops (continuous batching over recurrent rows) ----------------------
+# The O(1) per-row state makes these trivial: a slot is one batch row of
+# every state leaf, admission is a B=1 prefill scattered into that row, and
+# recycling just zeroes it. No paging, no counters — but the SAME SlotServer
+# admission/retire path as the transformer families (docs/serving.md).
+
+
+def insert_state_row(state: RwkvState, slot, row: RwkvState) -> RwkvState:
+    """Scatter a B=1 prefill's state into row ``slot`` (traced ok)."""
+    put = lambda dst, src: dst.at[:, slot].set(src[:, 0])
+    return RwkvState(
+        S=put(state.S, row.S),
+        tm_x=put(state.tm_x, row.tm_x),
+        cm_x=put(state.cm_x, row.cm_x),
+        pos=state.pos.at[slot].set(row.pos[0]),
+    )
+
+
+def prefill_into_slot(params: dict, cfg: ArchConfig, pack_cfg, capacity: int,
+                      cache: RwkvState, slot, batch: dict):
+    """Admit ONE request into row ``slot`` at its TRUE length (no padding:
+    the old WaveServer left-pad path fed pad tokens through the recurrence,
+    polluting S/tm_x/cm_x — a B=1 prefill scattered into the row cannot)."""
+    logits, row = prefill(params, cfg, pack_cfg, capacity, batch)
+    return logits, insert_state_row(cache, slot, row)
+
+
+def reset_state_slot(state: RwkvState, slot) -> RwkvState:
+    zero = lambda a: a.at[:, slot].set(jnp.zeros_like(a[:, slot]))
+    return RwkvState(
+        S=zero(state.S), tm_x=zero(state.tm_x), cm_x=zero(state.cm_x),
+        pos=state.pos.at[slot].set(0),
+    )
+
+
+def mask_free_rows(state: RwkvState, active: Array) -> RwkvState:
+    """Re-zero state rows of inactive slots (junk-append hygiene; uses
+    ``where`` so even a NaN in a dead row cannot survive)."""
+    def m(a):  # leaves [L, B, ...]
+        am = active.reshape((1, -1) + (1,) * (a.ndim - 2))
+        return jnp.where(am, a, jnp.zeros_like(a))
+
+    return RwkvState(
+        S=m(state.S), tm_x=m(state.tm_x), cm_x=m(state.cm_x),
+        pos=jnp.where(active, state.pos, 0),
+    )
+
+
+def prefill_chunk_init(cfg: ArchConfig, pack_cfg, capacity: int,
+                       *, prompt_len: int) -> RwkvState:
+    """Chunked-admission scratch: a zero B=1 state (the resume point)."""
+    del prompt_len
+    return alloc_state(cfg, 1)
+
+
+def prefill_chunk(params: dict, cfg: ArchConfig, pack_cfg,
+                  scratch: RwkvState, tokens: Array, *, n_ctx: int):
+    """One bounded chunk of an interleaved admission: advance the B=1 state
+    through ``tokens``. ``n_ctx`` is implied by the carried state (accepted
+    for cross-family signature uniformity); chunk boundaries must be
+    CHUNK_C-aligned for bit-exact composition — page sizes are."""
+    del n_ctx
+    return _forward_seq(params, cfg, tokens, scratch)
+
+
+def prefill_chunk_insert(cfg: ArchConfig, pack_cfg, capacity: int,
+                         cache: RwkvState, slot, scratch: RwkvState):
+    return insert_state_row(cache, slot, scratch)
 
 
 def decode_step(params: dict, cfg: ArchConfig, cache: RwkvState, token: Array,

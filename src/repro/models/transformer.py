@@ -31,6 +31,7 @@ from .layers import (
     mlp_apply,
     mlp_init,
     qkv_proj,
+    resume_attention,
     rmsnorm,
     rmsnorm_init,
 )
@@ -346,6 +347,150 @@ def prefill_into_slot_prefix(params: dict, cfg: ArchConfig,
                              n_shared=n_prefix // page,
                              shared_phys=prefix_phys)
     return logits, cache
+
+
+def prefill_chunk_init(cfg: ArchConfig, pack_cfg: PackKVConfig, capacity: int,
+                       *, prompt_len: int):
+    """Scratch for a chunked (interleaved) admission WITHOUT a prefix cache:
+    raw bf16 K/V accumulators sized to the full prompt, one per layer.
+
+    Chunks write their keys in place and attend over the whole scratch
+    through ``resume_attention`` (unwritten tokens are causally masked, so
+    their zeros never contribute); compression is DEFERRED to
+    ``prefill_chunk_insert`` so the calibration sees exactly the bytes the
+    monolithic ``prefill`` would — which is what makes chunked admission
+    bit-identical to the one-shot path on both policies.
+    """
+    z = jnp.zeros((cfg.n_layers, 1, cfg.n_kv_heads, prompt_len, cfg.hd),
+                  jnp.bfloat16)
+    return {"k": z, "v": z}
+
+
+def prefill_chunk(params: dict, cfg: ArchConfig, pack_cfg: PackKVConfig,
+                  scratch, tokens: Array, *, n_ctx: int):
+    """One bounded chunk of an interleaved admission. tokens: [1, Sc] at
+    absolute positions ``n_ctx + arange(Sc)`` (STATIC ``n_ctx``).
+
+    Returns (last-token logits [1, V], scratch with this chunk's K/V
+    written). Only the final chunk's logits are meaningful (they equal the
+    monolithic prefill's last-token logits)."""
+    h = params["embed"][tokens]
+    B, Sc, _ = h.shape
+    positions = n_ctx + jnp.arange(Sc)
+
+    def body(hh, xs):
+        layer_params, k_s, v_s = xs
+        hn = rmsnorm(hh, layer_params["ln1"])
+        q, k, v = qkv_proj(
+            layer_params["attn"], hn, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            positions, cfg.rope_theta, cfg.qk_norm, cfg.use_rope,
+        )
+        k_s = jax.lax.dynamic_update_slice_in_dim(
+            k_s, k.astype(k_s.dtype), n_ctx, axis=2)
+        v_s = jax.lax.dynamic_update_slice_in_dim(
+            v_s, v.astype(v_s.dtype), n_ctx, axis=2)
+        # attend over the written prefix only (a STATIC bound — n_ctx and
+        # Sc are trace constants): keys past n_ctx+Sc are unwritten zeros
+        # the causal mask would discard anyway, but slicing them off keeps
+        # the chunk's attention cost at Sc*(n_ctx+Sc) — the triangle the
+        # monolithic pass pays in one rectangle. Rounded up to the kv tile
+        # so resume_attention's chunking constraint holds for any length.
+        t_used = n_ctx + Sc
+        if t_used > 1024:
+            t_used = min(k_s.shape[2], -(-t_used // 1024) * 1024)
+        attn = resume_attention(q, k_s[:, :, :t_used], v_s[:, :, :t_used],
+                                n_ctx, causal=cfg.causal, window=cfg.window)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, Sc, cfg.n_heads * cfg.hd)
+        hh = hh + jnp.dot(attn.astype(hh.dtype), layer_params["attn"]["wo"])
+        m, _ = _apply_mlp(cfg, layer_params, rmsnorm(hh, layer_params["ln2"]))
+        return hh + m, (k_s, v_s)
+
+    h, (ks, vs) = jax.lax.scan(
+        body, h, (params["layers"], scratch["k"], scratch["v"])
+    )
+    h = rmsnorm(h[:, -1:], params["final_ln"])
+    logits = jnp.dot(h, params["head"])[:, 0].astype(jnp.float32)
+    return logits, {"k": ks, "v": vs}
+
+
+def prefill_chunk_insert(cfg: ArchConfig, pack_cfg: PackKVConfig,
+                         capacity: int, cache, slot, scratch):
+    """Finish a chunked admission: compress the accumulated raw prompt K/V
+    exactly as the monolithic ``prefill`` does (same ``prefill_cache`` call
+    over the same bytes -> identical calibration, identical tiers) and
+    scatter the row into ``slot``. Paged caches go through the same dense
+    mini-cache + ``insert_row_paged`` route as ``prefill_into_slot``."""
+    from ..core.cache import insert_row, insert_row_paged, paged_mini_spec
+
+    S = scratch["k"].shape[-2]
+    if pack_cfg.paged:
+        dense_cfg, cap_mini, n_pages = paged_mini_spec(pack_cfg, S)
+    else:
+        dense_cfg, cap_mini, n_pages = pack_cfg, capacity, None
+
+    def body(_, xs):
+        k, v = xs
+        cache_l = alloc_layer_cache(dense_cfg, 1, cfg.n_kv_heads, cfg.hd,
+                                    cap_mini)
+        return None, prefill_cache(cache_l, k, v)
+
+    _, row = jax.lax.scan(body, None, (scratch["k"], scratch["v"]))
+    if pack_cfg.paged:
+        return insert_row_paged(cache, slot, row, n_pages)
+    return insert_row(cache, slot, row)
+
+
+def prefix_chunk_bounds(pack_cfg: PackKVConfig, prompt_len: int,
+                        n_prefix: int) -> list[int]:
+    """Segment bounds of a prefix-cache admission (host-side): the EXACT
+    per-page segmentation ``prefill_into_slot_prefix`` traces, so running
+    the same segments one dispatch at a time reproduces its bytes."""
+    page = pack_cfg.page_size
+    Lb = (prompt_len // pack_cfg.block) * pack_cfg.block
+    Lp = (Lb // page) * page
+    bounds = list(range(n_prefix, Lp + 1, page))
+    if prompt_len > Lp:
+        bounds.append(prompt_len)
+    return bounds
+
+
+def prefix_chunk_init(cfg: ArchConfig, pack_cfg: PackKVConfig, capacity: int,
+                      cache, prefix_phys: Array, k_perm: Array, v_perm: Array,
+                      *, n_prefix: int, prompt_len: int):
+    """Mini-cache for an interleaved prefix-cache admission: the dense B=1
+    cache ``prefill_into_slot_prefix`` allocates, seeded with the matched
+    shared pages (and their donor calibration) when ``n_prefix > 0``."""
+    from ..core.cache import paged_mini_spec, seed_prefix_from_pages
+
+    dense_cfg, cap_mini, _ = paged_mini_spec(pack_cfg, prompt_len)
+    mini = alloc_cache(cfg, dense_cfg, 1, cap_mini)
+    if n_prefix:
+        mini = seed_prefix_from_pages(cache, mini, prefix_phys, n_prefix,
+                                      k_perm, v_perm)
+    return mini
+
+
+def prefix_chunk(params: dict, cfg: ArchConfig, pack_cfg: PackKVConfig,
+                 mini, tokens: Array, *, n_ctx: int):
+    """One page-aligned segment of an interleaved prefix-cache admission
+    (``_prefill_segment`` dispatched standalone — the mini-cache round-trips
+    host<->device between segments as concrete arrays, so splitting the
+    trace is value-preserving)."""
+    return _prefill_segment(params, cfg, pack_cfg, mini, tokens, n_ctx)
+
+
+def prefix_chunk_insert(pack_cfg: PackKVConfig, cache, slot, mini,
+                        prefix_phys: Array, *, n_prefix: int,
+                        prompt_len: int):
+    """Finish an interleaved prefix-cache admission: scatter the mini-cache
+    into freshly-popped pool pages, mapping the ``n_prefix`` shared tokens'
+    pages by reference (same call ``prefill_into_slot_prefix`` ends with)."""
+    from ..core.cache import insert_row_paged, paged_mini_spec
+
+    _, _, n_pages = paged_mini_spec(pack_cfg, prompt_len)
+    return insert_row_paged(cache, slot, mini, n_pages,
+                            n_shared=n_prefix // pack_cfg.page_size,
+                            shared_phys=prefix_phys)
 
 
 def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,

@@ -4,5 +4,4 @@ from .engine import (  # noqa: F401
     Request,
     SlotServer,
     SlotStats,
-    WaveServer,
 )

@@ -8,18 +8,22 @@ Build sequence (mirrors a production bring-up):
   2. COMPILE — jit prefill + decode with the calibrated PackKVConfig.
   3. SERVE — ``SlotServer`` runs a continuous-batching scheduler over a
      fixed slot table of ``max_batch`` rows. Every sequence owns one row of
-     the decode cache with its own ``n_comp``/``n_resid`` counters: a
-     queued request is admitted into any free slot by a jitted single-slot
-     prefill-insert (at its TRUE prompt length — no left-padding, so pad
-     tokens never pollute the cache), all occupied slots decode together
-     each step, and a row is recycled the moment its request finishes
-     (EOS / max_new) while the other rows keep decoding.
+     the decode state — per-row ``n_comp``/``n_resid`` counters for the KV
+     families, a batch row of the recurrent leaves for rwkv6/hybrid_rglru:
+     a queued request is admitted into a free slot at its TRUE prompt
+     length (no left-padding, so pad tokens never pollute cache or
+     recurrent state), all occupied slots decode together each step, and a
+     row is recycled the moment its request finishes (EOS / max_new) while
+     the other rows keep decoding.
 
-``WaveServer`` survives as a thin compatibility wrapper over the slot
-scheduler (same submit/run_wave surface); model families whose decode
-state cannot be row-recycled yet (rwkv6 / hybrid_rglru recurrent state)
-fall back to its legacy lock-step wave. See docs/serving.md for the slot
-table layout, admission policy and per-row counter plumbing, and
+EVERY family serves through this one engine (the old ``WaveServer``
+left-pad wave is gone). Admission is CHUNK-INTERLEAVED by default: instead
+of a monolithic prefill dispatch that stalls every occupied slot for the
+whole prompt, the scheduler advances the pending admission by at most
+``EngineConfig.prefill_chunk_pages`` pages' worth of tokens per step and
+runs a decode launch in the same cadence — no occupied slot ever waits
+longer than one bounded chunk for its next token. See docs/serving.md for
+the slot table layout, admission policy and per-row counter plumbing, and
 docs/architecture.md for the paged pool.
 
 Invariants the scheduler maintains (and the cache layer relies on):
@@ -64,6 +68,11 @@ class EngineConfig:
     bucket_unit: int = 256  # smallest bucket; power-of-two multiples up to capacity
     decode_chunk: int = 8  # decode steps per donated multi-step launch (1 = per-token)
     log_launches: bool = False  # keep per-launch telemetry (unbounded; bench only)
+    # chunked prefill/decode interleaving (see docs/serving.md):
+    prefill_chunk_pages: int = 1  # admission chunk budget, in pages of
+    #   ``page_size`` tokens per scheduler step (dense engines use the same
+    #   token unit). 0 = legacy monolithic prefill-insert: the whole prompt
+    #   in one dispatch, stalling every occupied slot for its duration.
     # paged compressed region (see docs/architecture.md):
     paged: bool = False  # page-pool storage + page-reservation admission
     page_size: int = 256  # tokens per physical page (power of two, >= block)
@@ -91,7 +100,8 @@ class Engine:
                 raise ValueError(
                     f"family {cfg.family!r} cannot serve --prefix-cache: its "
                     "recurrent decode state has no page-addressable KV pages "
-                    "to share (WaveServer-only family) — drop --prefix-cache"
+                    "to share — drop --prefix-cache (plain chunked admission "
+                    "still applies)"
                 )
             if not ecfg.paged:
                 raise ValueError(
@@ -105,10 +115,10 @@ class Engine:
                     "tokens break page-aligned prefix identity"
                 )
         if ecfg.paged:
-            if not self.api.supports_slots:
+            if not self.api.supports_paged:
                 raise ValueError(
-                    f"family {cfg.family!r} cannot serve paged (no slot ops; "
-                    "its recurrent decode state is not page-addressable)"
+                    f"family {cfg.family!r} cannot serve paged: its "
+                    "recurrent decode state is not page-addressable"
                 )
             if ecfg.capacity % ecfg.page_size:
                 raise ValueError(
@@ -140,16 +150,40 @@ class Engine:
             partial(self.api.decode_step, cfg=cfg, backend=ecfg.backend),
             static_argnames=("n_bucket",),
         )
-        if self.api.supports_slots:
-            from ..core.cache import mask_free_slots
+        # one compile per distinct prompt length; slot index is traced
+        self._insert = jax.jit(
+            partial(self.api.prefill_into_slot, cfg=cfg,
+                    pack_cfg=self.pack_cfg, capacity=ecfg.capacity)
+        )
+        self._reset = jax.jit(self.api.reset_slot)
+        self._mask_free = jax.jit(self.api.mask_free)
+        # chunked interleaved admission: one bounded prefill chunk per
+        # scheduler step (one compile per distinct (chunk length, offset))
+        self._chunk_step = jax.jit(
+            partial(self.api.prefill_chunk, cfg=cfg, pack_cfg=self.pack_cfg),
+            static_argnames=("n_ctx",),
+        )
+        self._chunk_insert = jax.jit(
+            partial(self.api.prefill_chunk_insert, cfg=cfg,
+                    pack_cfg=self.pack_cfg, capacity=ecfg.capacity)
+        )
 
-            # one compile per distinct prompt length; slot index is traced
-            self._insert = jax.jit(
-                partial(self.api.prefill_into_slot, cfg=cfg,
-                        pack_cfg=self.pack_cfg, capacity=ecfg.capacity)
+        def _chunk_final_fn(params, cache, slot, scratch, tokens, n_ctx):
+            logits, scratch = self.api.prefill_chunk(
+                params, scratch=scratch, tokens=tokens, n_ctx=n_ctx,
+                cfg=cfg, pack_cfg=self.pack_cfg
             )
-            self._reset = jax.jit(self.api.reset_slot)
-            self._mask_free = jax.jit(mask_free_slots)
+            cache = self.api.prefill_chunk_insert(
+                cache=cache, slot=slot, scratch=scratch,
+                cfg=cfg, pack_cfg=self.pack_cfg, capacity=ecfg.capacity
+            )
+            return logits, cache
+
+        # final chunk fused with the row insert: one dispatch instead of
+        # chunk_step + chunk_insert, and no scratch round-trip, on the last
+        # step of every multi-chunk admission
+        self._chunk_final = jax.jit(_chunk_final_fn,
+                                    static_argnames=("n_ctx",))
         if ecfg.prefix_cache:
             from ..core.cache import acquire_pages, release_pages
 
@@ -158,6 +192,22 @@ class Engine:
                 partial(self.api.prefill_prefix, cfg=cfg,
                         pack_cfg=self.pack_cfg, capacity=ecfg.capacity),
                 static_argnames=("n_prefix",),
+            )
+            # interleaved prefix admission: the same per-page segments,
+            # one dispatch each (mini-cache round-trips between them)
+            self._prefix_chunk_init = jax.jit(
+                partial(self.api.prefix_chunk_init, cfg=cfg,
+                        pack_cfg=self.pack_cfg, capacity=ecfg.capacity),
+                static_argnames=("n_prefix", "prompt_len"),
+            )
+            self._prefix_chunk = jax.jit(
+                partial(self.api.prefix_chunk, cfg=cfg,
+                        pack_cfg=self.pack_cfg),
+                static_argnames=("n_ctx",),
+            )
+            self._prefix_chunk_insert = jax.jit(
+                partial(self.api.prefix_chunk_insert, pack_cfg=self.pack_cfg),
+                static_argnames=("n_prefix", "prompt_len"),
             )
             # index pin/unpin ops take sentinel-padded fixed-length id
             # vectors, so each compiles exactly once
@@ -249,7 +299,9 @@ class Engine:
         size so every bucket is a whole number of pages and the gather /
         page-indexed kernels see page-aligned launches.
         """
-        if not self.ecfg.bucketed:
+        if not self.ecfg.bucketed or not self.api.supports_paged:
+            # recurrent families ignore n_bucket (O(1)/window-bounded
+            # state); None avoids one decode recompile per bucket value
             return None
         from ..core.cache import bucket_length
 
@@ -290,6 +342,80 @@ class Engine:
             n_prefix=len(pages) * self.ecfg.page_size,
         )
         return logits[0], cache
+
+    # -- chunked interleaved admission --------------------------------------
+    def chunk_tokens(self) -> int:
+        """Admission chunk budget in tokens (page-aligned)."""
+        return self.ecfg.prefill_chunk_pages * self.ecfg.page_size
+
+    def chunk_init(self, prompt_len: int):
+        """Fresh admission scratch for a ``prompt_len``-token prompt."""
+        return self.api.prefill_chunk_init(
+            self.cfg, self.pack_cfg, self.ecfg.capacity, prompt_len=prompt_len
+        )
+
+    def chunk_step(self, scratch, tokens: np.ndarray, n_ctx: int):
+        """One bounded prefill chunk at absolute offset ``n_ctx`` (STATIC).
+        Returns (last-token logits [V], scratch) — only the final chunk's
+        logits are meaningful."""
+        logits, scratch = self._chunk_step(
+            self.params, scratch=scratch,
+            tokens=jnp.asarray(np.asarray(tokens)[None], jnp.int32),
+            n_ctx=n_ctx,
+        )
+        return logits[0], scratch
+
+    def chunk_insert(self, cache, slot: int, scratch):
+        """Finish a chunked admission: build + scatter row ``slot``."""
+        return self._chunk_insert(
+            cache=cache, slot=jnp.int32(slot), scratch=scratch
+        )
+
+    def chunk_final(self, cache, slot: int, scratch, tokens: np.ndarray,
+                    n_ctx: int):
+        """Fused last chunk: prefill the final segment AND scatter the
+        finished row into slot ``slot``, one dispatch. Returns (last-token
+        logits [V], cache)."""
+        logits, cache = self._chunk_final(
+            self.params, cache, jnp.int32(slot), scratch,
+            jnp.asarray(np.asarray(tokens)[None], jnp.int32), n_ctx=n_ctx,
+        )
+        return logits[0], cache
+
+    def prefix_chunk_bounds(self, prompt_len: int, n_matched_pages: int):
+        """Host-side segment bounds for an interleaved prefix admission."""
+        return self.api.prefix_chunk_bounds(
+            self.pack_cfg, prompt_len, n_matched_pages * self.ecfg.page_size
+        )
+
+    def prefix_chunk_start(self, cache, prompt_len: int, pages, perms):
+        """Mini-cache seeded with the matched shared pages (prefix engines)."""
+        phys = jnp.asarray(np.asarray(pages, np.int64), jnp.int32)
+        kp, vp = perms if perms is not None else (self._dummy_perm,
+                                                  self._dummy_perm)
+        return self._prefix_chunk_init(
+            cache=cache, prefix_phys=phys, k_perm=kp, v_perm=vp,
+            n_prefix=len(pages) * self.ecfg.page_size, prompt_len=prompt_len,
+        )
+
+    def prefix_chunk_step(self, mini, tokens: np.ndarray, n_ctx: int):
+        """One page-aligned segment of an interleaved prefix admission."""
+        logits, mini = self._prefix_chunk(
+            self.params, mini=mini,
+            tokens=jnp.asarray(np.asarray(tokens)[None], jnp.int32),
+            n_ctx=n_ctx,
+        )
+        return logits[0], mini
+
+    def prefix_chunk_finish(self, cache, slot: int, mini, pages,
+                            prompt_len: int):
+        """Scatter the finished mini-cache into pool pages (shared prefix
+        pages mapped by reference)."""
+        phys = jnp.asarray(np.asarray(pages, np.int64), jnp.int32)
+        return self._prefix_chunk_insert(
+            cache=cache, slot=jnp.int32(slot), mini=mini, prefix_phys=phys,
+            n_prefix=len(pages) * self.ecfg.page_size, prompt_len=prompt_len,
+        )
 
     def _pad_ids(self, ids) -> Array:
         """Sentinel-pad page ids to the fixed per-slot table width so the
@@ -339,6 +465,11 @@ class Request:
     tokens: np.ndarray  # [S] prompt at its true length
     max_new: int
     output: np.ndarray | None = None
+    # latency telemetry (wall-clock seconds; filled by SlotServer):
+    t_submit: float = 0.0  # stamped by submit()
+    t_first: float | None = None  # first token ready (TTFT = t_first - t_submit)
+    token_times: list = dataclasses.field(default_factory=list)  # one per
+    #   token; tokens emitted by one multi-step launch share a timestamp
 
 
 @dataclasses.dataclass
@@ -362,6 +493,9 @@ class SlotStats:
     # paged admission telemetry (zeros for dense engines):
     admission_blocks: int = 0  # admissions deferred for lack of free pages
     pages_reserved_peak: int = 0  # max simultaneously-reserved pool pages
+    # chunked admission telemetry (zeros when prefill_chunk_pages == 0):
+    prefill_chunks: int = 0  # bounded prefill dispatches (single-chunk
+    # plain prompts take the fused monolithic launch and count zero)
     # prefix-cache telemetry (zeros when the feature is off):
     prefix_lookups: int = 0  # admissions that consulted the prefix index
     prefix_hits: int = 0  # admissions that matched >= 1 full page
@@ -507,17 +641,54 @@ class _Active:
         return len(self.req.tokens) + len(self.out) - 1
 
 
-class SlotServer:
-    """Continuous-batching scheduler over a fixed slot table.
+class _PrefillTask:
+    """An in-flight chunked admission: one request advancing through its
+    page-aligned prefill segments, interleaved with decode launches.
 
-    Each step: (1) ADMIT — pop queued requests into free slots via the
-    jitted single-slot prefill-insert; (2) DECODE — one batched greedy
-    decode step over the whole table (free rows ride along masked by their
-    zero counters); (3) RETIRE — rows that hit EOS or ``max_new`` record
-    their output, their slot counters are reset, and the slot is reusable
-    on the very next step. Per-request greedy outputs are bit-identical to
-    a batch-size-1 ``Engine.generate`` run (per-row cache state + per-row
-    RoPE positions + row-independent attention).
+    The slot is claimed (and its pages reserved) at task start but stays
+    ``None`` in the slot table until the final segment inserts the row —
+    decode launches in between see it as a free ride-along row."""
+
+    __slots__ = ("req", "slot", "kind", "scratch", "bounds", "idx",
+                 "match_pages", "match_perms", "logits")
+
+    def __init__(self, req: Request, slot: int, kind: str, scratch,
+                 bounds: list[int], match_pages: tuple[int, ...] = (),
+                 match_perms=None):
+        self.req = req
+        self.slot = slot
+        self.kind = kind  # "plain" | "prefix"
+        self.scratch = scratch  # raw-K/V scratch | seeded mini-cache
+        self.bounds = bounds  # segment offsets; [i, i+1) spans one dispatch
+        self.idx = 0  # next segment
+        self.match_pages = match_pages
+        self.match_perms = match_perms
+        self.logits = None  # last segment's logits seed decode
+
+    @property
+    def done(self) -> bool:
+        return self.idx >= len(self.bounds) - 1
+
+
+class SlotServer:
+    """Continuous-batching scheduler over a fixed slot table — ONE engine
+    for every family (KV transformers and recurrent rwkv6/hybrid_rglru).
+
+    Each step: (1) PREFILL CHUNK — advance the pending admission (FIFO
+    head) by at most ``prefill_chunk_pages`` pages' worth of prompt, the
+    final chunk inserting the finished row into its claimed slot;
+    (2) DECODE — one batched greedy decode launch over the whole table
+    (free rows ride along masked); (3) RETIRE — rows that hit EOS or
+    ``max_new`` record their output, their slot state is reset, and the
+    slot is reusable on the very next step. Because every scheduler step
+    runs a decode launch, no occupied slot ever stalls for more than one
+    bounded prefill chunk (the old monolithic admission stalled decode for
+    the WHOLE prompt). ``prefill_chunk_pages=0`` restores the monolithic
+    path. Per-request greedy outputs are bit-identical to a batch-size-1
+    ``Engine.generate`` run either way (per-row state + per-row positions +
+    row-independent attention; chunk boundaries are exact resume points —
+    see ``models.layers.resume_attention`` and the per-family
+    ``prefill_chunk`` docstrings).
 
     PAGED engines admit on FREE PAGES, not free slots: each admitted
     request reserves its worst-case page count (``ceil(min(capacity,
@@ -542,15 +713,11 @@ class SlotServer:
     """
 
     def __init__(self, engine: Engine, eos_id: int | None = None):
-        if not engine.api.supports_slots:
-            raise ValueError(
-                f"family {engine.cfg.family!r} has no slot ops "
-                "(recurrent decode state); use WaveServer's legacy path"
-            )
         if engine.cfg.input_mode != "tokens":
             raise ValueError(
                 f"input_mode {engine.cfg.input_mode!r} not servable per-slot "
-                "(Request carries tokens only); use WaveServer"
+                "(Request carries tokens only); batch such inputs through "
+                "Engine.generate"
             )
         self.engine = engine
         self.eos_id = eos_id
@@ -566,6 +733,7 @@ class SlotServer:
         self._index = (PrefixIndex(engine.ecfg.page_size)
                        if engine.ecfg.prefix_cache else None)
         self._slot_shared: dict[int, tuple[int, ...]] = {}  # slot -> mapped
+        self._task: _PrefillTask | None = None  # in-flight chunked admission
 
     # -- paged admission accounting ----------------------------------------
     @property
@@ -709,6 +877,7 @@ class SlotServer:
                     f"request {req.rid} needs {need} pages but the pool "
                     f"admits at most {total - ecfg.page_watermark}"
                 )
+        req.t_submit = time.perf_counter()
         self.queue.append(req)
 
     @property
@@ -772,18 +941,140 @@ class SlotServer:
                 logits, self.cache = self.engine.insert_request(
                     self.cache, i, req.tokens
                 )
-            tok = int(jnp.argmax(logits))
-            self.slots[i] = _Active(req, tok, self.eos_id)
-            self._last_tok[i] = tok
-            self.stats.admitted += 1
-            self.stats.tokens_out += 1
-            if self._ever_used[i]:
-                self.stats.slot_reuses += 1
-            self._ever_used[i] = True
+            self._activate(req, i, int(jnp.argmax(logits)))
             self._check_invariants()
             if self.slots[i].done:  # max_new == 1 or instant EOS
                 finished.append(self._retire(i))
         return finished
+
+    def _activate(self, req: Request, i: int, tok: int) -> None:
+        """Occupy slot ``i`` with ``req`` whose first token is ``tok``."""
+        self.slots[i] = _Active(req, tok, self.eos_id)
+        self._last_tok[i] = tok
+        now = time.perf_counter()
+        req.t_first = now
+        req.token_times.append(now)
+        self.stats.admitted += 1
+        self.stats.tokens_out += 1
+        if self._ever_used[i]:
+            self.stats.slot_reuses += 1
+        self._ever_used[i] = True
+
+    # -- chunked interleaved admission --------------------------------------
+    def _start_task(self, finished: list[Request]) -> _PrefillTask | None:
+        """Claim a slot (and pages) for the FIFO head and build its chunked
+        admission task; None while blocked (no free slot / no pages).
+
+        A plain prompt no longer than one chunk budget is admitted here
+        directly through the fused monolithic prefill+insert launch: the
+        bounded stall is the whole prefill either way, and one dispatch
+        beats chunk_step + chunk_insert. Such admissions complete within
+        this call (appending to ``finished`` on instant retirement) and
+        return None with no task outstanding."""
+        if not self.queue:
+            return None
+        try:
+            slot = self.slots.index(None)
+        except ValueError:
+            return None
+        head = self.queue[0]
+        match_pages: list[int] = []
+        match_perms = None
+        if self._index is not None and self.cache is not None:
+            match_pages, match_perms = self._match(head)
+        if self.engine.ecfg.paged:
+            need_new = self._pages_needed(head) - len(match_pages)
+            if need_new > self._pages_avail and \
+                    not self._evict_to_fit(need_new, set(match_pages)):
+                self.stats.admission_blocks += 1
+                return None
+        req = self.queue.popleft()
+        if self.cache is None:
+            self.cache = self.engine.alloc_slot_cache()
+        if self.engine.ecfg.paged:
+            self._reserved[slot] = self._pages_needed(req) - len(match_pages)
+            self.stats.pages_reserved_peak = max(
+                self.stats.pages_reserved_peak, sum(self._reserved.values())
+            )
+        S = len(req.tokens)
+        if self._index is not None:
+            self.stats.prefix_lookups += 1
+            if match_pages:
+                self.stats.prefix_hits += 1
+                self.stats.prefix_pages_shared += len(match_pages)
+            scratch = self.engine.prefix_chunk_start(
+                self.cache, S, match_pages, match_perms
+            )
+            bounds = self.engine.prefix_chunk_bounds(S, len(match_pages))
+            kind = "prefix"
+        else:
+            c = self.engine.chunk_tokens()
+            if S <= c:  # single-chunk prompt: fused fast path
+                logits, self.cache = self.engine.insert_request(
+                    self.cache, slot, req.tokens
+                )
+                self._activate(req, slot, int(jnp.argmax(logits)))
+                self._check_invariants()
+                if self.slots[slot].done:  # max_new == 1 or instant EOS
+                    finished.append(self._retire(slot))
+                return None
+            scratch = self.engine.chunk_init(S)
+            bounds = sorted(set(range(0, S, c)) | {S})
+            kind = "plain"
+        return _PrefillTask(req, slot, kind, scratch, bounds,
+                            tuple(int(p) for p in match_pages), match_perms)
+
+    def _advance_task(self, finished: list[Request]) -> None:
+        """One scheduler step's worth of admission progress: at most
+        ``prefill_chunk_pages`` pages of prefill, inserting + activating
+        the row when the last segment completes."""
+        if self._task is None:
+            self._task = self._start_task(finished)
+        t = self._task
+        if t is None:
+            return
+        # plain segments already span the full chunk budget; prefix
+        # segments are single pages (PR-5 trace), so batch them up to it
+        budget = 1 if t.kind == "plain" \
+            else max(1, self.engine.ecfg.prefill_chunk_pages)
+        for _ in range(budget):
+            if t.done:
+                break
+            s0, s1 = t.bounds[t.idx], t.bounds[t.idx + 1]
+            seg = t.req.tokens[s0:s1]
+            if t.kind == "plain":
+                if t.idx == len(t.bounds) - 2:  # last segment: fused insert
+                    t.logits, self.cache = self.engine.chunk_final(
+                        self.cache, t.slot, t.scratch, seg, s0
+                    )
+                    t.scratch = None
+                else:
+                    t.logits, t.scratch = self.engine.chunk_step(
+                        t.scratch, seg, s0
+                    )
+            else:
+                t.logits, t.scratch = self.engine.prefix_chunk_step(
+                    t.scratch, seg, s0
+                )
+            t.idx += 1
+            self.stats.prefill_chunks += 1
+        if t.done:
+            self._finish_task(t, finished)
+            self._task = None
+
+    def _finish_task(self, t: _PrefillTask, finished: list[Request]) -> None:
+        i = t.slot
+        if t.kind == "prefix":
+            self.cache = self.engine.prefix_chunk_finish(
+                self.cache, i, t.scratch, t.match_pages, len(t.req.tokens)
+            )
+            self._slot_shared[i] = t.match_pages
+            self._register(t.req, i)
+        # plain rows were already scattered by the fused final chunk
+        self._activate(t.req, i, int(jnp.argmax(t.logits)))
+        self._check_invariants()
+        if self.slots[i].done:  # max_new == 1 or instant EOS
+            finished.append(self._retire(i))
 
     def _chunk_plan(self) -> tuple[int, int | None]:
         """(n_steps, n_bucket) for the next decode launch.
@@ -809,14 +1100,20 @@ class SlotServer:
         ))
 
     def step(self) -> list[Request]:
-        """Admit + one decode launch + retire. Returns requests finished now.
+        """One bounded prefill chunk (or a monolithic admission sweep when
+        ``prefill_chunk_pages == 0``) + one decode launch + retire. Returns
+        requests finished now.
 
         One launch is a donated multi-step chunk (``decode_chunk`` > 1) or a
         single decode step; both mask attention to each row's own length and
         give per-request outputs bit-identical to B=1 ``Engine.generate``.
         """
         t0 = time.perf_counter()
-        finished = self._admit()
+        if self.engine.ecfg.prefill_chunk_pages > 0:
+            finished: list[Request] = []
+            self._advance_task(finished)
+        else:
+            finished = self._admit()
         if self.n_occupied:
             n_steps, n_bucket = self._chunk_plan()
             if self.engine.ecfg.decode_chunk > 1 and \
@@ -832,6 +1129,7 @@ class SlotServer:
         tok = jnp.asarray(self._last_tok[:, None])
         logits, self.cache = self.engine.decode(self.cache, tok, n_bucket)
         nxt = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+        now = time.perf_counter()
         self.stats.decode_steps += 1
         self.stats.chunk_launches += 1
         self._log_launch(1, n_bucket)
@@ -841,6 +1139,7 @@ class SlotServer:
             self.stats.occupied_slot_steps += 1
             t = int(nxt[i])
             act.out.append(t)
+            act.req.token_times.append(now)
             self._last_tok[i] = t
             self.stats.tokens_out += 1
             if (self.eos_id is not None and t == self.eos_id) or \
@@ -865,6 +1164,7 @@ class SlotServer:
             self.cache, jnp.asarray(self._last_tok[:, None]), active,
             n_steps, self.eos_id, n_bucket,
         )
+        now = time.perf_counter()
         self.stats.chunk_launches += 1
         self.stats.decode_steps += n_exec
         self.stats.occupied_slot_steps += n_exec * self.n_occupied
@@ -875,6 +1175,7 @@ class SlotServer:
             for s in range(n_exec):
                 t = int(toks[s, i])
                 act.out.append(t)
+                act.req.token_times.append(now)
                 self._last_tok[i] = t
                 self.stats.tokens_out += 1
                 if (self.eos_id is not None and t == self.eos_id) or \
@@ -890,61 +1191,6 @@ class SlotServer:
     def run(self) -> list[Request]:
         """Drain the queue and all slots; returns every finished request."""
         finished: list[Request] = []
-        while self.queue or self.n_occupied:
+        while self.queue or self.n_occupied or self._task is not None:
             finished.extend(self.step())
         return finished
-
-
-class WaveServer:
-    """Compatibility wrapper: groups queued requests into fixed-size waves
-    and serves each wave through the continuous ``SlotServer`` (each
-    request prefilled at its true length — the old left-pad path and its
-    pad-pollution are gone). Families without slot ops (recurrent decode
-    state) fall back to the legacy lock-step wave."""
-
-    def __init__(self, engine: Engine, pad_id: int = 0,
-                 eos_id: int | None = None):
-        self.engine = engine
-        self.pad_id = pad_id
-        self.queue: list[Request] = []
-        self.done: dict[int, Request] = {}
-        self._slots = (
-            SlotServer(engine, eos_id=eos_id)
-            if engine.api.supports_slots and engine.cfg.input_mode == "tokens"
-            else None
-        )
-
-    def submit(self, req: Request) -> None:
-        if req.max_new < 1:
-            raise ValueError(f"request {req.rid}: max_new must be >= 1")
-        self.queue.append(req)
-
-    def run_wave(self) -> list[Request]:
-        if not self.queue:
-            return []
-        B = self.engine.ecfg.max_batch
-        wave, self.queue = self.queue[:B], self.queue[B:]
-        if self._slots is not None:
-            for r in wave:
-                self._slots.submit(r)
-            self._slots.run()
-            for r in wave:
-                self.done[r.rid] = r
-            return wave
-        return self._legacy_wave(wave)
-
-    def _legacy_wave(self, wave: list[Request]) -> list[Request]:
-        """Lock-step wave for recurrent families: batched prefill (left-pad
-        to the wave's max prompt length) + shared decode loop. Known
-        limitation: left-pad tokens enter the recurrent state."""
-        S = max(len(r.tokens) for r in wave)
-        S = -(-S // 64) * 64  # block-align prompts
-        toks = np.full((len(wave), S), self.pad_id, np.int32)
-        for i, r in enumerate(wave):
-            toks[i, -len(r.tokens):] = r.tokens  # left-pad
-        max_new = max(r.max_new for r in wave)
-        out, _ = self.engine.generate({"tokens": jnp.asarray(toks)}, max_new)
-        for i, r in enumerate(wave):
-            r.output = out[i, : r.max_new]
-            self.done[r.rid] = r
-        return wave

@@ -1,0 +1,120 @@
+"""Recurrent families on the unified SlotServer (ISSUE 6).
+
+rwkv6 and hybrid_rglru decode through O(1) recurrent state, not a
+page-addressable KV cache — but they ride the SAME slot scheduler as the
+transformers: per-slot state insert/reset ops, per-row positions, free
+rows masked to zero after every ride-along decode.
+
+  * Slot outputs are BIT-IDENTICAL to batch-size-1 ``Engine.generate``:
+    admission prefills each prompt alone (B=1 chunks), so a short prompt
+    sharing the table with a long one sees NO padding — the left-pad
+    pollution the retired wave scheduler's batched prefill suffered from
+    (pads run through the recurrence like real tokens) cannot occur.
+  * Chunked admission composes the recurrence exactly: scheduler cuts are
+    multiples of ``prefill_chunk_pages * page_size`` (16-aligned), where
+    the chunked WKV / LRU scans are exact resume points.
+  * --prefix-cache and --paged still fail loudly at engine build: there
+    are no pages to share in a recurrent state.
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKES
+from repro.core.cache import PackKVConfig
+from repro.models import get_model
+from repro.serving import Engine, EngineConfig, Request, SlotServer
+
+FAMILIES = ["rwkv6-1.6b", "recurrentgemma-9b"]
+
+
+@pytest.fixture(scope="module", params=FAMILIES)
+def rec_engine(request):
+    cfg = SMOKES[request.param]
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    cap = cfg.window if cfg.window else 256
+    return Engine(cfg, params, PackKVConfig(policy="none", residual=96),
+                  EngineConfig(capacity=cap, max_batch=2, calibrate=False,
+                               page_size=64)), cfg
+
+
+def test_slot_server_matches_b1_generate(rec_engine, rng):
+    """Mixed-length requests (several prefill chunks each, co-resident
+    decodes, slot reuse) == per-request B=1 generate, bit for bit."""
+    eng, cfg = rec_engine
+    reqs = [
+        Request(rid=0, max_new=6, tokens=rng.integers(0, cfg.vocab, 150)),
+        Request(rid=1, max_new=9, tokens=rng.integers(0, cfg.vocab, 70)),
+        Request(rid=2, max_new=4, tokens=rng.integers(0, cfg.vocab, 200)),
+    ]
+    srv = SlotServer(eng)
+    for r in reqs:
+        srv.submit(r)
+    srv.run()
+    assert srv.stats.slot_reuses >= 1
+    assert srv.stats.prefill_chunks >= sum(
+        -(-len(r.tokens) // eng.chunk_tokens()) for r in reqs)
+    for r in reqs:
+        want, _ = eng.generate(
+            {"tokens": jnp.asarray(r.tokens[None], jnp.int32)}, r.max_new)
+        np.testing.assert_array_equal(srv.done[r.rid].output, want[0],
+                                      err_msg=f"rid {r.rid}")
+
+
+def test_no_left_pad_pollution(rec_engine, rng):
+    """Regression: a 10-token prompt admitted while a 190-token prompt
+    decodes in the other slot. A batched left-padded prefill would push
+    180 pad tokens through the short row's recurrence and corrupt it;
+    per-slot B=1 admission must reproduce the solo run exactly."""
+    eng, cfg = rec_engine
+    short = rng.integers(0, cfg.vocab, 10)
+    long = rng.integers(0, cfg.vocab, 190)
+    srv = SlotServer(eng)
+    srv.submit(Request(rid=0, max_new=12, tokens=long))
+    srv.submit(Request(rid=1, max_new=12, tokens=short))
+    srv.run()
+    for rid, toks in ((0, long), (1, short)):
+        want, _ = eng.generate(
+            {"tokens": jnp.asarray(toks[None], jnp.int32)}, 12)
+        np.testing.assert_array_equal(srv.done[rid].output, want[0],
+                                      err_msg=f"rid {rid}")
+
+
+def test_chunked_matches_monolithic(rec_engine, rng):
+    """prefill_chunk_pages=1 (64-token cuts, 16-aligned WKV/LRU resume
+    points) == the monolithic whole-prompt admission."""
+    eng, cfg = rec_engine
+    mono = Engine(cfg, eng.params, eng.pack_cfg,
+                  dataclasses.replace(eng.ecfg, prefill_chunk_pages=0))
+    mk = lambda: [Request(rid=i, max_new=5,
+                          tokens=rng.integers(0, cfg.vocab, n))
+                  for i, n in enumerate((130, 64, 33))]
+    st = rng.bit_generator.state
+    a = SlotServer(eng)
+    for r in mk():
+        a.submit(r)
+    a.run()
+    rng.bit_generator.state = st
+    b = SlotServer(mono)
+    for r in mk():
+        b.submit(r)
+    b.run()
+    assert a.stats.prefill_chunks > 0 and b.stats.prefill_chunks == 0
+    for rid in a.done:
+        np.testing.assert_array_equal(a.done[rid].output, b.done[rid].output)
+
+
+@pytest.mark.parametrize("name", FAMILIES)
+def test_paged_and_prefix_cache_rejected(name):
+    """No page-addressable KV -> both --paged and --prefix-cache fail at
+    engine build, before params are touched."""
+    cfg = SMOKES[name]
+    with pytest.raises(ValueError, match="prefix-cache"):
+        Engine(cfg, None, PackKVConfig(policy="none"),
+               EngineConfig(capacity=256, paged=True, prefix_cache=True))
+    with pytest.raises(ValueError, match="paged"):
+        Engine(cfg, None, PackKVConfig(policy="none"),
+               EngineConfig(capacity=256, paged=True))

@@ -9,7 +9,7 @@ import pytest
 from repro.configs import SMOKES
 from repro.core.cache import PackKVConfig
 from repro.models import get_model
-from repro.serving import Engine, EngineConfig, Request, SlotServer, WaveServer
+from repro.serving import Engine, EngineConfig, Request, SlotServer
 
 
 @pytest.fixture(scope="module")
@@ -53,19 +53,39 @@ def test_exact_policy_agrees_with_tight_compression(rng):
     assert (a == b).all(), (a, b)
 
 
-def test_wave_server(llama_engine, rng):
-    eng, cfg = llama_engine
-    srv = WaveServer(eng)
-    for rid in range(5):
-        srv.submit(Request(rid=rid, max_new=4,
-                           tokens=rng.integers(0, cfg.vocab, 50 + rid)))
-    n_waves = 0
-    while srv.queue:
-        srv.run_wave()
-        n_waves += 1
-    assert n_waves == 3  # 5 requests / batch 2
-    assert len(srv.done) == 5
-    assert all(r.output.shape == (4,) for r in srv.done.values())
+def test_chunked_admission_counts_and_stall_bound(llama_engine, rng):
+    """Chunked admission splits a long prompt into page-bounded segments
+    and never runs more than one prefill task at a time (bounded decode
+    stall); the legacy monolithic path (chunk budget 0) gives the same
+    greedy tokens."""
+    base, cfg = llama_engine
+    eng = Engine(cfg, base.params, base.pack_cfg,
+                 dataclasses.replace(base.ecfg, page_size=64,
+                                     calibrate=False))
+    page = eng.ecfg.page_size
+    reqs = lambda: [Request(rid=rid, max_new=4,
+                            tokens=rng.integers(0, cfg.vocab, 3 * page + 7))
+                    for rid in range(3)]
+    rng_state = rng.bit_generator.state
+    srv = SlotServer(eng)
+    for r in reqs():
+        srv.submit(r)
+    srv.run()
+    # 3*page+7 tokens at a 1-page budget -> 4 segments per request
+    assert srv.stats.prefill_chunks == 3 * 4
+
+    rng.bit_generator.state = rng_state
+    mono = SlotServer(
+        Engine(cfg, eng.params, eng.pack_cfg,
+               dataclasses.replace(eng.ecfg, prefill_chunk_pages=0,
+                                   calibrate=False)))
+    for r in reqs():
+        mono.submit(r)
+    mono.run()
+    assert mono.stats.prefill_chunks == 0
+    for rid in srv.done:
+        np.testing.assert_array_equal(srv.done[rid].output,
+                                      mono.done[rid].output)
 
 
 @pytest.mark.parametrize("policy", ["packkv", "none"])
@@ -132,7 +152,7 @@ def test_slot_server_eos_eviction(rng):
 def test_recurrent_families_reject_prefix_cache():
     """rwkv6 / rglru decode state has no page-addressable KV pages:
     --prefix-cache must fail loudly at engine build (the check fires before
-    params are touched), not be silently ignored by the WaveServer path."""
+    params are touched), not be silently ignored at admission time."""
     for name in ("rwkv6-1.6b", "recurrentgemma-9b"):
         cfg = SMOKES[name]
         with pytest.raises(ValueError, match="prefix-cache"):
@@ -148,4 +168,5 @@ def test_rglru_engine_windowed(rng):
     toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, 200)), jnp.int32)  # > window
     out, state = eng.generate({"tokens": toks}, max_new=4)
     assert out.shape == (1, 4)
-    assert int(state.pos) == 204
+    assert state.pos.shape == (1,)  # per-row positions (slot recycling)
+    assert int(state.pos[0]) == 204
