@@ -2,6 +2,7 @@
 
   PYTHONPATH=src python -m benchmarks.run            # all paper benchmarks
   PYTHONPATH=src python -m benchmarks.run --only fig13
+  PYTHONPATH=src python -m benchmarks.run --list     # suite names
 """
 from __future__ import annotations
 
@@ -19,6 +20,7 @@ from . import (
     bench_ragged,
     bench_repacking,
     bench_scaling,
+    bench_spec,
     bench_throughput,
     bench_turning_points,
     bench_v_compression,
@@ -38,13 +40,27 @@ BENCHES = {
     "beyond_ragged_length_aware": bench_ragged.main,
     "beyond_paged_pool": bench_paged.main,
     "beyond_prefix_cache": bench_prefix.main,
+    "beyond_spec_decode": bench_spec.main,
 }
 
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None)
+    ap.add_argument("--only", default=None,
+                    help="substring filter over suite names (see --list)")
+    ap.add_argument("--list", action="store_true",
+                    help="print registered suite names and exit")
     args = ap.parse_args()
+    if args.list:
+        for name in BENCHES:
+            print(name)
+        return 0
+    if args.only and not any(args.only in name for name in BENCHES):
+        print(f"--only {args.only!r} matches no registered suite; "
+              f"known suites:", file=sys.stderr)
+        for name in BENCHES:
+            print(f"  {name}", file=sys.stderr)
+        return 2
     results = {}
     for name, fn in BENCHES.items():
         if args.only and args.only not in name:

@@ -988,6 +988,59 @@ def append_token(
     return write(cache)
 
 
+def append_window(cache: LayerKVCache, k_new: Array, v_new: Array,
+                  lens: Array) -> LayerKVCache:
+    """Speculative verify-window append. k_new/v_new: [B, H, w, D];
+    lens: i32 [B] in [1, w] — row b's valid window length (seed + drafts).
+
+    Position 0 (the SEED — the row's last committed token) goes through the
+    real ``append_token``: it may flush a block, pop a page, and it
+    advances the counters, exactly like the stepwise decode it replaces.
+    Draft positions i = 1..w-1 are written into the residual buffer at
+    per-row offset ``n_resid + i - 1`` WITHOUT advancing any counter and
+    without ever flushing: draft bytes stay invisible to every masked read
+    until ``commit_window`` advances ``n_resid`` over the accepted prefix,
+    and a rejected draft needs no rollback at all — its slot is dead bytes
+    the next seed append overwrites. Callers must cap ``lens`` so
+    ``n_resid + lens - 1 <= cfg.residual`` AFTER the seed append (the
+    scheduler's residual-headroom cap): the window then never crosses a
+    compression flush or a page pop, which is what keeps mixed accept
+    lengths across the batch consistent with the ``[B]`` counters and the
+    page ledger. Writes are masked per position with ``i < lens``, so the
+    junk padding of rows with shorter windows touches nothing.
+    """
+    w = k_new.shape[-2]
+    cache = append_token(cache, k_new[..., :1, :], v_new[..., :1, :])
+    R = cache.cfg.residual
+    for i in range(1, w):
+        write = i < lens  # [B]
+        off = jnp.clip(cache.n_resid + (i - 1), 0, R - 1)
+        rk = row_update_tokens(cache.resid_k, k_new[..., i : i + 1, :], off)
+        rv = row_update_tokens(cache.resid_v, v_new[..., i : i + 1, :], off)
+        cache = dataclasses.replace(
+            cache,
+            resid_k=select_rows(write, rk, cache.resid_k),
+            resid_v=select_rows(write, rv, cache.resid_v),
+        )
+    return cache
+
+
+def commit_window(cache, n_accept: Array):
+    """Commit the accepted draft prefix of a verify window (see
+    ``append_window``): advance ``n_resid`` by ``n_accept`` (i32 [B], zero
+    for free or fully-rejected rows). Counters only — the accepted bytes
+    are already sitting at the right residual offsets, rejected drafts die
+    as dead bytes past ``n_resid``, and the compressed region / page
+    ledger were never touched by drafts, so ``n_comp`` and every page
+    refcount are conserved by construction. Works on flat [B] and stacked
+    [n_layers, B] counters (broadcasts).
+    """
+    return dataclasses.replace(
+        cache,
+        n_resid=cache.n_resid + jnp.asarray(n_accept, cache.n_resid.dtype),
+    )
+
+
 # ---------------------------------------------------------------------------
 # Per-slot lifecycle (continuous batching)
 # ---------------------------------------------------------------------------

@@ -10,6 +10,7 @@ Example:
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import jax
@@ -51,6 +52,16 @@ def main() -> int:
     ap.add_argument("--prefix-cache-pages", type=int, default=None,
                     help="max pool pages the prefix index may pin "
                     "(default unbounded; pool pressure still evicts LRU)")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="self-speculative decode: host n-gram drafting + "
+                    "batched k-token verify launches; greedy outputs stay "
+                    "bit-identical (docs/serving.md)")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="max drafted tokens per verify launch "
+                    "(window = k + 1)")
+    ap.add_argument("--stats-json", default=None, metavar="PATH",
+                    help="dump final SlotStats (incl. drafted/accepted "
+                    "counts and acceptance rate) as JSON to PATH")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -67,7 +78,8 @@ def main() -> int:
                         page_size=args.page_size, pool_pages=args.pool_pages,
                         prefix_cache=args.prefix_cache,
                         prefix_cache_pages=args.prefix_cache_pages,
-                        prefill_chunk_pages=args.prefill_chunk_pages)
+                        prefill_chunk_pages=args.prefill_chunk_pages,
+                        spec_decode=args.spec_decode, spec_k=args.spec_k)
     t0 = time.time()
     engine = Engine(cfg, params, pack, ecfg)
     print(f"engine built in {time.time() - t0:.1f}s; policy={args.policy}")
@@ -112,6 +124,14 @@ def main() -> int:
               f"(rate {s.prefix_hit_rate:.2f}), "
               f"{s.prefix_pages_shared} pages shared by reference, "
               f"{s.prefix_evictions} evictions")
+    if args.spec_decode:
+        print(f"speculative decode: {s.spec_launches} verify launches, "
+              f"{s.spec_accepted}/{s.spec_drafted} drafts accepted "
+              f"(rate {s.acceptance_rate:.2f})")
+    if args.stats_json:
+        with open(args.stats_json, "w") as f:
+            json.dump(s.to_json(), f, indent=2, default=float)
+        print(f"wrote {args.stats_json}")
 
     # cache memory report (the paper's deliverable). Byte counts are
     # static-shape-determined, so the allocated slot cache suffices — and

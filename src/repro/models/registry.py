@@ -58,6 +58,12 @@ class ModelApi:
     reset_slot: Optional[Callable] = None
     mask_free: Optional[Callable] = None
     decode_multi: Optional[Callable] = None
+    # Speculative verify (ISSUE 7): one batched forward over a q_len=w
+    # draft window against the paged compressed cache
+    # (transformer.verify_steps). None for the recurrent families — a
+    # recurrent state update is inherently sequential per token, so the
+    # Engine rejects --spec-decode for them with a clear error.
+    decode_verify: Optional[Callable] = None
     # Prefix-cache admission (PR 5): chunked prefill that maps a matched
     # page-aligned prompt prefix into the slot by reference and computes
     # only the suffix. None for families without page-addressable KV
@@ -116,6 +122,7 @@ def _transformer_api() -> ModelApi:
         reset_slot=transformer.reset_cache_slot,
         mask_free=mask_free_slots,
         decode_multi=transformer.decode_steps,
+        decode_verify=transformer.verify_steps,
         prefill_prefix=transformer.prefill_into_slot_prefix,
         prefill_chunk_init=transformer.prefill_chunk_init,
         prefill_chunk=transformer.prefill_chunk,

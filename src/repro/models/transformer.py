@@ -8,6 +8,7 @@ PackKV computation-aware decompression path per layer.
 """
 from __future__ import annotations
 
+import dataclasses
 from functools import partial
 
 import jax
@@ -574,6 +575,128 @@ def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,
     h = rmsnorm(h[:, -1:], params["final_ln"])
     logits = jnp.dot(h, params["head"])[:, 0].astype(jnp.float32)
     return logits, cache
+
+
+def verify_steps(params: dict, cfg: ArchConfig, cache, tokens: Array,
+                 lens: Array, active: Array, *, backend: str = "xla",
+                 n_bucket: int | None = None):
+    """Speculative verify: ONE batched forward over a q_len=w draft window,
+    with the acceptance decision and the commit fused in-graph.
+
+    tokens: [B, w] i32 — per row, the seed token (the row's last committed
+    token, exactly what ``decode_step`` would be fed) followed by w-1
+    drafted tokens; rows with shorter windows pad with junk. lens: i32 [B]
+    in [1, w] — seed + drafts valid per row (ragged windows share one
+    compiled program; junk positions compute garbage nobody reads).
+    active: bool [B] — occupied slots; free rows ride along and are
+    re-zeroed in-graph (``mask_free_slots``), exactly as ``decode_steps``
+    does per step.
+
+    Returns (hat [B, w] i32, n_accept [B] i32, cache): ``hat[b, i]`` is
+    the greedy argmax the stepwise ``decode_step`` would emit after
+    consuming window position i, and ``n_accept[b]`` the length of the
+    longest draft prefix those argmaxes confirm (draft i is accepted iff
+    it equals the greedy token after position i-1 — the standard
+    speculative-decoding rule, so the emitted stream ``hat[b, :n_accept+1]``
+    is exact for ARBITRARY draft content). The cache comes back already
+    committed (``core.cache.commit_window``) — one dispatch covers
+    verify + accept + commit + free-row masking, which is what keeps the
+    per-launch overhead at parity with a ``decode_steps`` chunk.
+
+    BITWISE identity with the stepwise path is by construction: the
+    seed appends through the real ``append_token`` (flush/page pop and all),
+    drafts land at the stepwise residual offsets via
+    ``core.cache.append_window`` (counters untouched), and window position
+    i attends through the SAME per-token attention kernel with
+    ``n_resid + i`` — the exact counter value stepwise step i sees after
+    its own append (``append_token`` appends BEFORE attending, so each
+    query attends to itself; ``n_comp`` is static after the seed's flush
+    because the headroom-capped window never flushes again). RoPE
+    positions are ``(n_comp + n_resid) + i`` read BEFORE the seed append —
+    flushes conserve the sum, so they equal the stepwise per-step
+    positions. The xla branches batch the w per-position kernels through
+    ``jax.vmap`` over the window axis — per-query arithmetic (dot
+    contractions, row-wise max/sum reductions) is unchanged, only stacked,
+    so the vmapped launch stays bit-identical to the unrolled one (the
+    verify-vs-stepwise tests pin this). Until the commit, draft bytes are
+    invisible to every masked read. The context-parallel decode path is
+    not reachable here (speculation is a single-device serving feature;
+    the Engine gates it).
+    """
+    from ..core.cache import (
+        append_window, commit_window, mask_free_slots, slice_compressed,
+    )
+
+    h = params["embed"][tokens] if cfg.input_mode != "frames" else tokens
+    B, w = tokens.shape
+    pos0 = cache.n_comp[0] + cache.n_resid[0]  # [B], pre-append totals
+    positions = pos0[:, None, None] + jnp.arange(w)[None, None, :]  # [B,1,w]
+    sm_scale = 1.0 / (cfg.hd ** 0.5)
+    offs = jnp.arange(w)
+
+    def body(hh, xs):
+        layer_params, cache_l = xs
+        hn = rmsnorm(hh, layer_params["ln1"])
+        q, k, v = qkv_proj(
+            layer_params["attn"], hn, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
+            positions, cfg.rope_theta, cfg.qk_norm, cfg.use_rope,
+        )
+        cache_l = append_window(cache_l, k, v, lens)
+        # q: [B, H, w, Dh]. The attention is UNROLLED per window position,
+        # each position invoking the exact per-token kernel decode_step
+        # uses — NOT vmapped/batched over w: a batched lowering changes the
+        # floating-point reduction order at ULP level, and any ULP drift in
+        # an accepted draft's attention output propagates into the K/V
+        # bytes written for deeper layers, silently diverging the cache
+        # from the stepwise path (a later launch's argmax then flips). The
+        # bulk matmuls (qkv / wo / MLP / head) ARE batched over w — their
+        # per-row contractions are byte-stable under batching (pinned by
+        # the verify-vs-stepwise and end-to-end exactness tests).
+        if cache_l.cfg.policy == "none":
+            read = slice_compressed(cache_l, n_bucket)
+            attn = jnp.stack([
+                dense_decode_attention(
+                    q[:, :, i], read.raw_k, read.raw_v, read.resid_k,
+                    read.resid_v, read.n_comp, read.n_resid + i, sm_scale,
+                ) for i in range(w)
+            ], axis=2)
+        elif cache_l.pages is not None and backend == "pallas":
+            from ..kernels import paged_decode_attention
+
+            attn = jnp.stack([
+                paged_decode_attention(
+                    q[:, :, i],
+                    dataclasses.replace(cache_l, n_resid=cache_l.n_resid + i),
+                    sm_scale, n_bucket=n_bucket, backend=backend,
+                ) for i in range(w)
+            ], axis=2)
+        else:
+            read = slice_compressed(cache_l, n_bucket)
+            attn = jnp.stack([
+                packed_decode_attention(
+                    q[:, :, i], read.k, read.v, read.resid_k, read.resid_v,
+                    read.n_comp, read.n_resid + i, sm_scale, backend=backend,
+                ) for i in range(w)
+            ], axis=2)
+        attn = attn.transpose(0, 2, 1, 3).reshape(B, w, cfg.n_heads * cfg.hd)
+        hh = hh + jnp.dot(attn.astype(hh.dtype), layer_params["attn"]["wo"])
+        m, _ = _apply_mlp(cfg, layer_params, rmsnorm(hh, layer_params["ln2"]))
+        hh = hh + m
+        return hh, cache_l
+
+    h, cache = jax.lax.scan(body, h, (params["layers"], cache))
+    h = rmsnorm(h, params["final_ln"])
+    logits = jnp.dot(h, params["head"]).astype(jnp.float32)  # [B, w, V]
+    hat = jnp.argmax(logits, -1).astype(jnp.int32)
+    # acceptance: leading run of drafts confirmed by the window argmaxes,
+    # clipped to each row's valid drafts (lens - 1; free rows have lens=1
+    # so their junk can never commit)
+    match = (hat[:, :-1] == tokens[:, 1:]) & \
+        (offs[None, :-1] < (lens - 1)[:, None])
+    n_accept = jnp.sum(jnp.cumprod(match.astype(jnp.int32), axis=1), axis=1)
+    cache = commit_window(cache, n_accept)
+    cache = mask_free_slots(cache, jnp.asarray(active, bool))
+    return hat, n_accept, cache
 
 
 def decode_steps(params: dict, cfg: ArchConfig, cache, token: Array,

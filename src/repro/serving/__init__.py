@@ -1,6 +1,7 @@
 from .engine import (  # noqa: F401
     Engine,
     EngineConfig,
+    NGramDrafter,
     Request,
     SlotServer,
     SlotStats,

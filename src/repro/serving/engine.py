@@ -68,6 +68,15 @@ class EngineConfig:
     bucket_unit: int = 256  # smallest bucket; power-of-two multiples up to capacity
     decode_chunk: int = 8  # decode steps per donated multi-step launch (1 = per-token)
     log_launches: bool = False  # keep per-launch telemetry (unbounded; bench only)
+    # self-speculative decode (see docs/performance.md):
+    spec_decode: bool = False  # n-gram drafting + batched k-token verify
+    spec_k: int = 4  # max drafted tokens per verify launch (window = k + 1)
+    spec_backoff: int = 32  # max per-slot draft cooldown (scheduler steps)
+    #   after fully-rejected launches: doubles 1, 2, .. spec_backoff while a
+    #   slot's drafts keep dying, so acceptance~0 traffic degrades to the
+    #   plain chunked-decode path instead of paying verify windows for one
+    #   token each. Any accepted draft resets the slot to eager drafting.
+    #   0 disables the backoff (every launch drafts when the table matches).
     # chunked prefill/decode interleaving (see docs/serving.md):
     prefill_chunk_pages: int = 1  # admission chunk budget, in pages of
     #   ``page_size`` tokens per scheduler step (dense engines use the same
@@ -217,6 +226,27 @@ class Engine:
                 jnp.arange(cfg.hd, dtype=jnp.int32),
                 (cfg.n_layers, cfg.n_kv_heads, cfg.hd),
             )
+        if ecfg.spec_decode:
+            if self.api.decode_verify is None:
+                raise ValueError(
+                    f"family {cfg.family!r} cannot serve --spec-decode: its "
+                    "recurrent state update is sequential per token, so "
+                    "there is no batched q_len=k verify pass to amortize "
+                    "the weights-read over — drop --spec-decode"
+                )
+            if ecfg.spec_k < 1:
+                raise ValueError(f"spec_k must be >= 1, got {ecfg.spec_k}")
+            # one batched forward over the q_len = spec_k + 1 draft window;
+            # fixed window width -> one compile per launch bucket, ragged
+            # per-row draft lengths ride through the ``lens`` mask. The
+            # acceptance rule, the counter-only commit of the accepted
+            # prefix, and free-row masking all run inside the same program
+            # (models/*.verify_steps), so one dispatch per spec step.
+            self._verify = jax.jit(
+                partial(self.api.decode_verify, cfg=cfg, backend=ecfg.backend),
+                static_argnames=("n_bucket",),
+                donate_argnames=("cache",),
+            )
         if self.api.decode_multi is not None:
             # donated multi-step decode: the chunk loop updates the cache
             # buffers in place (no per-token copy) and one dispatch covers
@@ -291,6 +321,26 @@ class Engine:
             n_bucket=n_bucket,
         )
         return np.asarray(toks), int(n_exec), cache
+
+    def decode_verify(self, cache, tokens: np.ndarray, lens: np.ndarray,
+                      active, n_bucket: int | None = None):
+        """One speculative verify launch (see models/*.verify_steps).
+
+        tokens: [B, w] i32 host array (seed + drafts, junk-padded); lens:
+        [B] valid window lengths; active: bool [B] occupied rows. The
+        ``cache`` argument is DONATED and comes back with the accepted
+        prefixes already committed and free rows re-zeroed. Returns
+        (hat np [B, w] — per-position greedy argmax, n_accept np [B],
+        cache)."""
+        hat, n_accept, cache = self._verify(
+            self.params,
+            cache=cache,
+            tokens=jnp.asarray(tokens, jnp.int32),
+            lens=jnp.asarray(lens, jnp.int32),
+            active=jnp.asarray(active, bool),
+            n_bucket=n_bucket,
+        )
+        return np.asarray(hat), np.asarray(n_accept), cache
 
     def bucket_for(self, n_max: int) -> int | None:
         """Launch bucket covering ``n_max`` compressed tokens (None = full).
@@ -501,11 +551,35 @@ class SlotStats:
     prefix_hits: int = 0  # admissions that matched >= 1 full page
     prefix_pages_shared: int = 0  # pages mapped by reference (cumulative)
     prefix_evictions: int = 0  # index entries dropped (pressure or cap)
+    # speculative-decode telemetry (zeros when spec_decode is off). With
+    # speculation on, ``decode_steps`` counts MODEL PASSES (verify launches
+    # included), not tokens — ``tokens_out`` stays the token truth:
+    spec_launches: int = 0  # verify dispatches (q_len = spec_k + 1)
+    spec_drafted: int = 0  # drafted tokens submitted for verification
+    spec_accepted: int = 0  # drafted tokens accepted (emitted for free)
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.spec_accepted / self.spec_drafted if self.spec_drafted \
+            else 0.0
 
     @property
     def prefix_hit_rate(self) -> float:
         return self.prefix_hits / self.prefix_lookups if self.prefix_lookups \
             else 0.0
+
+    def to_json(self) -> dict:
+        """JSON-serializable dump: every counter plus the derived rates
+        (the per-launch ``launches`` log is dropped — unbounded)."""
+        d = {f.name: getattr(self, f.name)
+             for f in dataclasses.fields(self) if f.name != "launches"}
+        d.update(
+            occupancy=self.occupancy,
+            decode_tok_s=self.decode_tok_s,
+            prefix_hit_rate=self.prefix_hit_rate,
+            acceptance_rate=self.acceptance_rate,
+        )
+        return d
 
     @property
     def occupancy(self) -> float:
@@ -617,6 +691,56 @@ class PrefixIndex:
         return best.page
 
 
+class NGramDrafter:
+    """Host-side per-slot suffix n-gram drafter (self-speculation).
+
+    No separate draft checkpoint: the draft distribution is the sequence
+    itself — per slot, keep prompt + emitted tokens and propose the
+    continuation of the most recent earlier occurrence of the current
+    suffix n-gram ("prompt lookup" drafting). Pure host state, O(n·L) list
+    scan per draft (L = slot sequence length, n <= max_ngram) — noise next
+    to a model pass. Draft quality only affects SPEED (acceptance rate);
+    the verify pass guarantees greedy outputs are exact for arbitrary
+    drafts, so a drafter can be swapped freely (benchmarks inject
+    adversarial ones).
+    """
+
+    def __init__(self, max_ngram: int = 3):
+        self.max_ngram = max_ngram
+        self._seq: dict[int, list[int]] = {}
+
+    def seed(self, slot: int, tokens) -> None:
+        """Start tracking ``slot``: prompt + first generated token."""
+        self._seq[slot] = [int(t) for t in tokens]
+
+    def extend(self, slot: int, tokens) -> None:
+        """Append the tokens a launch just emitted for ``slot``."""
+        self._seq[slot].extend(int(t) for t in tokens)
+
+    def drop(self, slot: int) -> None:
+        self._seq.pop(slot, None)
+
+    def draft(self, slot: int, k: int) -> list[int]:
+        """Up to ``k`` proposed continuations of ``slot``'s sequence.
+
+        Longest-suffix match first: for n = max_ngram..1, find the most
+        recent PRIOR occurrence of the sequence's last n tokens and
+        propose what followed it. Empty when nothing matches — the
+        scheduler then falls back to a plain decode launch, which is what
+        keeps the acceptance≈0 regime at baseline speed."""
+        seq = self._seq.get(slot)
+        if not seq or k <= 0:
+            return []
+        L = len(seq)
+        for n in range(min(self.max_ngram, L - 1), 0, -1):
+            key = seq[L - n:]
+            for s in range(L - n - 1, -1, -1):
+                if seq[s:s + n] == key:
+                    # s + n <= L - 1, so the continuation is never empty
+                    return seq[s + n:s + n + k]
+        return []
+
+
 class _Active:
     """One occupied slot: the request plus its generation state."""
 
@@ -712,7 +836,8 @@ class SlotServer:
     points.
     """
 
-    def __init__(self, engine: Engine, eos_id: int | None = None):
+    def __init__(self, engine: Engine, eos_id: int | None = None,
+                 drafter: NGramDrafter | None = None):
         if engine.cfg.input_mode != "tokens":
             raise ValueError(
                 f"input_mode {engine.cfg.input_mode!r} not servable per-slot "
@@ -721,6 +846,17 @@ class SlotServer:
             )
         self.engine = engine
         self.eos_id = eos_id
+        # speculative decode: per-slot drafter (injectable — draft quality
+        # only moves the acceptance rate, never the outputs)
+        self._drafter = (
+            (drafter if drafter is not None else NGramDrafter())
+            if engine.ecfg.spec_decode else None
+        )
+        # per-slot acceptance bookkeeping: fully-rejected launches push the
+        # slot into an exponentially growing draft cooldown (see
+        # EngineConfig.spec_backoff); any accepted draft resets it
+        self._spec_backoff = [0] * engine.ecfg.max_batch
+        self._spec_cooldown = [0] * engine.ecfg.max_batch
         self.n_slots = engine.ecfg.max_batch
         self.cache = None  # allocated on first admission
         self.slots: list[_Active | None] = [None] * self.n_slots
@@ -890,6 +1026,8 @@ class SlotServer:
         act.req.output = np.asarray(act.out, np.int32)
         self.done[act.req.rid] = act.req
         self.slots[i] = None
+        if self._drafter is not None:
+            self._drafter.drop(i)
         self.cache = self.engine.free_slot(self.cache, i)
         self._reserved.pop(i, None)  # paged: pages return with the reset
         self._slot_shared.pop(i, None)  # shared pages: ref back to the index
@@ -951,6 +1089,12 @@ class SlotServer:
         """Occupy slot ``i`` with ``req`` whose first token is ``tok``."""
         self.slots[i] = _Active(req, tok, self.eos_id)
         self._last_tok[i] = tok
+        self._spec_backoff[i] = 0
+        self._spec_cooldown[i] = 0
+        if self._drafter is not None:
+            # the drafter sees prompt + every generated token (the first
+            # token included: it is the next launch's seed)
+            self._drafter.seed(i, list(np.asarray(req.tokens)) + [tok])
         now = time.perf_counter()
         req.t_first = now
         req.token_times.append(now)
@@ -1115,14 +1259,22 @@ class SlotServer:
         else:
             finished = self._admit()
         if self.n_occupied:
-            n_steps, n_bucket = self._chunk_plan()
-            if self.engine.ecfg.decode_chunk > 1 and \
-                    self.engine._decode_multi is not None:
-                self._decode_chunk(n_steps, n_bucket, finished)
+            if self.engine.ecfg.spec_decode:
+                self._decode_spec(finished)
             else:
-                self._decode_single(n_bucket, finished)
+                self._decode_plain(finished)
         self.stats.wall_s += time.perf_counter() - t0
         return finished
+
+    def _decode_plain(self, finished: list[Request]) -> None:
+        """The non-speculative launch: donated multi-step chunk or a
+        single bucketed decode step."""
+        n_steps, n_bucket = self._chunk_plan()
+        if self.engine.ecfg.decode_chunk > 1 and \
+                self.engine._decode_multi is not None:
+            self._decode_chunk(n_steps, n_bucket, finished)
+        else:
+            self._decode_single(n_bucket, finished)
 
     def _decode_single(self, n_bucket: int | None, finished: list[Request]):
         """PR-2 style per-token launch (decode_chunk=1), optionally bucketed."""
@@ -1142,6 +1294,8 @@ class SlotServer:
             act.req.token_times.append(now)
             self._last_tok[i] = t
             self.stats.tokens_out += 1
+            if self._drafter is not None:
+                self._drafter.extend(i, (t,))
             if (self.eos_id is not None and t == self.eos_id) or \
                     len(act.out) >= act.req.max_new:
                 finished.append(self._retire(i))
@@ -1172,8 +1326,10 @@ class SlotServer:
         for i, act in enumerate(self.slots):
             if act is None:
                 continue
+            emitted = []
             for s in range(n_exec):
                 t = int(toks[s, i])
+                emitted.append(t)
                 act.out.append(t)
                 act.req.token_times.append(now)
                 self._last_tok[i] = t
@@ -1182,11 +1338,162 @@ class SlotServer:
                         len(act.out) >= act.req.max_new:
                     act.done = True
                     break  # tokens past EOS are junk
+            if self._drafter is not None:
+                self._drafter.extend(i, emitted)
             if act.done:
                 finished.append(self._retire(i))
         # no trailing mask_free here: decode_steps re-zeroes free-row
         # counters in-graph every iteration, and _retire resets the rows
         # freed just now, so the cache already satisfies the invariant
+
+    # -- speculative decode --------------------------------------------------
+    def _counters(self, act: _Active) -> tuple[int, int]:
+        """Host-mirrored (n_comp, n_resid) for an occupied slot — exact,
+        zero device syncs. The device counters are a deterministic function
+        of prompt length and cached-token count: prefill flushes every full
+        block (``n_comp = Lb``), then each cached decode token appends one
+        residual slot with a block flush whenever the residual hits R at
+        append start (paged rows stop flushing once the compressed region
+        is at capacity, exactly ``core.cache.append_token``'s guard)."""
+        pack = self.engine.pack_cfg
+        S = len(act.req.tokens)
+        lb = (S // pack.block) * pack.block
+        r = S - lb + len(act.out) - 1  # residual had no flush ever happened
+        f = 0
+        if r > pack.residual:  # flushes fire as soon as r crosses R
+            f = -(-(r - pack.residual) // pack.block)
+        if self.engine.ecfg.paged:
+            f = min(f, (self.engine.ecfg.capacity - lb) // pack.block)
+        return lb + f * pack.block, r - f * pack.block
+
+    def _plan_spec(self) -> tuple[np.ndarray, np.ndarray] | None:
+        """Per-row draft plan for one verify launch.
+
+        The window width is FIXED at ``spec_k + 1`` (one compiled program
+        per launch bucket); ragged per-row draft lengths ride through the
+        ``lens`` mask, junk-padded. Each row's draft is capped by (a) its
+        post-seed residual headroom — the verify window must never cross a
+        compression flush or page pop (``core.cache.append_window``) — and
+        (b) ``remaining - 1``, so accepted-prefix emission can never
+        overshoot ``max_new``. Rows in acceptance backoff (every draft of
+        their recent launches died) sit the launch out and their cooldown
+        ticks down. Returns None when no active row has a proposal: a
+        verify window would then be pure overhead, and the caller falls
+        back to the plain decode launch (this fallback plus the backoff is
+        what keeps the acceptance≈0 regime at baseline speed)."""
+        ecfg = self.engine.ecfg
+        pack = self.engine.pack_cfg
+        w = ecfg.spec_k + 1
+        toks = np.zeros((self.n_slots, w), np.int32)
+        lens = np.ones((self.n_slots,), np.int32)
+        any_draft = False
+        for i, act in enumerate(self.slots):
+            if act is None:
+                continue
+            toks[i, 0] = self._last_tok[i]
+            if self._spec_cooldown[i] > 0:
+                self._spec_cooldown[i] -= 1
+                continue
+            c, r = self._counters(act)
+            # simulate the seed append: the headroom cap is on POST-seed
+            # n_resid (drafts sit at n_resid + i - 1, i <= lens - 1 <= R)
+            if r >= pack.residual and (
+                    not ecfg.paged or c + pack.block <= ecfg.capacity):
+                r -= pack.block
+            r += 1
+            kb = min(ecfg.spec_k, pack.residual - r, act.remaining - 1)
+            if kb <= 0:
+                continue
+            d = self._drafter.draft(i, kb)
+            if not d:
+                continue
+            toks[i, 1:1 + len(d)] = d
+            lens[i] = 1 + len(d)
+            any_draft = True
+        return (toks, lens) if any_draft else None
+
+    def _decode_spec(self, finished: list[Request]) -> None:
+        """Speculative launch: per-slot n-gram drafts verified by ONE
+        batched q_len=w forward over the compressed paged cache; the
+        accepted prefix commits by counter advance, rejected drafts die as
+        dead bytes past ``n_resid``. Acceptance rule: draft i is accepted
+        iff it equals the greedy argmax after window position i-1 — so
+        every emitted token equals what stepwise decode would have emitted
+        (for ANY draft content), and per-request outputs stay
+        bit-identical to the plain path. Speculation only changes how many
+        tokens one model pass yields."""
+        plan = self._plan_spec()
+        if plan is None:
+            self._decode_plain(finished)
+            return
+        toks, lens = plan
+        w = toks.shape[1]
+        # TIGHT compressed-region bound: the headroom cap guarantees the
+        # window never flushes after the seed, so post-seed ``n_comp`` is
+        # known exactly on the host — the verify bucket only has to cover
+        # it (the plain chunk path can flush mid-chunk, so it must bound by
+        # total tokens; this tighter bound is speculation-only and is a
+        # real fraction of the verify win at long residuals)
+        n_comp_max = 1
+        for a in self.slots:
+            if a is None:
+                continue
+            c, r = self._counters(a)
+            if r >= self.engine.pack_cfg.residual and (
+                    not self.engine.ecfg.paged or
+                    c + self.engine.pack_cfg.block <= self.engine.ecfg.capacity):
+                c += self.engine.pack_cfg.block  # the seed append flushes
+            n_comp_max = max(n_comp_max, c)
+        n_bucket = self.engine.bucket_for(n_comp_max)
+        active = [s is not None for s in self.slots]
+        # one dispatch: verify + accept + commit + free-row masking (the
+        # commit lands in-graph BEFORE the retire resets below, so a
+        # retiring row's reset is never resurrected by a late commit)
+        hat, n_accept, self.cache = self.engine.decode_verify(
+            self.cache, toks, lens, active, n_bucket
+        )
+        now = time.perf_counter()
+        self.stats.decode_steps += 1
+        self.stats.chunk_launches += 1
+        self.stats.spec_launches += 1
+        self._log_launch(1, n_bucket)
+        for i, act in enumerate(self.slots):
+            if act is None:
+                continue
+            self.stats.occupied_slot_steps += 1
+            m = int(n_accept[i])  # accepted drafts (in-graph rule)
+            kb = int(lens[i]) - 1
+            self.stats.spec_drafted += kb
+            self.stats.spec_accepted += m
+            if kb > 0 and self.engine.ecfg.spec_backoff > 0:
+                if m == 0:
+                    # every draft died: exponential cooldown before this
+                    # slot may draft again (capped at ecfg.spec_backoff)
+                    self._spec_backoff[i] = min(
+                        max(1, self._spec_backoff[i] * 2),
+                        self.engine.ecfg.spec_backoff,
+                    )
+                    self._spec_cooldown[i] = self._spec_backoff[i]
+                else:
+                    self._spec_backoff[i] = 0
+            # emit the m accepted tokens plus the model's own next token
+            # (the correction when m < kb, the bonus token when m == kb)
+            emitted = []
+            for j in range(m + 1):
+                t = int(hat[i, j])
+                emitted.append(t)
+                act.out.append(t)
+                act.req.token_times.append(now)
+                self._last_tok[i] = t
+                self.stats.tokens_out += 1
+                if (self.eos_id is not None and t == self.eos_id) or \
+                        len(act.out) >= act.req.max_new:
+                    act.done = True
+                    break  # tokens past EOS are junk
+            self._drafter.extend(i, emitted)
+        for i, act in enumerate(self.slots):
+            if act is not None and act.done:
+                finished.append(self._retire(i))
 
     def run(self) -> list[Request]:
         """Drain the queue and all slots; returns every finished request."""

@@ -16,7 +16,12 @@ paged/dense × chunked/monolithic configurations):
     standing between the in-graph free-list and underflow).
   * Bounded stall — while any slot is occupied, every scheduler step runs
     EXACTLY one decode launch and at most one bounded prefill chunk: no
-    decoding request ever waits for a whole prompt.
+    decoding request ever waits for a whole prompt. A speculative verify
+    launch counts as the step's one decode launch.
+  * Speculation (ISSUE 7) — per verify launch, accepted <= drafted; every
+    request still finishes with EXACTLY ``max_new`` tokens (multi-token
+    emission never overshoots or double-counts), and every emitted token
+    equals the stub's greedy pick for its slot.
 
 The deterministic seeded sweep always runs; the hypothesis variant widens
 the search when hypothesis is installed (CI: requirements-dev.txt).
@@ -128,10 +133,38 @@ class _StubEngine:
             logits[i, (i + 1) % VOCAB] = 1.0
         return logits, cache
 
+    def decode_verify(self, cache, tokens, lens, active, n_bucket=None):
+        """Stub verify launch: the greedy pick of row i is the constant
+        (i + 1) % VOCAB at every window position, so a draft is accepted
+        iff it proposes exactly that — the same acceptance rule as
+        ``models.transformer.verify_steps``. Committing seed + accepted
+        advances the row's token count (and page pops) all at once."""
+        self.log.append(("decode", None))
+        B = self.ecfg.max_batch
+        hat = np.zeros((B, tokens.shape[1]), np.int32)
+        n_accept = np.zeros((B,), np.int32)
+        for i in range(B):
+            if not active[i] or not cache["toks"][i]:
+                continue
+            c = (i + 1) % VOCAB
+            hat[i, :] = c
+            m = 0
+            for j in range(int(lens[i]) - 1):
+                if int(tokens[i, 1 + j]) != c:
+                    break
+                m += 1
+            n_accept[i] = m
+            self.log.append(("verify", int(lens[i]) - 1, m))
+            before = self._pages_for(cache["toks"][i])
+            cache["toks"][i] += 1 + m
+            self._pop(cache, i, self._pages_for(cache["toks"][i]) - before)
+        return hat, n_accept, cache
 
-def _drive(rng, *, paged, chunk_pages):
+
+def _drive(rng, *, paged, chunk_pages, spec=False):
     """Run random traffic through SlotServer + stub; assert invariants
-    after every step against the pure-Python oracle."""
+    after every step against the pure-Python oracle. Returns the number of
+    verify launches (speculation cases assert the path was exercised)."""
     page = int(rng.choice([64, 128]))
     n_slots = int(rng.integers(1, 5))
     capacity = page * int(rng.integers(2, 5))
@@ -139,7 +172,9 @@ def _drive(rng, *, paged, chunk_pages):
             else max(2, int(rng.integers(2, n_slots * capacity // page + 1))))
     ecfg = EngineConfig(capacity=capacity, max_batch=n_slots, paged=paged,
                         page_size=page, pool_pages=pool, calibrate=False,
-                        prefill_chunk_pages=chunk_pages, decode_chunk=1)
+                        prefill_chunk_pages=chunk_pages, decode_chunk=1,
+                        spec_decode=spec, spec_k=int(rng.integers(1, 5)),
+                        spec_backoff=int(rng.choice([0, 1, 32])))
     eng = _StubEngine(ecfg, pool)
     srv = SlotServer(eng)
 
@@ -189,27 +224,48 @@ def _drive(rng, *, paged, chunk_pages):
             assert srv.cache["free"] + sum(srv.cache["rows"]) == pool
             assert srv.cache["free"] >= 0
 
-    # every submitted request completed with exactly max_new tokens
+    # every submitted request completed with exactly max_new tokens —
+    # multi-token speculative emission must not overshoot or double-count —
+    # and every token is the slot's constant greedy pick
     assert len(srv.done) == n_req
     for rid in range(n_req):
-        assert len(srv.done[rid].output) == srv.done[rid].max_new
+        out = srv.done[rid].output
+        assert len(out) == srv.done[rid].max_new
+        # token 0 is the prefill argmax (zero logits); every decoded token
+        # is the slot's constant greedy pick
+        assert len(set(out[1:])) <= 1, f"rid {rid} mixed tokens: {out}"
+    # speculation oracle: accepted <= drafted per verify launch, and the
+    # stats roll-up matches the launch log
+    verifies = [e for e in eng.log if e[0] == "verify"]
+    for _, drafted, accepted in verifies:
+        assert 0 <= accepted <= drafted
+    assert srv.stats.spec_drafted == sum(e[1] for e in verifies)
+    assert srv.stats.spec_accepted == sum(e[2] for e in verifies)
+    if not spec:
+        assert not verifies and srv.stats.spec_launches == 0
     # FIFO: rows were inserted in submit order. Chunked tasks log their
     # rid on the FIRST chunk (n_ctx == 0); monolithic inserts log theirs.
     order = [e[1] for e in eng.log
              if e[0] in ("insert", "chunk") and e[1] is not None]
     assert order == sorted(order), f"admission violated FIFO: {order}"
     assert order == list(range(n_req))
+    return len(verifies)
 
 
-CASES = [(False, 0), (False, 1), (True, 0), (True, 1), (True, 2)]
+CASES = [(False, 0, False), (False, 1, False), (True, 0, False),
+         (True, 1, False), (True, 2, False),
+         (False, 1, True), (True, 1, True), (True, 2, True)]
 
 
-@pytest.mark.parametrize("paged,chunk_pages", CASES)
-def test_scheduler_invariants_seeded(paged, chunk_pages):
+@pytest.mark.parametrize("paged,chunk_pages,spec", CASES)
+def test_scheduler_invariants_seeded(paged, chunk_pages, spec):
     """Deterministic sweep — runs everywhere, no hypothesis needed."""
+    n_verify = 0
     for seed in range(25):
-        _drive(np.random.default_rng(seed), paged=paged,
-               chunk_pages=chunk_pages)
+        n_verify += _drive(np.random.default_rng(seed), paged=paged,
+                           chunk_pages=chunk_pages, spec=spec)
+    if spec:  # the sweep must actually hit the verify path
+        assert n_verify > 0
 
 
 def test_scheduler_invariants_hypothesis():
@@ -220,10 +276,10 @@ def test_scheduler_invariants_hypothesis():
 
     @hyp.settings(max_examples=120, deadline=None,
                   suppress_health_check=list(hyp.HealthCheck))
-    @hyp.given(seed=st.integers(0, 2**31 - 1),
-               paged=st.booleans(), chunk_pages=st.integers(0, 3))
-    def prop(seed, paged, chunk_pages):
+    @hyp.given(seed=st.integers(0, 2**31 - 1), paged=st.booleans(),
+               chunk_pages=st.integers(0, 3), spec=st.booleans())
+    def prop(seed, paged, chunk_pages, spec):
         _drive(np.random.default_rng(seed), paged=paged,
-               chunk_pages=chunk_pages)
+               chunk_pages=chunk_pages, spec=spec)
 
     prop()

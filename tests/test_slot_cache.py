@@ -6,10 +6,14 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from conftest import ref_conserved
+
 from repro.core.cache import (
     PackKVConfig,
     alloc_layer_cache,
     append_token,
+    append_window,
+    commit_window,
     insert_prefill,
     prefill_cache,
     reset_slot,
@@ -115,3 +119,109 @@ def test_free_rows_do_not_leak(rng):
     # reset rows have zero valid tokens -> output exactly zero
     assert np.array_equal(got[0], np.zeros_like(got[0]))
     assert np.array_equal(got[2], np.zeros_like(got[2]))
+
+
+# ---------------------------------------------------------------------------
+# speculative verify window (ISSUE 7): append_window / commit_window
+# ---------------------------------------------------------------------------
+
+SCALE = (1.0, 0.5, 2.0)  # per-row content so rows can't alias
+
+
+def _win(rng, w):
+    """Batched [B, H, w, D] window + the per-row scaled views."""
+    k, v = _kv(rng, w)
+    return (jnp.concatenate([k * s for s in SCALE], axis=0),
+            jnp.concatenate([v * s for s in SCALE], axis=0), k, v)
+
+
+@pytest.mark.parametrize("policy", ["packkv", "none"])
+def test_verify_window_commit_matches_reference(rng, policy):
+    """Ragged window + partial commit: counters advance by exactly
+    1 + n_accept (the seed flush conserves the sum), the residual bytes and
+    attention match a B=1 reference that appended ONLY seed + accepted
+    tokens, and rejected drafts stay dead through continued decoding."""
+    cfg = PackKVConfig(policy=policy, residual=R)
+    step = jax.jit(append_token)
+    cache = alloc_layer_cache(cfg, B, H, D, CAP)
+    refs = {}
+    for i, n in enumerate((191, 131, 156)):  # residuals 63 / 3 / 28
+        k, v = _kv(rng, n)
+        cache = insert_prefill(cache, i, k, v)
+        refs[i] = prefill_cache(alloc_layer_cache(cfg, 1, H, D, CAP), k, v)
+    for _ in range(33):  # row 0 hits n_resid == R: the SEED append flushes
+        kt, vt = _kv(rng, 1)
+        cache = step(cache, jnp.concatenate([kt * s for s in SCALE], axis=0),
+                     jnp.concatenate([vt * s for s in SCALE], axis=0))
+        for i, s in enumerate(SCALE):
+            refs[i] = step(refs[i], kt * s, vt * s)
+
+    kw, vw, k1, v1 = _win(rng, 4)
+    lens = jnp.asarray([4, 1, 3])
+    n_accept = np.array([3, 0, 1])
+    c0 = np.asarray(cache.n_comp) + np.asarray(cache.n_resid)
+    cache = commit_window(append_window(cache, kw, vw, lens),
+                          jnp.asarray(n_accept))
+    c1 = np.asarray(cache.n_comp) + np.asarray(cache.n_resid)
+    np.testing.assert_array_equal(c1 - c0, 1 + n_accept)
+    for i, s in enumerate(SCALE):
+        for j in range(1 + n_accept[i]):
+            # eager, like append_window's internal seed append (a jitted
+            # flush could fuse differently at ULP level)
+            refs[i] = append_token(refs[i], k1[:, :, j:j + 1] * s,
+                                   v1[:, :, j:j + 1] * s)
+        assert int(cache.n_comp[i]) == int(refs[i].n_comp[0])
+        assert int(cache.n_resid[i]) == int(refs[i].n_resid[0])
+        r = int(cache.n_resid[i])
+        np.testing.assert_array_equal(cache.resid_k[i, :, :r],
+                                      refs[i].resid_k[0, :, :r])
+
+    # continued decode overwrites / keeps masking the rejected-draft bytes
+    for _ in range(40):
+        kt, vt = _kv(rng, 1)
+        cache = step(cache, jnp.concatenate([kt * s for s in SCALE], axis=0),
+                     jnp.concatenate([vt * s for s in SCALE], axis=0))
+        for i, s in enumerate(SCALE):
+            refs[i] = step(refs[i], kt * s, vt * s)
+    q = jnp.asarray(rng.normal(size=(B, H * 2, D)).astype(np.float32))
+    got = np.asarray(_attend(cfg, cache, q))
+    for i in refs:
+        want = np.asarray(_attend(cfg, refs[i], q[i:i + 1]))
+        np.testing.assert_array_equal(got[i], want[0])
+
+
+def test_verify_window_paged_refcounts(rng):
+    """Drafts never touch the page ledger: the pool state after a full
+    window equals the state after the seed append alone, and the commit
+    conserves every refcount and ``n_comp``."""
+    cfg = PackKVConfig(policy="packkv", residual=R, paged=True, page_size=64)
+    cache = alloc_layer_cache(cfg, B, H, D, CAP)
+    k, v = _kv(rng, 96)
+    cache = prefill_cache(
+        cache, jnp.concatenate([k * s for s in SCALE], axis=0),
+        jnp.concatenate([v * s for s in SCALE], axis=0))
+    step = jax.jit(append_token)
+    for _ in range(64):  # push every row to n_resid == R
+        kt, vt = _kv(rng, 1)
+        cache = step(cache, jnp.concatenate([kt * s for s in SCALE], axis=0),
+                     jnp.concatenate([vt * s for s in SCALE], axis=0))
+    assert (np.asarray(cache.n_resid) == R).all()
+
+    kw, vw, _, _ = _win(rng, 4)
+    seeded = append_token(cache, kw[..., :1, :], vw[..., :1, :])
+    windowed = append_window(cache, kw, vw, jnp.asarray([4, 1, 3]))
+    # the seed flush crossed a page boundary (non-trivial ledger traffic)
+    assert int(seeded.pages.n_free) < int(cache.pages.n_free)
+    for f in ("page_table", "free", "n_free", "ref"):
+        np.testing.assert_array_equal(getattr(windowed.pages, f),
+                                      getattr(seeded.pages, f), err_msg=f)
+
+    committed = commit_window(windowed, jnp.asarray([3, 0, 1]))
+    np.testing.assert_array_equal(committed.n_comp, windowed.n_comp)
+    np.testing.assert_array_equal(
+        np.asarray(committed.n_resid) - np.asarray(windowed.n_resid),
+        [3, 0, 1])
+    for f in ("page_table", "free", "n_free", "ref"):
+        np.testing.assert_array_equal(getattr(committed.pages, f),
+                                      getattr(windowed.pages, f), err_msg=f)
+    ref_conserved(committed.pages)

@@ -1,0 +1,227 @@
+"""Speculative verify window (ISSUE 7): bit-identity vs stepwise decode.
+
+``verify_steps`` runs ONE batched forward over a q_len=w draft window and
+must reproduce, per row and per valid position, exactly the argmax the
+stepwise ``decode_step`` loop produces when fed the same tokens — and the
+COMMITTED cache (seed + accepted prefix) must be BYTE-identical to the
+stepwise cache state, because accepted drafts' K/V bytes feed every later
+launch. This byte check is the regression guard for the batched-attention
+pitfall: vmapping the per-position attention over the window axis changes
+the floating-point reduction order at ULP level, which corrupts deeper
+layers' cached K/V for accepted drafts and flips a LATER launch's argmax
+(outputs match for dozens of tokens, then diverge) — so the window
+attention stays unrolled over the exact per-token kernels (see
+``models.transformer.verify_steps``).
+
+End-to-end: speculative serving produces bit-identical outputs to the
+non-speculative engine across {xla, pallas} × {packkv, none} ×
+{dense, paged, paged+prefix-cache}, under full, partial and zero
+acceptance.
+"""
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SMOKES
+from repro.core.cache import PackKVConfig
+from repro.models import get_model
+from repro.serving import Engine, EngineConfig, Request, SlotServer
+
+B, CAP, R = 3, 256, 96
+PLENS = (191, 131, 156)  # post-prefill residuals 63 / 3 / 28
+N_WARM = 33  # pushes row 0 to n_resid == R: the verify SEED append flushes
+PAGE = 128
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = SMOKES["llama2-7b"]
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# model-level: verify window vs stepwise, ragged lens, flush-adjacent row
+# ---------------------------------------------------------------------------
+
+
+def _warm(cfg, params, api, pack, step, rng):
+    """Ragged slot cache advanced N_WARM greedy steps; returns
+    (cache, last-token [B])."""
+    cache = api.alloc_cache(cfg, pack, B, CAP)
+    last = np.zeros((B,), np.int32)
+    for i, plen in enumerate(PLENS):
+        toks = jnp.asarray(rng.integers(0, cfg.vocab, (1, plen)), jnp.int32)
+        lg, cache = api.prefill_into_slot(
+            params, cfg, pack, CAP, cache, i, {"tokens": toks})
+        last[i] = int(np.argmax(np.asarray(lg[0])))
+    for _ in range(N_WARM):
+        lg, cache = step(params, cache=cache, token=jnp.asarray(last[:, None]))
+        last = np.argmax(np.asarray(lg), axis=-1).astype(np.int32)
+    return cache, last
+
+
+def _assert_row_equal(got, want, i):
+    """Row ``i`` of two stacked caches byte-equal over all LIVE state:
+    counters, compressed region (drafts never touch it), and the residual
+    buffer up to ``n_resid`` (rejected drafts die as dead bytes past it —
+    the stepwise reference never wrote those offsets, so they are excluded
+    rather than zeroed)."""
+    np.testing.assert_array_equal(got.n_comp[:, i], want.n_comp[:, i])
+    np.testing.assert_array_equal(got.n_resid[:, i], want.n_resid[:, i])
+    for name in ("k", "v", "raw_k", "raw_v"):
+        a, b = getattr(got, name), getattr(want, name)
+        if a is not None:
+            jax.tree.map(lambda x, y: np.testing.assert_array_equal(
+                x[:, i], y[:, i], err_msg=name), a, b)
+    r = int(got.n_resid[0, i])
+    np.testing.assert_array_equal(got.resid_k[:, i, :, :r],
+                                  want.resid_k[:, i, :, :r])
+    np.testing.assert_array_equal(got.resid_v[:, i, :, :r],
+                                  want.resid_v[:, i, :, :r])
+
+
+@pytest.mark.parametrize("policy", ["packkv", "none"])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+@pytest.mark.parametrize("w", [5, 2])
+def test_verify_window_matches_stepwise(rng, smoke_setup, policy, backend, w):
+    """Ragged window (full / k=1-or-none / partial acceptance per row, row 0
+    flushing at the seed): hat and the committed cache match the stepwise
+    decode_step loop fed the same tokens, bit for bit."""
+    cfg, params = smoke_setup
+    api = get_model(cfg)
+    pack = PackKVConfig(policy=policy, residual=R)
+    step = jax.jit(partial(api.decode_step, cfg=cfg, backend=backend))
+    verify = jax.jit(partial(api.decode_verify, cfg=cfg, backend=backend),
+                     static_argnames=("n_bucket",))
+    cache, seed = _warm(cfg, params, api, pack, step, rng)
+
+    # greedy chain from the warm state: chain[j] = argmax after j+1 steps
+    c, t, chain = cache, seed, []
+    for _ in range(w):
+        lg, c = step(params, cache=c, token=jnp.asarray(t[:, None]))
+        t = np.argmax(np.asarray(lg), axis=-1).astype(np.int32)
+        chain.append(t)
+    wrong = (np.stack(chain, 1) + 1) % cfg.vocab  # never the greedy pick
+
+    # row 0: every draft correct; row 1: first draft wrong (k=1 when w=2);
+    # row 2: one correct then wrong (w=2: seed-only, the k=0 ride-along)
+    toks = np.zeros((B, w), np.int32)
+    toks[:, 0] = seed
+    for j in range(w - 1):
+        toks[0, 1 + j] = chain[j][0]
+        toks[1, 1 + j] = wrong[1, j]
+        toks[2, 1 + j] = chain[j][2] if j == 0 else wrong[2, j]
+    lens = np.array([w, 2, min(4, w) if w > 2 else 1], np.int32)
+    want_accept = np.array([w - 1, 0, 1 if w > 2 else 0], np.int32)
+
+    # stepwise reference fed the SAME window tokens, snapshotting each step
+    ref_hat, snaps, c = np.zeros((B, w), np.int32), [], cache
+    for j in range(w):
+        lg, c = step(params, cache=c, token=jnp.asarray(toks[:, j:j + 1]))
+        ref_hat[:, j] = np.argmax(np.asarray(lg), axis=-1)
+        snaps.append(c)
+
+    hat, n_accept, committed = verify(
+        params, cache=cache, tokens=jnp.asarray(toks),
+        lens=jnp.asarray(lens), active=jnp.ones((B,), bool), n_bucket=None)
+    hat, n_accept = np.asarray(hat), np.asarray(n_accept)
+    np.testing.assert_array_equal(n_accept, want_accept)
+    for i in range(B):
+        np.testing.assert_array_equal(hat[i, :lens[i]], ref_hat[i, :lens[i]],
+                                      err_msg=f"row {i}")
+        _assert_row_equal(committed, snaps[int(n_accept[i])], i)
+
+
+# ---------------------------------------------------------------------------
+# engine-level: speculative outputs == plain outputs, whole matrix
+# ---------------------------------------------------------------------------
+
+
+class _CorruptReplay:
+    """Test drafter: replays the plain run's outputs but corrupts every 3rd
+    proposal, so verify launches deterministically exercise full accepts,
+    partial accepts, corrections and full rejections. Legitimate because
+    draft content only ever moves the acceptance rate (``NGramDrafter``)."""
+
+    def __init__(self, ref: dict, vocab: int):
+        self._ref = ref  # {tuple(prompt): plain-run output tokens}
+        self._vocab = vocab
+        self._pos: dict[int, list] = {}
+
+    def seed(self, slot, tokens):
+        toks = [int(t) for t in tokens]
+        self._pos[slot] = [self._ref.get(tuple(toks[:-1]), []), 1]
+
+    def extend(self, slot, tokens):
+        self._pos[slot][1] += len(tuple(tokens))
+
+    def drop(self, slot):
+        self._pos.pop(slot, None)
+
+    def draft(self, slot, k):
+        stream, cur = self._pos[slot]
+        return [(t + 1) % self._vocab if (cur + j) % 3 == 0 else int(t)
+                for j, t in enumerate(stream[cur:cur + k])]
+
+
+def _reqs(vocab):
+    r = np.random.default_rng(5)
+    shared = r.integers(0, vocab, PAGE)  # one full page for the prefix index
+    mk = lambda rid, n, mn: Request(
+        rid=rid, max_new=mn,
+        tokens=np.concatenate([shared, r.integers(0, vocab, n)]))
+    return [mk(0, 70, 10), mk(1, 40, 8), mk(2, 100, 12)]
+
+
+def _serve(eng, reqs, drafter=None):
+    srv = SlotServer(eng, drafter=drafter)
+    for r in reqs:
+        srv.submit(r)
+    srv.run()
+    return srv
+
+
+MATRIX = [(p, b, m) for p in ("packkv", "none") for b in ("xla", "pallas")
+          for m in ("dense", "paged", "prefix")]
+
+
+@pytest.mark.parametrize("policy,backend,mode", MATRIX)
+def test_spec_outputs_match_plain(smoke_setup, policy, backend, mode):
+    cfg, params = smoke_setup
+    paged = mode != "dense"
+    ecfg = EngineConfig(capacity=512, max_batch=2, calib_tokens=128,
+                        decode_chunk=4, bucketed=True, bucket_unit=64,
+                        backend=backend, paged=paged, page_size=PAGE,
+                        prefix_cache=(mode == "prefix"),
+                        debug_invariants=paged)
+    plain = Engine(cfg, params, PackKVConfig(policy=policy), ecfg)
+    spec = Engine(cfg, params, plain.pack_cfg,
+                  dataclasses.replace(ecfg, calibrate=False, spec_decode=True,
+                                      spec_k=3, spec_backoff=0))
+    a = _serve(plain, _reqs(cfg.vocab))
+    assert a.stats.spec_launches == 0  # flag off: exactly the PR-6 path
+    ref = {tuple(int(t) for t in r.tokens): a.done[r.rid].output
+           for r in _reqs(cfg.vocab)}
+    b = _serve(spec, _reqs(cfg.vocab),
+               drafter=_CorruptReplay(ref, cfg.vocab))
+    assert b.stats.spec_launches > 0 and b.stats.spec_drafted > 0
+    assert 0 < b.stats.spec_accepted <= b.stats.spec_drafted
+    for rid in a.done:
+        np.testing.assert_array_equal(a.done[rid].output, b.done[rid].output,
+                                      err_msg=f"rid {rid}")
+
+
+def test_spec_rejected_for_recurrent_families(smoke_setup):
+    """Families without page-addressable KV decode one token per state
+    update; the engine refuses --spec-decode for them up front."""
+    cfg = SMOKES["rwkv6-1.6b"]
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="spec"):
+        Engine(cfg, params, PackKVConfig(policy="none"),
+               EngineConfig(capacity=256, max_batch=2, calibrate=False,
+                            spec_decode=True))
