@@ -1,0 +1,163 @@
+"""Priority preemption under a low-priority flood (ISSUE 8).
+
+The hostile-traffic shape preemption exists for: a steady flood of long
+class-1 requests keeps every slot busy, then a handful of short class-0
+requests arrive mid-flood. Served twice over identical weights on the
+paged pool:
+
+  * FIFO BASELINE: ``preempt`` off, every request the same class — the
+    late class-0 arrivals wait for a flood request to drain before they
+    see a slot, so their TTFT is a whole low-priority decode tail.
+  * PREEMPT: ``--preempt`` — the blocked class-0 admission swaps a
+    class-1 victim's compressed pages out to host RAM, serves, and the
+    victim resumes from its evacuated bytes.
+
+Reported per policy: p99 TTFT of the class-0 arrivals (the acceptance
+bar is >= 2x better than FIFO), the preemption count (must be > 0 or the
+run measured nothing), aggregate delivered tok/s (the bar is within 10%
+of the non-preemptive run — swap traffic must not tank throughput), and
+per-request output equality across the two runs (a resumed victim must
+reproduce its uninterrupted output bit-for-bit; the per-config matrix
+lives in tests/test_preempt.py). Results land in BENCH_preempt.json (CI
+uploads it as an artifact).
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import SMOKES
+from repro.core.cache import PackKVConfig
+from repro.models import get_model
+from repro.serving import Engine, EngineConfig, Request, SlotServer
+
+CAPACITY = 512
+PAGE = 128
+MAX_BATCH = 4
+FLOOD_PROMPT = 120  # single-page: one fused admission per step, so the
+#                     flood saturates every slot before the class-0 burst
+FLOOD_MAX_NEW = 80  # long enough that the handful of swap round-trips
+#                     amortize: the tok/s parity bar is a 10% band
+N_FLOOD = 10
+HI_PROMPT = 100
+HI_MAX_NEW = 8
+N_HI = 3
+HI_AFTER_STEPS = 6
+TRIALS = 3          # timed trials, medians reported (shared runners drift)
+
+
+def make_requests(vocab: int, classes: bool, seed: int = 0):
+    """(flood, high-priority burst). With ``classes`` off, everything is
+    class 0 — arrival-order FIFO, the baseline."""
+    rng = np.random.default_rng(seed)
+    flood = [Request(rid=rid, max_new=FLOOD_MAX_NEW,
+                     priority=1 if classes else 0,
+                     tokens=rng.integers(0, vocab, FLOOD_PROMPT - 16 * (rid % 3)))
+             for rid in range(N_FLOOD)]
+    his = [Request(rid=N_FLOOD + i, max_new=HI_MAX_NEW, priority=0,
+                   tokens=rng.integers(0, vocab, HI_PROMPT + 8 * i))
+           for i in range(N_HI)]
+    return flood, his
+
+
+def serve(eng: Engine, flood: list[Request], his: list[Request]) -> dict:
+    """Drive the scheduler step-by-step: the flood is queued up front, the
+    class-0 burst lands after ``HI_AFTER_STEPS`` steps (deterministic in
+    scheduler steps, not wall clock, so both engines see one arrival
+    order)."""
+    srv = SlotServer(eng)
+    for r in flood:
+        srv.submit(r)
+    burst = list(his)
+    n = 0
+    t0 = time.perf_counter()
+    while srv.queue or srv.n_occupied or srv._task is not None or burst:
+        if n == HI_AFTER_STEPS and burst:
+            for r in burst:
+                srv.submit(r)
+            burst = []
+        srv.step()
+        n += 1
+    wall = time.perf_counter() - t0
+    s = srv.stats
+    hi_ttft = [(srv.done[r.rid].t_first - srv.done[r.rid].t_submit) * 1e3
+               for r in his]
+    return {
+        "hi_ttft_p99_ms": float(np.percentile(hi_ttft, 99)),
+        "hi_ttft_ms": hi_ttft,
+        "tok_s": s.tokens_out / wall,
+        "wall_s": wall,
+        "preemptions": s.preemptions,
+        "swapped_pages": s.swapped_pages,
+        "restored_pages": s.restored_pages,
+        "outputs": {rid: r.output for rid, r in srv.done.items()},
+    }
+
+
+def main() -> bool:
+    cfg = SMOKES["llama2-7b"]
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    print(f"\n[ISSUE 8] preemption: {N_FLOOD} class-1 requests "
+          f"(~{FLOOD_PROMPT}-token prompts, {FLOOD_MAX_NEW} new) flooding "
+          f"{MAX_BATCH} slots; {N_HI} class-0 arrivals after "
+          f"{HI_AFTER_STEPS} steps")
+    results = {"capacity": CAPACITY, "page_size": PAGE,
+               "max_batch": MAX_BATCH, "n_flood": N_FLOOD, "n_hi": N_HI}
+    ok = True
+    for policy in ("packkv", "none"):
+        mk = lambda preempt: Engine(
+            cfg, params, PackKVConfig(policy=policy),
+            EngineConfig(capacity=CAPACITY, max_batch=MAX_BATCH,
+                         calib_tokens=128, bucketed=True, bucket_unit=PAGE,
+                         decode_chunk=4, paged=True, page_size=PAGE,
+                         preempt=preempt),
+        )
+        fifo_eng, pre_eng = mk(False), mk(True)
+        # warmup: compile every admission/decode/evacuate variant off the clock
+        serve(fifo_eng, *make_requests(cfg.vocab, classes=False, seed=1))
+        serve(pre_eng, *make_requests(cfg.vocab, classes=True, seed=1))
+
+        fifo_runs = [serve(fifo_eng, *make_requests(cfg.vocab, classes=False))
+                     for _ in range(TRIALS)]
+        pre_runs = [serve(pre_eng, *make_requests(cfg.vocab, classes=True))
+                    for _ in range(TRIALS)]
+        med = lambda runs, k: float(np.median([r[k] for r in runs]))
+        fifo_p99 = med(fifo_runs, "hi_ttft_p99_ms")
+        pre_p99 = med(pre_runs, "hi_ttft_p99_ms")
+        speedup = fifo_p99 / pre_p99
+        tok_ratio = med(pre_runs, "tok_s") / med(fifo_runs, "tok_s")
+        n_preempt = int(np.median([r["preemptions"] for r in pre_runs]))
+        # resumed == uninterrupted: every request's output must be
+        # bit-identical whether or not it was swapped out along the way
+        exact = all(
+            np.array_equal(pre_runs[0]["outputs"][rid], out)
+            for rid, out in fifo_runs[0]["outputs"].items()
+        )
+        print(f"  {policy:7s} class-0 p99 TTFT: FIFO {fifo_p99:8.1f} ms   "
+              f"preempt {pre_p99:8.1f} ms -> {speedup:.2f}x "
+              f"({n_preempt} preemptions, tok/s ratio {tok_ratio:.2f}); "
+              f"resumed==uninterrupted exact: {exact}")
+        results[policy] = {
+            "fifo": {k: v for k, v in fifo_runs[0].items() if k != "outputs"}
+            | {"hi_ttft_p99_ms": fifo_p99},
+            "preempt": {k: v for k, v in pre_runs[0].items() if k != "outputs"}
+            | {"hi_ttft_p99_ms": pre_p99, "preemptions": n_preempt},
+            "ttft_speedup": speedup,
+            "tok_s_ratio": tok_ratio,
+            "resumed_eq_uninterrupted": exact,
+        }
+        ok = ok and exact and n_preempt > 0 and speedup >= 2.0 \
+            and tok_ratio >= 0.9
+    with open("BENCH_preempt.json", "w") as f:
+        json.dump(results, f, indent=2, default=float)
+    print(f"preemption >=2x class-0 p99 TTFT, tok/s within 10%, "
+          f"resumed==uninterrupted: {ok}")
+    print("wrote BENCH_preempt.json")
+    return bool(ok)
+
+
+if __name__ == "__main__":
+    main()

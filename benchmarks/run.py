@@ -16,6 +16,7 @@ from . import (
     bench_k_compression,
     bench_pack_size,
     bench_paged,
+    bench_preempt,
     bench_prefix,
     bench_ragged,
     bench_repacking,
@@ -41,6 +42,7 @@ BENCHES = {
     "beyond_paged_pool": bench_paged.main,
     "beyond_prefix_cache": bench_prefix.main,
     "beyond_spec_decode": bench_spec.main,
+    "beyond_preemption": bench_preempt.main,
 }
 
 

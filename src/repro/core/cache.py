@@ -1405,3 +1405,253 @@ def prefill_append(cache: LayerKVCache, k: Array, v: Array,
     return dataclasses.replace(
         new, n_comp=new.n_comp + Lb, n_resid=new.n_resid + rem
     )
+
+
+# ---------------------------------------------------------------------------
+# Preemption: compressed swap-out / swap-in (serving's SwapStore lives here
+# because the evacuation format IS the cache layout — a dense B=1 mini-row)
+# ---------------------------------------------------------------------------
+
+
+def evacuate_row(cache, slot, n_pages: int = 0, n_shared: int = 0):
+    """Evacuate row ``slot`` into a dense batch-1 mini-cache and FREE the row.
+
+    The inverse-direction twin of the admission scatter: where
+    ``insert_row_paged`` compresses through a dense mini and scatters it
+    into pool pages, evacuation gathers the row's live pages back into a
+    dense mini whose bytes a later ``restore_row`` scatters into fresh
+    pages — placement-independent, so the restored row reads bit-identical.
+
+    ``n_pages`` (STATIC) must equal the row's live page count
+    ``ceil(n_comp / page_size)`` — the scheduler knows it exactly on the
+    host (``SlotServer._counters``). ``n_shared`` leading pages are a
+    prefix mapped by reference (shared-prefix admission): their BYTES are
+    NOT copied — the row's reference is simply released (the prefix index
+    still pins them) and ``restore_row`` re-maps the same physical ids.
+    The mini therefore holds only the ``n_pages - n_shared`` suffix pages,
+    plus the row's residual buffer, counters (FULL-row values, shared
+    prefix included) and channel calibration.
+
+    Dense caches (``pages is None``) evacuate the whole row slice
+    (``n_pages``/``n_shared`` ignored). Returns ``(cache, mini)`` where
+    ``cache`` has the slot's pages released and counters zeroed (exactly a
+    ``reset_slot``) and ``mini`` is host-transportable (``jax.device_get``
+    it into a ``SwapStore``). Works on flat and stacked caches; ``slot``
+    may be traced.
+    """
+    if cache.pages is None:
+        return _evacuate_row_dense(cache, slot)
+    if cache.n_comp.ndim == 2:  # stacked: identical op per layer
+        return jax.vmap(
+            lambda c: _evacuate_row_paged(c, slot, n_pages, n_shared)
+        )(cache)
+    return _evacuate_row_paged(cache, slot, n_pages, n_shared)
+
+
+def _evacuate_row_dense(cache, slot):
+    lead = cache.n_comp.ndim - 1  # 0 flat, 1 stacked
+    sl = jnp.asarray(slot, jnp.int32)
+    mini = jax.tree_util.tree_map(
+        lambda leaf: jax.lax.dynamic_slice_in_dim(leaf, sl, 1, axis=lead),
+        cache,
+    )
+    cache = dataclasses.replace(
+        cache,
+        n_comp=cache.n_comp.at[..., sl].set(0),
+        n_resid=cache.n_resid.at[..., sl].set(0),
+    )
+    return cache, mini
+
+
+def _evacuate_row_paged(cache: LayerKVCache, slot, n_pages: int,
+                        n_shared: int) -> tuple[LayerKVCache, LayerKVCache]:
+    from .tiered import gather_pool_leaf, gather_tiered_pages, \
+        write_tiered_prefix
+
+    cfg = cache.cfg
+    page = cfg.page_size
+    h_kv, head_dim = cache.resid_k.shape[1], cache.resid_k.shape[-1]
+    sl = jnp.asarray(slot, jnp.int32)
+    k_sfx = n_pages - n_shared  # suffix pages whose bytes the row owns
+    assert k_sfx >= 0, (n_pages, n_shared)
+    mini = alloc_layer_cache(
+        dataclasses.replace(cfg, paged=False), 1, h_kv, head_dim,
+        max(page, k_sfx * page), dtype=cache.resid_k.dtype,
+    )
+    if k_sfx:
+        idx = jax.lax.dynamic_slice(
+            cache.pages.page_table, (sl, n_shared), (1, k_sfx)
+        )  # [1, k_sfx] physical ids of the owned suffix
+        if cfg.policy == "none":
+            rk = gather_pool_leaf(cache.raw_k, idx, token_axis=-2)
+            rv = gather_pool_leaf(cache.raw_v, idx, token_axis=-2)
+            put = lambda d, s: d.at[..., : k_sfx * page, :].set(
+                s.astype(d.dtype))
+            mini = dataclasses.replace(
+                mini, raw_k=put(mini.raw_k, rk), raw_v=put(mini.raw_v, rv)
+            )
+        else:
+            mini = dataclasses.replace(
+                mini,
+                k=write_tiered_prefix(mini.k, gather_tiered_pages(cache.k, idx)),
+                v=write_tiered_prefix(mini.v, gather_tiered_pages(cache.v, idx)),
+            )
+    row1 = lambda a: jax.lax.dynamic_slice_in_dim(a, sl, 1, axis=0)
+    if cfg.policy != "none":
+        mini = dataclasses.replace(
+            mini,
+            k=dataclasses.replace(mini.k, chan_perm=row1(cache.k.chan_perm)),
+            v=dataclasses.replace(mini.v, chan_perm=row1(cache.v.chan_perm)),
+        )
+    mini = dataclasses.replace(
+        mini,
+        resid_k=row1(cache.resid_k), resid_v=row1(cache.resid_v),
+        n_comp=row1(cache.n_comp), n_resid=row1(cache.n_resid),
+    )
+    # free the row AFTER the gather: release every live page (one reference
+    # each — shared-prefix pages stay alive through the index's pin) and
+    # zero the counters, exactly a reset_slot
+    pool = pool_release_row(
+        cache.pages, sl, live_pages(cache.n_comp[sl], page)
+    )
+    cache = dataclasses.replace(
+        cache, pages=pool,
+        n_comp=cache.n_comp.at[sl].set(0),
+        n_resid=cache.n_resid.at[sl].set(0),
+    )
+    return cache, mini
+
+
+def restore_row(cache, slot, mini, shared_phys: Optional[Array] = None,
+                n_pages: int = 0, n_shared: int = 0):
+    """Stream an evacuated row back into slot ``slot`` (inverse of
+    ``evacuate_row``; the swap-in half of preemption).
+
+    Paged: maps the ``n_shared`` shared-prefix pages back BY REFERENCE
+    (``shared_phys``, i32 [n_shared] — the SAME physical ids the row
+    released; the prefix index kept them alive), pops ``n_pages -
+    n_shared`` fresh pages and scatters the mini's suffix bytes into them,
+    then restores residual / counters / channel calibration slot-wise.
+    Page placement is the only thing that may differ from before the
+    evacuation; every read masks through the page table, so decode resumes
+    bit-identically. Dense: a plain ``insert_row``. No forward pass runs —
+    restoration is pure data movement.
+    """
+    if cache.pages is None:
+        return insert_row(cache, slot, mini)
+    if cache.n_comp.ndim == 2:  # stacked: identical op per layer
+        return jax.vmap(
+            lambda c, m: _restore_row_paged(c, slot, m, shared_phys,
+                                            n_pages, n_shared)
+        )(cache, mini)
+    return _restore_row_paged(cache, slot, mini, shared_phys, n_pages,
+                              n_shared)
+
+
+def _restore_row_paged(cache: LayerKVCache, slot, mini: LayerKVCache,
+                       shared_phys: Optional[Array], n_pages: int,
+                       n_shared: int) -> LayerKVCache:
+    cfg = cache.cfg
+    page = cfg.page_size
+    k_sfx = n_pages - n_shared
+    # 1) release whatever the slot held (no-op: a restored slot was free)
+    pool = pool_release_row(
+        cache.pages, slot, live_pages(cache.n_comp[slot], page)
+    )
+    # 2) shared prefix back by reference, fresh pages for the owned suffix
+    if n_shared:
+        pool = pool_map_prefix(pool, slot, shared_phys)
+    pool, phys = pool_pop_prefix(pool, slot, k_sfx, lp0=n_shared)
+    new = dataclasses.replace(cache, pages=pool)
+    # 3) scatter the saved suffix bytes (the mini holds ONLY the suffix,
+    #    in its leading tokens — unlike insert_row_paged's full-row input)
+    if k_sfx:
+        if cfg.policy == "none":
+            new = dataclasses.replace(
+                new,
+                raw_k=_scatter_pages(cache.raw_k, mini.raw_k, phys[None],
+                                     axis=-2),
+                raw_v=_scatter_pages(cache.raw_v, mini.raw_v, phys[None],
+                                     axis=-2),
+            )
+        else:
+            new = dataclasses.replace(
+                new,
+                k=_scatter_pages_tiered(cache.k, mini.k, phys[None]),
+                v=_scatter_pages_tiered(cache.v, mini.v, phys[None]),
+            )
+    # 4) per-slot metadata: channel permutation, residual, counters
+    if cfg.policy != "none":
+        new = dataclasses.replace(
+            new,
+            k=dataclasses.replace(
+                new.k, chan_perm=new.k.chan_perm.at[slot].set(mini.k.chan_perm[0])
+            ),
+            v=dataclasses.replace(
+                new.v, chan_perm=new.v.chan_perm.at[slot].set(mini.v.chan_perm[0])
+            ),
+        )
+    return dataclasses.replace(
+        new,
+        resid_k=new.resid_k.at[slot].set(mini.resid_k[0].astype(new.resid_k.dtype)),
+        resid_v=new.resid_v.at[slot].set(mini.resid_v[0].astype(new.resid_v.dtype)),
+        n_comp=new.n_comp.at[slot].set(mini.n_comp[0]),
+        n_resid=new.n_resid.at[slot].set(mini.n_resid[0]),
+    )
+
+
+class SwapStore:
+    """Host-RAM tier for evacuated (preempted) slot rows.
+
+    Maps request id -> (host copy of the evacuated mini-cache, scheduler
+    metadata). PackKV's compressed tiers are what make this cheap: the
+    swapped bytes are the ~10x-compressed pages plus one residual buffer,
+    not raw K/V. Pure host state — the device transfers are the
+    ``evacuate_row`` gather on put and the jitted ``restore_row`` scatter
+    on the way back in.
+    """
+
+    def __init__(self):
+        self._rows: dict[int, tuple[object, dict]] = {}
+        self.swapped_out = 0  # evacuations stored (cumulative)
+        self.swapped_in = 0  # restorations served (cumulative)
+        self.peak_bytes = 0
+
+    def put(self, rid: int, mini, meta: dict) -> None:
+        assert rid not in self._rows, f"rid {rid} already swapped out"
+        self._rows[rid] = (jax.device_get(mini), dict(meta))
+        self.swapped_out += 1
+        self.peak_bytes = max(self.peak_bytes, self.nbytes)
+
+    def pop(self, rid: int) -> tuple[object, dict]:
+        """Remove and return (mini, meta) for re-admission."""
+        row = self._rows.pop(rid)
+        self.swapped_in += 1
+        return row
+
+    def drop(self, rid: int) -> None:
+        """Discard a swapped row (its request was cancelled / expired)."""
+        self._rows.pop(rid, None)
+
+    def meta(self, rid: int) -> dict:
+        return self._rows[rid][1]
+
+    def metas(self):
+        """Iterate the metadata of every swapped row."""
+        return (m for _, m in self._rows.values())
+
+    def __contains__(self, rid: int) -> bool:
+        return rid in self._rows
+
+    def __len__(self) -> int:
+        return len(self._rows)
+
+    @property
+    def nbytes(self) -> int:
+        """Resident host bytes across all swapped rows (scalar leaves —
+        e.g. a stub engine's host counters — count zero)."""
+        return sum(
+            getattr(leaf, "nbytes", 0)
+            for mini, _ in self._rows.values()
+            for leaf in jax.tree_util.tree_leaves(mini)
+        )

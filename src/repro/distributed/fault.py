@@ -65,6 +65,66 @@ class StragglerMonitor:
         return "ok"
 
 
+@dataclasses.dataclass(frozen=True)
+class FaultEvent:
+    """One scheduled fault: fires when the serving scheduler's step counter
+    reaches ``step`` (see ``serving.engine.SlotServer._apply_faults``)."""
+
+    step: int
+    kind: str  # see FaultPlan.KINDS
+    arg: float = 0.0
+
+
+class FaultPlan:
+    """Deterministic fault schedule for the serving scheduler.
+
+    A pure-host seam injected into ``SlotServer`` (and the property-test
+    stub engine): every fault fires at an exact scheduler step, so a run is
+    reproducible down to the launch sequence — the harness that drives the
+    scheduler's conservation invariants (free + held pages == pool,
+    refcounts, reservations) through hostile schedules.
+
+    Kinds:
+      * ``pool_squeeze`` — hold back ``arg`` pool pages from admission
+        (``arg = 0`` releases the squeeze). Simulates pool exhaustion /
+        an external tenant without touching device state.
+      * ``cancel`` — cancel ``arg`` live requests: occupied slots in
+        ascending slot order first, then queued requests in submit order,
+        then the in-flight prefill task (deterministic victim order).
+      * ``deadline`` — force-expire the same selection (their deadline is
+        rewritten to the epoch, so the next reap retires them as expired).
+      * ``chunk_abort`` — abort the in-flight chunked admission at its
+        current chunk boundary and requeue the request (prefill restarts
+        from scratch; reservation and scratch must not leak).
+      * ``straggler`` — feed a synthetic ``arg``-second launch time to the
+        decode-launch watchdog (drives spec-decode degradation).
+    """
+
+    KINDS = ("pool_squeeze", "cancel", "deadline", "chunk_abort", "straggler")
+
+    def __init__(self, events=()):
+        self.events: list[FaultEvent] = sorted(events, key=lambda e: e.step)
+        for e in self.events:
+            if e.kind not in self.KINDS:
+                raise ValueError(f"unknown fault kind {e.kind!r}")
+        self.fired: list[FaultEvent] = []
+
+    def at(self, step: int) -> list[FaultEvent]:
+        """Events scheduled for ``step`` (the scheduler marks them fired)."""
+        return [e for e in self.events if e.step == step]
+
+    @classmethod
+    def storm(cls, kind: str, start: int, count: int, every: int = 1,
+              arg: float = 1.0) -> "FaultPlan":
+        """``count`` events of ``kind`` from ``start``, one per ``every``
+        steps — cancel storms, deadline storms, straggler bursts."""
+        return cls([FaultEvent(step=start + i * every, kind=kind, arg=arg)
+                    for i in range(count)])
+
+    def __add__(self, other: "FaultPlan") -> "FaultPlan":
+        return FaultPlan([*self.events, *other.events])
+
+
 @dataclasses.dataclass
 class ElasticPlan:
     """Mesh transition for an elastic rescale event.

@@ -59,6 +59,20 @@ def main() -> int:
     ap.add_argument("--spec-k", type=int, default=4,
                     help="max drafted tokens per verify launch "
                     "(window = k + 1)")
+    ap.add_argument("--preempt", action="store_true",
+                    help="priority preemption: a blocked higher-class "
+                    "admission swaps a lower-class victim's compressed "
+                    "pages to host RAM; the victim resumes bit-identically "
+                    "later (docs/serving.md)")
+    ap.add_argument("--priority-every", type=int, default=0, metavar="N",
+                    help="demo traffic shaping: every Nth request is "
+                    "class 0 (highest), the rest class 1 (0 = all class 0)")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="per-request deadline; expired requests retire "
+                    "with their partial output at the next scheduler step")
+    ap.add_argument("--aging-steps", type=int, default=32,
+                    help="scheduler steps per one class promotion of "
+                    "queued work (0 = strict priority, may starve)")
     ap.add_argument("--stats-json", default=None, metavar="PATH",
                     help="dump final SlotStats (incl. drafted/accepted "
                     "counts and acceptance rate) as JSON to PATH")
@@ -79,7 +93,8 @@ def main() -> int:
                         prefix_cache=args.prefix_cache,
                         prefix_cache_pages=args.prefix_cache_pages,
                         prefill_chunk_pages=args.prefill_chunk_pages,
-                        spec_decode=args.spec_decode, spec_k=args.spec_k)
+                        spec_decode=args.spec_decode, spec_k=args.spec_k,
+                        preempt=args.preempt, aging_steps=args.aging_steps)
     t0 = time.time()
     engine = Engine(cfg, params, pack, ecfg)
     print(f"engine built in {time.time() - t0:.1f}s; policy={args.policy}")
@@ -102,7 +117,10 @@ def main() -> int:
     for rid in range(args.requests):
         plen = int(rng.integers(args.prompt_len // 2, args.prompt_len + 1))
         toks = np.concatenate([sys_prompt, rng.integers(0, cfg.vocab, plen)])
-        server.submit(Request(rid=rid, max_new=args.max_new, tokens=toks))
+        n = args.priority_every
+        prio = 0 if (n <= 0 or rid % n == 0) else 1
+        server.submit(Request(rid=rid, max_new=args.max_new, tokens=toks,
+                              priority=prio, deadline_ms=args.deadline_ms))
     t0 = time.time()
     done = server.run()
     n_tok = sum(len(r.output) for r in done)
@@ -127,7 +145,15 @@ def main() -> int:
     if args.spec_decode:
         print(f"speculative decode: {s.spec_launches} verify launches, "
               f"{s.spec_accepted}/{s.spec_drafted} drafts accepted "
-              f"(rate {s.acceptance_rate:.2f})")
+              f"(rate {s.acceptance_rate:.2f})"
+              + (f", {s.degraded_steps} degraded steps (spec disabled by "
+                 "the straggler watchdog)" if s.degraded_steps else ""))
+    if args.preempt:
+        print(f"preemption: {s.preemptions} swap-outs "
+              f"({s.swapped_pages} pages out / {s.restored_pages} back)")
+    if s.cancelled or s.expired:
+        print(f"retired early: {s.cancelled} cancelled, "
+              f"{s.expired} past deadline")
     if args.stats_json:
         with open(args.stats_json, "w") as f:
             json.dump(s.to_json(), f, indent=2, default=float)

@@ -80,6 +80,13 @@ class ModelApi:
     prefix_chunk_init: Optional[Callable] = None
     prefix_chunk: Optional[Callable] = None
     prefix_chunk_insert: Optional[Callable] = None
+    # Preemption (ISSUE 8): swap a slot row out to host RAM (compressed
+    # pages + residual + counters) and stream it back bit-identically.
+    # None for the recurrent families for now — their O(1) state row could
+    # be copied out trivially, but the restore/refcount plumbing is
+    # KV-specific, so the Engine rejects --preempt for them loudly.
+    evacuate_slot: Optional[Callable] = None
+    restore_slot: Optional[Callable] = None
 
     @property
     def supports_slots(self) -> bool:
@@ -131,6 +138,8 @@ def _transformer_api() -> ModelApi:
         prefix_chunk_init=transformer.prefix_chunk_init,
         prefix_chunk=transformer.prefix_chunk,
         prefix_chunk_insert=transformer.prefix_chunk_insert,
+        evacuate_slot=transformer.evacuate_cache_slot,
+        restore_slot=transformer.restore_cache_slot,
     )
 
 

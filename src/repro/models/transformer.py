@@ -238,6 +238,28 @@ def reset_cache_slot(cache, slot):
     return reset_slot(cache, slot)
 
 
+def evacuate_cache_slot(cache, slot, n_pages: int = 0, n_shared: int = 0):
+    """Swap row ``slot`` out to a dense B=1 mini-cache and free the row
+    (page-level preemption; see ``core.cache.evacuate_row``). ``n_pages``
+    and ``n_shared`` are STATIC — the scheduler's exact host-side mirror of
+    the row's live page count and its shared-prefix length. Returns
+    (cache with the slot freed, host-transportable mini)."""
+    from ..core.cache import evacuate_row
+
+    return evacuate_row(cache, slot, n_pages, n_shared)
+
+
+def restore_cache_slot(cache, slot, mini, shared_phys,
+                       n_pages: int = 0, n_shared: int = 0):
+    """Stream an evacuated row back into slot ``slot`` — shared-prefix
+    pages re-mapped by reference, suffix bytes scattered into fresh pages
+    (``core.cache.restore_row``). Pure data movement: decode resumes from
+    the restored row bit-identically, no forward pass."""
+    from ..core.cache import restore_row
+
+    return restore_row(cache, slot, mini, shared_phys, n_pages, n_shared)
+
+
 def _prefill_segment(params: dict, cfg: ArchConfig, pack_cfg: PackKVConfig,
                      mini, tokens: Array, n_ctx: int):
     """One chunk of a chunked prefill: forward ``tokens`` ([1, S]) with the

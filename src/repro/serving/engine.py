@@ -50,7 +50,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..core.cache import PackKVConfig, calibrate_specs
+from ..core.cache import PackKVConfig, SwapStore, calibrate_specs
+from ..distributed.fault import FaultPlan, StragglerMonitor
 from ..models import get_model
 
 Array = jax.Array
@@ -93,6 +94,14 @@ class EngineConfig:
     prefix_cache: bool = False  # content-addressed prefix reuse across requests
     prefix_cache_pages: int | None = None  # max pages the index may pin
     #   (None = unbounded; pool-pressure eviction still applies either way)
+    # preemptive serving (see docs/serving.md):
+    preempt: bool = False  # compressed-page swap-out of lower-class victims
+    #   when a higher-class admission cannot reserve pages (or find a slot);
+    #   the victim resumes later bit-identically from a host-RAM SwapStore
+    aging_steps: int = 32  # scheduler steps per priority-class promotion of
+    #   a queued request (the no-starvation bound: a class-p head competes
+    #   as class 0 after p * aging_steps steps). 0 disables aging — strict
+    #   priority, a permanent high-class flood then starves lower classes.
     debug_invariants: bool = False  # assert refcount conservation after every
     #   admit/retire (device sync per check — tests/bring-up only)
 
@@ -246,6 +255,23 @@ class Engine:
                 partial(self.api.decode_verify, cfg=cfg, backend=ecfg.backend),
                 static_argnames=("n_bucket",),
                 donate_argnames=("cache",),
+            )
+        if ecfg.preempt:
+            if self.api.evacuate_slot is None:
+                raise ValueError(
+                    f"family {cfg.family!r} cannot serve --preempt: its "
+                    "recurrent slot state has no evacuate/restore ops to "
+                    "swap through — drop --preempt"
+                )
+            # one compile per (live pages, shared-prefix pages) pair — the
+            # same specialization granularity as prompt-length admission
+            self._evacuate = jax.jit(
+                self.api.evacuate_slot,
+                static_argnames=("n_pages", "n_shared"),
+            )
+            self._restore = jax.jit(
+                self.api.restore_slot,
+                static_argnames=("n_pages", "n_shared"),
             )
         if self.api.decode_multi is not None:
             # donated multi-step decode: the chunk loop updates the cache
@@ -486,6 +512,21 @@ class Engine:
     def free_slot(self, cache, slot: int):
         return self._reset(cache, jnp.int32(slot))
 
+    def evacuate(self, cache, slot: int, n_pages: int, n_shared: int = 0):
+        """Swap row ``slot`` out: returns (cache with the row freed, dense
+        B=1 mini-cache holding the row's owned bytes). ``n_pages`` is the
+        row's exact live page count (host-mirrored), ``n_shared`` its
+        shared-prefix pages (released by reference, not copied)."""
+        return self._evacuate(cache, jnp.int32(slot), n_pages=n_pages,
+                              n_shared=n_shared)
+
+    def restore(self, cache, slot: int, mini, shared_phys=(),
+                n_pages: int = 0, n_shared: int = 0):
+        """Stream an evacuated row back into ``slot`` (no forward pass)."""
+        phys = jnp.asarray(np.asarray(shared_phys, np.int64), jnp.int32)
+        return self._restore(cache, jnp.int32(slot), mini, phys,
+                             n_pages=n_pages, n_shared=n_shared)
+
     def mask_free(self, cache, active):
         """Re-zero counters of inactive rows (see core.cache.mask_free_slots)."""
         return self._mask_free(cache, active)
@@ -515,11 +556,36 @@ class Request:
     tokens: np.ndarray  # [S] prompt at its true length
     max_new: int
     output: np.ndarray | None = None
+    # admission class: 0 is the most urgent; FIFO within a class, lower
+    # classes delayed (never starved — see EngineConfig.aging_steps)
+    priority: int = 0
+    # wall-clock budget in ms from submit; a request past its deadline is
+    # retired with status 'expired' at the next scheduler step (partial
+    # output kept). None = no deadline.
+    deadline_ms: float | None = None
+    # lifecycle: queued -> active -> done | cancelled | expired (a
+    # preempted request goes back to queued and keeps its place)
+    status: str = "queued"
     # latency telemetry (wall-clock seconds; filled by SlotServer):
     t_submit: float = 0.0  # stamped by submit()
     t_first: float | None = None  # first token ready (TTFT = t_first - t_submit)
     token_times: list = dataclasses.field(default_factory=list)  # one per
     #   token; tokens emitted by one multi-step launch share a timestamp
+    n_preempts: int = 0  # times this request was swapped out mid-decode
+    # scheduler bookkeeping (stamped by submit):
+    _seq: int = dataclasses.field(default=0, repr=False)  # global submit order
+    _enq_step: int = dataclasses.field(default=0, repr=False)  # step when
+    #   (re-)queued — the aging clock
+
+    def cancel(self) -> None:
+        """Request cooperative cancellation: honored at the next scheduler
+        step — queued, mid-prefill-chunk, swapped-out or decoding alike —
+        through the shared retirement path (partial output kept)."""
+        self._cancelled = True
+
+    @property
+    def cancelled(self) -> bool:
+        return getattr(self, "_cancelled", False)
 
 
 @dataclasses.dataclass
@@ -557,6 +623,14 @@ class SlotStats:
     spec_launches: int = 0  # verify dispatches (q_len = spec_k + 1)
     spec_drafted: int = 0  # drafted tokens submitted for verification
     spec_accepted: int = 0  # drafted tokens accepted (emitted for free)
+    # preemptive-serving telemetry (ISSUE 8; zeros when preempt is off):
+    preemptions: int = 0  # slot swap-outs in favor of a higher class
+    swapped_pages: int = 0  # pool pages evacuated to the host SwapStore
+    restored_pages: int = 0  # pool pages streamed back on re-admission
+    cancelled: int = 0  # requests retired via Request.cancel()
+    expired: int = 0  # requests retired past their deadline_ms
+    # decode-launch watchdog (zeros without spec decode / watchdog):
+    degraded_steps: int = 0  # decode steps run with spec decode auto-disabled
 
     @property
     def acceptance_rate(self) -> float:
@@ -834,10 +908,28 @@ class SlotServer:
     bit-identical to cold ones: see ``models.transformer.
     prefill_into_slot_prefix`` for why page boundaries are exact resume
     points.
+
+    PREEMPTIVE serving (ISSUE 8; ``EngineConfig.preempt``): requests carry
+    a priority class — admission is per-class FIFO with aging (delayed,
+    never starved) — and when a higher-class head cannot seat (no free
+    slot, or pages short even after index eviction) the scheduler swaps a
+    strictly-lower-class victim OUT: its compressed pages, residual and
+    counters are evacuated to a host-RAM ``SwapStore``
+    (``core.cache.evacuate_row``), shared-prefix pages release their refs
+    instead of copying, and the victim requeues with its
+    generated-so-far tokens. On re-admission the row streams back
+    (``restore_row`` — one scatter, no forward pass) and decoding resumes
+    bit-identically to an uninterrupted run. ``Request.deadline_ms`` /
+    ``cancel()`` retire work at the next scheduler step — mid-prefill-chunk
+    included — through the same ``_retire_slot``/``_finish_dead`` path,
+    and a ``distributed.fault.FaultPlan`` can drive all of it
+    deterministically (see docs/serving.md).
     """
 
     def __init__(self, engine: Engine, eos_id: int | None = None,
-                 drafter: NGramDrafter | None = None):
+                 drafter: NGramDrafter | None = None,
+                 fault_plan: FaultPlan | None = None,
+                 straggler: StragglerMonitor | None = None):
         if engine.cfg.input_mode != "tokens":
             raise ValueError(
                 f"input_mode {engine.cfg.input_mode!r} not servable per-slot "
@@ -862,7 +954,9 @@ class SlotServer:
         self.slots: list[_Active | None] = [None] * self.n_slots
         self._ever_used = [False] * self.n_slots
         self._last_tok = np.zeros((self.n_slots,), np.int32)
-        self.queue: deque[Request] = deque()
+        # per-class FIFO queues (priority 0 = most urgent); the flattened
+        # ``queue`` property is the back-compat view
+        self.queues: dict[int, deque[Request]] = {}
         self.done: dict[int, Request] = {}
         self.stats = SlotStats(n_slots=self.n_slots)
         self._reserved: dict[int, int] = {}  # slot -> NEWLY-allocatable pages
@@ -870,6 +964,26 @@ class SlotServer:
                        if engine.ecfg.prefix_cache else None)
         self._slot_shared: dict[int, tuple[int, ...]] = {}  # slot -> mapped
         self._task: _PrefillTask | None = None  # in-flight chunked admission
+        # preemption: host-RAM store of evacuated rows (ISSUE 8)
+        self._swap: SwapStore | None = SwapStore() if engine.ecfg.preempt \
+            else None
+        self._seq = 0  # global submit stamp (FIFO order within a class)
+        self._step_no = 0  # scheduler step counter (aging + fault clock)
+        # deterministic fault schedule (tests/bring-up; None in production)
+        self._faults = fault_plan
+        self._squeeze = 0  # pool pages a pool_squeeze fault holds back
+        # decode-launch watchdog: sustained stragglers auto-disable spec
+        # decode (exactness-neutral — speculation only changes speed)
+        self._watchdog = straggler if straggler is not None else (
+            StragglerMonitor() if engine.ecfg.spec_decode else None
+        )
+        self._spec_degraded = False  # sticky once the watchdog says exclude
+
+    @property
+    def queue(self) -> list[Request]:
+        """Flattened queue view: classes ascending, FIFO within each — for
+        truthiness/len/iteration. Mutate through submit(), never this list."""
+        return [r for p in sorted(self.queues) for r in self.queues[p]]
 
     # -- paged admission accounting ----------------------------------------
     @property
@@ -882,7 +996,8 @@ class SlotServer:
         ecfg = self.engine.ecfg
         total = self.engine.pack_cfg.pool_pages
         held = self._index.n_held if self._index is not None else 0
-        return total - ecfg.page_watermark - sum(self._reserved.values()) - held
+        return (total - ecfg.page_watermark - self._squeeze
+                - sum(self._reserved.values()) - held)
 
     def _pages_needed(self, req: Request) -> int:
         """Worst-case resident pages over the request's lifetime: its
@@ -902,7 +1017,15 @@ class SlotServer:
         return self._index.lookup(req.tokens, max_m)
 
     def _live_shared(self) -> set[int]:
-        return {p for t in self._slot_shared.values() for p in t}
+        """Shared pages a live slot maps by reference — plus pages a
+        SWAPPED-OUT request will re-map on restore (its slot released its
+        device refs at evacuation, so only the index still pins them; they
+        must survive eviction until the request resumes or dies)."""
+        live = {p for t in self._slot_shared.values() for p in t}
+        if self._swap is not None:
+            for meta in self._swap.metas():
+                live.update(meta["shared"])
+        return live
 
     def _evict_to_fit(self, need_new: int, protected: set[int]) -> bool:
         """Reclaim index-pinned pages (LRU leaves first) until ``need_new``
@@ -985,6 +1108,14 @@ class SlotServer:
     def submit(self, req: Request) -> None:
         if req.max_new < 1:
             raise ValueError(f"request {req.rid}: max_new must be >= 1")
+        if req.priority < 0:
+            raise ValueError(f"request {req.rid}: priority must be >= 0")
+        if req.deadline_ms is not None and req.deadline_ms <= 0:
+            # an already-expired deadline is a caller bug, not traffic:
+            # reject upstream instead of admitting work doomed to reap
+            raise ValueError(
+                f"request {req.rid}: deadline_ms must be > 0"
+            )
         if self.engine.ecfg.paged:
             ecfg = self.engine.ecfg
             pack = self.engine.pack_cfg
@@ -1014,36 +1145,205 @@ class SlotServer:
                     f"admits at most {total - ecfg.page_watermark}"
                 )
         req.t_submit = time.perf_counter()
-        self.queue.append(req)
+        req._seq = self._seq
+        self._seq += 1
+        req._enq_step = self._step_no
+        self.queues.setdefault(req.priority, deque()).append(req)
+
+    def _head(self) -> Request | None:
+        """The next request to admit: among per-class FIFO heads, the one
+        with the smallest (effective class, submit seq). Aging promotes a
+        waiting head one class per ``aging_steps`` scheduler steps, so a
+        permanent higher-class flood delays lower classes but never starves
+        them; ``aging_steps = 0`` is strict priority."""
+        ag = self.engine.ecfg.aging_steps
+        best, best_key = None, None
+        for p, q in self.queues.items():
+            if not q:
+                continue
+            h = q[0]
+            eff = max(0, p - (self._step_no - h._enq_step) // ag) if ag > 0 \
+                else p
+            key = (eff, h._seq)
+            if best_key is None or key < best_key:
+                best, best_key = h, key
+        return best
+
+    def _pop_head(self, head: Request) -> Request:
+        got = self.queues[head.priority].popleft()
+        assert got is head
+        return got
+
+    def _requeue(self, req: Request) -> None:
+        """Put a preempted/aborted request back, keeping per-class FIFO by
+        ORIGINAL submit order (everything still queued in its class was
+        submitted later, so it normally lands at the front)."""
+        req.status = "queued"
+        req._enq_step = self._step_no
+        q = self.queues.setdefault(req.priority, deque())
+        pos = 0
+        while pos < len(q) and q[pos]._seq < req._seq:
+            pos += 1
+        q.insert(pos, req)
 
     @property
     def n_occupied(self) -> int:
         return sum(s is not None for s in self.slots)
 
-    # -- scheduler ----------------------------------------------------------
-    def _retire(self, i: int) -> Request:
-        act = self.slots[i]
-        act.req.output = np.asarray(act.out, np.int32)
-        self.done[act.req.rid] = act.req
+    # -- retirement (the ONE path out of a slot) ----------------------------
+    def _release_slot(self, i: int, free_pages: bool = True) -> None:
+        """Tear down slot ``i``'s scheduler state: drafter row, page
+        reservation, shared-prefix mapping, and — unless the pages were
+        already returned in-graph by an evacuation — the device row itself.
+        Every way out of a slot (EOS, max_new, cancel, deadline, preemption)
+        funnels through here, so nothing can leak pages or refcounts."""
         self.slots[i] = None
         if self._drafter is not None:
             self._drafter.drop(i)
-        self.cache = self.engine.free_slot(self.cache, i)
+        if free_pages:
+            self.cache = self.engine.free_slot(self.cache, i)
         self._reserved.pop(i, None)  # paged: pages return with the reset
         self._slot_shared.pop(i, None)  # shared pages: ref back to the index
-        self.stats.completed += 1
         self._check_invariants()
+
+    def _retire_slot(self, i: int, reason: str = "done") -> Request:
+        """Finish the request in slot ``i`` (reason: done | cancelled |
+        expired) and recycle the slot."""
+        act = self.slots[i]
+        act.req.output = np.asarray(act.out, np.int32)
+        act.req.status = reason
+        self.done[act.req.rid] = act.req
+        self._release_slot(i)
+        if reason == "done":
+            self.stats.completed += 1
+        elif reason == "cancelled":
+            self.stats.cancelled += 1
+        else:
+            self.stats.expired += 1
         return act.req
 
+    # -- preemption: compressed swap-out / swap-in ---------------------------
+    def _swap_out_one(self, head: Request) -> bool:
+        """Evacuate ONE victim slot to make room for ``head``.
+
+        Victims must be STRICTLY lower class (raw ``priority`` — aging
+        promotes a head's admission ORDER, not its preemption rights, so a
+        requeued victim can never bounce straight back into its preemptor);
+        among them, pick the lowest class with the most remaining work (the
+        one that would hold its slot/pages longest), lowest slot index on
+        ties. The victim's owned bytes land in the host SwapStore, its
+        shared-prefix pages are released by reference, and it requeues at
+        its original submit order — resumed outputs are bit-identical to an
+        uninterrupted run (cache bytes are placement-independent; counters
+        and positions derive from prompt + generated length)."""
+        if self._swap is None:
+            return False
+        cand = [i for i in range(self.n_slots)
+                if self.slots[i] is not None
+                and self.slots[i].req.priority > head.priority]
+        if not cand:
+            return False
+        i = max(cand, key=lambda j: (self.slots[j].req.priority,
+                                     self.slots[j].remaining, -j))
+        act = self.slots[i]
+        req = act.req
+        n_pages = n_shared = 0
+        if self.engine.ecfg.paged:
+            n_comp, _ = self._counters(act)
+            n_pages = -(-n_comp // self.engine.ecfg.page_size)
+            n_shared = len(self._slot_shared.get(i, ()))
+        shared = tuple(self._slot_shared.get(i, ()))
+        self.cache, mini = self.engine.evacuate(self.cache, i, n_pages,
+                                                n_shared)
+        self._swap.put(req.rid, mini, dict(
+            out=list(act.out), last_tok=int(self._last_tok[i]),
+            n_pages=n_pages, n_shared=n_shared, shared=shared,
+        ))
+        req.n_preempts += 1
+        self._requeue(req)
+        # the evacuation already returned the row's pages in-graph
+        self._release_slot(i, free_pages=False)
+        self.stats.preemptions += 1
+        self.stats.swapped_pages += n_pages - n_shared
+        return True
+
+    def _resume(self, req: Request, i: int) -> None:
+        """Re-admit a swapped-out request into slot ``i``: stream its pages
+        back (shared prefix re-mapped by reference), rebuild the host-side
+        generation state, and continue decoding from its saved seed token.
+        NO forward pass runs — the seed was never cached, exactly as if the
+        preemption never happened."""
+        mini, meta = self._swap.pop(req.rid)
+        if self.engine.ecfg.paged:
+            self._reserved[i] = self._pages_needed(req) - meta["n_shared"]
+            self.stats.pages_reserved_peak = max(
+                self.stats.pages_reserved_peak, sum(self._reserved.values())
+            )
+        self.cache = self.engine.restore(
+            self.cache, i, mini, meta["shared"],
+            n_pages=meta["n_pages"], n_shared=meta["n_shared"],
+        )
+        if meta["shared"]:
+            self._slot_shared[i] = tuple(meta["shared"])
+        act = _Active(req, meta["out"][0], self.eos_id)
+        act.out = list(meta["out"])
+        act.done = False
+        self.slots[i] = act
+        req.status = "active"
+        self._last_tok[i] = meta["last_tok"]
+        self._spec_backoff[i] = 0
+        self._spec_cooldown[i] = 0
+        self._ever_used[i] = True
+        if self._drafter is not None:
+            self._drafter.seed(
+                i, list(np.asarray(req.tokens)) + list(act.out)
+            )
+        self.stats.restored_pages += meta["n_pages"] - meta["n_shared"]
+        self._check_invariants()
+
+    def _seat(self, head: Request) -> int | None:
+        """A free slot for ``head`` — swapping lower-class victims out one
+        at a time when preemption is on and the table is full."""
+        while True:
+            try:
+                return self.slots.index(None)
+            except ValueError:
+                if not self._swap_out_one(head):
+                    return None
+
+    def _fit_pages(self, head: Request, need_new: int,
+                   protected: set[int]) -> bool:
+        """Make ``need_new`` pages reservable: evict cold index prefixes
+        first (cheap — recomputable), then swap out lower-class victims."""
+        while not self._evict_to_fit(need_new, protected):
+            if not self._swap_out_one(head):
+                # page-count admission: keep class/FIFO order, wait for a
+                # retirement
+                self.stats.admission_blocks += 1
+                return False
+        return True
+
     def _admit(self) -> list[Request]:
+        """Monolithic admission sweep (``prefill_chunk_pages == 0``): seat
+        queue heads — swapped-out requests resume, fresh ones prefill in one
+        fused dispatch — until the queue drains or admission blocks."""
         finished: list[Request] = []
         paged = self.engine.ecfg.paged
-        for i in range(self.n_slots):
-            if not self.queue:
+        while True:
+            head = self._head()
+            if head is None:
                 break
-            if self.slots[i] is not None:
+            i = self._seat(head)
+            if i is None:
+                break
+            if self._swap is not None and head.rid in self._swap:
+                meta = self._swap.meta(head.rid)
+                if paged and not self._fit_pages(
+                        head, self._pages_needed(head) - meta["n_shared"],
+                        set(meta["shared"])):
+                    break
+                self._resume(self._pop_head(head), i)
                 continue
-            head = self.queue[0]
             match_pages: list[int] = []
             match_perms = None
             if self._index is not None and self.cache is not None:
@@ -1052,12 +1352,9 @@ class SlotServer:
                 # suffix-only reservation: shared prefix pages reserve 0 —
                 # the slot can only ever NEWLY pop pages past the match
                 need_new = self._pages_needed(head) - len(match_pages)
-                if need_new > self._pages_avail and \
-                        not self._evict_to_fit(need_new, set(match_pages)):
-                    # page-count admission: keep FIFO order, wait for retire
-                    self.stats.admission_blocks += 1
+                if not self._fit_pages(head, need_new, set(match_pages)):
                     break
-            req = self.queue.popleft()
+            req = self._pop_head(head)
             if self.cache is None:
                 self.cache = self.engine.alloc_slot_cache()
             if paged:
@@ -1082,11 +1379,12 @@ class SlotServer:
             self._activate(req, i, int(jnp.argmax(logits)))
             self._check_invariants()
             if self.slots[i].done:  # max_new == 1 or instant EOS
-                finished.append(self._retire(i))
+                finished.append(self._retire_slot(i))
         return finished
 
     def _activate(self, req: Request, i: int, tok: int) -> None:
         """Occupy slot ``i`` with ``req`` whose first token is ``tok``."""
+        req.status = "active"
         self.slots[i] = _Active(req, tok, self.eos_id)
         self._last_tok[i] = tok
         self._spec_backoff[i] = 0
@@ -1114,25 +1412,32 @@ class SlotServer:
         bounded stall is the whole prefill either way, and one dispatch
         beats chunk_step + chunk_insert. Such admissions complete within
         this call (appending to ``finished`` on instant retirement) and
-        return None with no task outstanding."""
-        if not self.queue:
+        return None with no task outstanding. Swapped-out requests resume
+        here too — a restore is one scatter, not a prefill, so it also
+        completes within the call."""
+        head = self._head()
+        if head is None:
             return None
-        try:
-            slot = self.slots.index(None)
-        except ValueError:
+        slot = self._seat(head)
+        if slot is None:
             return None
-        head = self.queue[0]
+        if self._swap is not None and head.rid in self._swap:
+            meta = self._swap.meta(head.rid)
+            if self.engine.ecfg.paged and not self._fit_pages(
+                    head, self._pages_needed(head) - meta["n_shared"],
+                    set(meta["shared"])):
+                return None
+            self._resume(self._pop_head(head), slot)
+            return None
         match_pages: list[int] = []
         match_perms = None
         if self._index is not None and self.cache is not None:
             match_pages, match_perms = self._match(head)
         if self.engine.ecfg.paged:
             need_new = self._pages_needed(head) - len(match_pages)
-            if need_new > self._pages_avail and \
-                    not self._evict_to_fit(need_new, set(match_pages)):
-                self.stats.admission_blocks += 1
+            if not self._fit_pages(head, need_new, set(match_pages)):
                 return None
-        req = self.queue.popleft()
+        req = self._pop_head(head)
         if self.cache is None:
             self.cache = self.engine.alloc_slot_cache()
         if self.engine.ecfg.paged:
@@ -1160,7 +1465,7 @@ class SlotServer:
                 self._activate(req, slot, int(jnp.argmax(logits)))
                 self._check_invariants()
                 if self.slots[slot].done:  # max_new == 1 or instant EOS
-                    finished.append(self._retire(slot))
+                    finished.append(self._retire_slot(slot))
                 return None
             scratch = self.engine.chunk_init(S)
             bounds = sorted(set(range(0, S, c)) | {S})
@@ -1218,7 +1523,7 @@ class SlotServer:
         self._activate(t.req, i, int(jnp.argmax(t.logits)))
         self._check_invariants()
         if self.slots[i].done:  # max_new == 1 or instant EOS
-            finished.append(self._retire(i))
+            finished.append(self._retire_slot(i))
 
     def _chunk_plan(self) -> tuple[int, int | None]:
         """(n_steps, n_bucket) for the next decode launch.
@@ -1243,8 +1548,121 @@ class SlotServer:
             [a.cached_tokens for a in self.slots if a is not None],
         ))
 
+    # -- cancellation / deadlines / faults -----------------------------------
+    def _finish_dead(self, req: Request, why: str,
+                     finished: list[Request]) -> None:
+        """Retire a request that never (re-)reached a slot: queued, swapped
+        out, or mid-prefill-chunk. Output is whatever was generated before
+        it was swapped out (empty otherwise)."""
+        out: list[int] = []
+        if self._swap is not None and req.rid in self._swap:
+            out = self._swap.meta(req.rid)["out"]
+            self._swap.drop(req.rid)
+        req.output = np.asarray(out, np.int32)
+        req.status = why
+        self.done[req.rid] = req
+        if why == "cancelled":
+            self.stats.cancelled += 1
+        else:
+            self.stats.expired += 1
+        finished.append(req)
+
+    def _abort_task(self) -> None:
+        """Drop the in-flight chunked admission at its current chunk
+        boundary. Mid-task state is leak-free by construction: plain tasks
+        hold no device pages before their fused final chunk, and prefix
+        tasks take shared-page references only at ``prefix_chunk_finish`` —
+        the only thing to hand back is the host-side reservation."""
+        t, self._task = self._task, None
+        self._reserved.pop(t.slot, None)
+        self._check_invariants()
+
+    def _reap(self, finished: list[Request]) -> None:
+        """Honor ``cancel()`` and ``deadline_ms`` at the top of the step —
+        before any new work launches — for queued, swapped-out,
+        mid-prefill-chunk and decoding requests alike. All three ends meet
+        the same retirement path (``_retire_slot`` / ``_finish_dead``)."""
+        now = time.perf_counter()
+
+        def dead(req: Request) -> str | None:
+            if req.cancelled:
+                return "cancelled"
+            if req.deadline_ms is not None and \
+                    (now - req.t_submit) * 1e3 > req.deadline_ms:
+                return "expired"
+            return None
+
+        for q in self.queues.values():
+            for req in [r for r in q if dead(r)]:
+                q.remove(req)
+                self._finish_dead(req, dead(req), finished)
+        if self._task is not None and dead(self._task.req):
+            req = self._task.req
+            self._abort_task()
+            self._finish_dead(req, dead(req), finished)
+        for i in range(self.n_slots):
+            act = self.slots[i]
+            if act is not None:
+                why = dead(act.req)
+                if why is not None:
+                    finished.append(self._retire_slot(i, why))
+
+    def _fault_victims(self, n: int) -> list[Request]:
+        """Deterministic victim order for cancel/deadline storms: occupied
+        slots ascending, then queued requests in submit order, then the
+        in-flight prefill task."""
+        out: list[Request] = []
+        for i in range(self.n_slots):
+            if len(out) >= n:
+                return out
+            if self.slots[i] is not None:
+                out.append(self.slots[i].req)
+        for req in sorted((r for q in self.queues.values() for r in q),
+                          key=lambda r: r._seq):
+            if len(out) >= n:
+                return out
+            out.append(req)
+        if len(out) < n and self._task is not None:
+            out.append(self._task.req)
+        return out
+
+    def _apply_faults(self) -> None:
+        """Fire this step's scheduled faults (see ``distributed.fault.
+        FaultPlan`` for kind semantics). Faults act through the same seams
+        real traffic does — cancel flags, deadline rewrites, requeues — so
+        every invariant the scheduler maintains must survive them."""
+        if self._faults is None:
+            return
+        for ev in self._faults.at(self._step_no):
+            self._faults.fired.append(ev)
+            if ev.kind == "pool_squeeze":
+                self._squeeze = max(0, int(ev.arg))
+            elif ev.kind in ("cancel", "deadline"):
+                for req in self._fault_victims(max(1, int(ev.arg))):
+                    if ev.kind == "cancel":
+                        req.cancel()
+                    else:
+                        req.deadline_ms = 1e-9  # expired at the next reap
+            elif ev.kind == "chunk_abort":
+                if self._task is not None:
+                    req = self._task.req
+                    self._abort_task()
+                    self._requeue(req)  # prefill restarts from scratch
+            elif ev.kind == "straggler":
+                self._observe_launch(float(ev.arg))
+
+    def _observe_launch(self, dt: float) -> None:
+        """Feed one decode-launch wall time to the straggler watchdog; a
+        sustained-straggler verdict permanently degrades this server to
+        plain decode (speculation off — graceful, exactness-neutral)."""
+        if self._watchdog is None or self._spec_degraded:
+            return
+        if self._watchdog.observe(dt) == "exclude":
+            self._spec_degraded = True
+
     def step(self) -> list[Request]:
-        """One bounded prefill chunk (or a monolithic admission sweep when
+        """Reap cancellations/deadlines, fire scheduled faults, then one
+        bounded prefill chunk (or a monolithic admission sweep when
         ``prefill_chunk_pages == 0``) + one decode launch + retire. Returns
         requests finished now.
 
@@ -1253,16 +1671,23 @@ class SlotServer:
         give per-request outputs bit-identical to B=1 ``Engine.generate``.
         """
         t0 = time.perf_counter()
+        self._step_no += 1
+        finished: list[Request] = []
+        self._apply_faults()
+        self._reap(finished)
         if self.engine.ecfg.prefill_chunk_pages > 0:
-            finished: list[Request] = []
             self._advance_task(finished)
         else:
-            finished = self._admit()
+            finished.extend(self._admit())
         if self.n_occupied:
-            if self.engine.ecfg.spec_decode:
+            t_dec = time.perf_counter()
+            if self.engine.ecfg.spec_decode and not self._spec_degraded:
                 self._decode_spec(finished)
             else:
+                if self.engine.ecfg.spec_decode:
+                    self.stats.degraded_steps += 1
                 self._decode_plain(finished)
+            self._observe_launch(time.perf_counter() - t_dec)
         self.stats.wall_s += time.perf_counter() - t0
         return finished
 
@@ -1298,7 +1723,7 @@ class SlotServer:
                 self._drafter.extend(i, (t,))
             if (self.eos_id is not None and t == self.eos_id) or \
                     len(act.out) >= act.req.max_new:
-                finished.append(self._retire(i))
+                finished.append(self._retire_slot(i))
         if self.n_occupied < self.n_slots:
             # free rows received a junk append this step; re-zero their
             # counters so free slots stay inert (never flush, never grow)
@@ -1341,7 +1766,7 @@ class SlotServer:
             if self._drafter is not None:
                 self._drafter.extend(i, emitted)
             if act.done:
-                finished.append(self._retire(i))
+                finished.append(self._retire_slot(i))
         # no trailing mask_free here: decode_steps re-zeroes free-row
         # counters in-graph every iteration, and _retire resets the rows
         # freed just now, so the cache already satisfies the invariant
@@ -1493,7 +1918,7 @@ class SlotServer:
             self._drafter.extend(i, emitted)
         for i, act in enumerate(self.slots):
             if act is not None and act.done:
-                finished.append(self._retire(i))
+                finished.append(self._retire_slot(i))
 
     def run(self) -> list[Request]:
         """Drain the queue and all slots; returns every finished request."""

@@ -1,0 +1,229 @@
+"""Preemptive serving (ISSUE 8): swap-out/resume exactness, deadlines,
+cancellation, and leak-free aborts — against the REAL engine.
+
+The core claim: a preempted request's resumed greedy output is
+bit-identical to an uninterrupted run, across {xla, pallas} × {packkv,
+none} × {dense, paged, prefix}. The argument is placement-independence —
+evacuation gathers the row's exact bytes (compressed pages, residual,
+counters, calibration), restore scatters them into whatever physical pages
+the free list hands back, and attention reads the row through its page
+table either way. No forward pass runs at restore: the resume seed token
+was never cached (``_Active.cached_tokens`` counts prompt + out - 1), so
+decode continues exactly where it stopped.
+
+Also here: deadline semantics (already-expired rejected at submit,
+in-flight expiry honored within ONE scheduler step), and the regression
+that cancelling a request mid-prefill-chunk leaks no pages, refcounts or
+reservations (``debug_invariants`` asserts refcount conservation after
+every admit/retire throughout).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import SMOKES
+from repro.core.cache import PackKVConfig
+from repro.models import get_model
+from repro.serving import Engine, EngineConfig, Request, SlotServer
+
+PAGE = 128
+
+
+@pytest.fixture(scope="module")
+def smoke_setup():
+    cfg = SMOKES["llama2-7b"]
+    params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(cfg, params, policy, backend, mode, preempt=True, max_batch=2,
+            pool_pages=None):
+    paged = mode != "dense"
+    return Engine(
+        cfg, params, PackKVConfig(policy=policy),
+        EngineConfig(capacity=512, max_batch=max_batch, calib_tokens=128,
+                     decode_chunk=4, bucketed=True, bucket_unit=64,
+                     backend=backend, paged=paged, page_size=PAGE,
+                     pool_pages=pool_pages, prefix_cache=(mode == "prefix"),
+                     debug_invariants=paged, prefill_chunk_pages=1,
+                     preempt=preempt))
+
+
+def _traffic(vocab):
+    """Two long class-1 requests (they fill the table and share a 2-page
+    prefix, so a prefix-cache victim swaps out holding shared refs) plus
+    one short class-0 arrival that must preempt."""
+    r = np.random.default_rng(11)
+    sys = r.integers(0, vocab, 2 * PAGE)
+    lows = [Request(rid=i, max_new=40, priority=1,
+                    tokens=np.concatenate(
+                        [sys, r.integers(0, vocab, 40 + 13 * i)]))
+            for i in range(2)]
+    hi = Request(rid=2, max_new=6, priority=0,
+                 tokens=r.integers(0, vocab, 100))
+    return [*lows, hi]
+
+
+MODES = ("dense", "paged", "prefix")
+MATRIX = [(p, b, m) for p in ("packkv", "none") for b in ("xla", "pallas")
+          for m in MODES]
+
+
+@pytest.mark.parametrize("policy,backend,mode", MATRIX)
+def test_preempt_resume_bit_identical(smoke_setup, policy, backend, mode):
+    cfg, params = smoke_setup
+    pre = _engine(cfg, params, policy, backend, mode, preempt=True)
+    reqs = _traffic(cfg.vocab)
+    srv = SlotServer(pre)
+    srv.submit(reqs[0])
+    srv.submit(reqs[1])
+    for _ in range(8):  # both lows admitted and several tokens deep
+        srv.step()
+    srv.submit(reqs[2])  # class-0 arrival: the table is full -> swap-out
+    srv.run()
+    assert srv.stats.preemptions >= 1, "swap-out path never fired"
+    assert srv.stats.completed == 3
+    assert sum(r.n_preempts for r in srv.done.values()) \
+        == srv.stats.preemptions
+    if mode != "dense":
+        assert srv.stats.swapped_pages == srv.stats.restored_pages
+
+    # uninterrupted control: same calibrated engine config, preemption off
+    base = Engine(cfg, params, pre.pack_cfg,
+                  dataclasses.replace(pre.ecfg, preempt=False,
+                                      calibrate=False))
+    ctl = SlotServer(base)
+    for r in _traffic(cfg.vocab):
+        ctl.submit(r)
+    ctl.run()
+    assert ctl.stats.preemptions == 0
+    for rid in srv.done:
+        np.testing.assert_array_equal(srv.done[rid].output,
+                                      ctl.done[rid].output,
+                                      err_msg=f"rid {rid}")
+
+
+def test_preempt_on_page_pressure(smoke_setup):
+    """A free SLOT but no reservable pages: the class-0 arrival must swap
+    a class-1 victim out for its pages, and the victim's resumed output
+    still matches the uninterrupted run."""
+    cfg, params = smoke_setup
+    pre = _engine(cfg, params, "packkv", "xla", "paged", preempt=True,
+                  max_batch=3, pool_pages=6)
+    reqs = _traffic(cfg.vocab)  # lows reserve 3 pages each = the whole pool
+    srv = SlotServer(pre)
+    srv.submit(reqs[0])
+    srv.submit(reqs[1])
+    for _ in range(8):
+        srv.step()
+    assert srv.n_occupied == 2  # slot 2 free, zero pages available
+    srv.submit(reqs[2])
+    srv.run()
+    assert srv.stats.preemptions >= 1
+    assert srv.stats.completed == 3
+
+    base = Engine(cfg, params, pre.pack_cfg,
+                  dataclasses.replace(pre.ecfg, preempt=False,
+                                      calibrate=False))
+    ctl = SlotServer(base)
+    for r in _traffic(cfg.vocab):
+        ctl.submit(r)
+    ctl.run()
+    for rid in srv.done:
+        np.testing.assert_array_equal(srv.done[rid].output,
+                                      ctl.done[rid].output,
+                                      err_msg=f"rid {rid}")
+
+
+def test_deadline_rejected_at_submit(smoke_setup):
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params, "none", "xla", "dense", preempt=False)
+    srv = SlotServer(eng)
+    toks = np.arange(8, dtype=np.int64)
+    for bad in (0.0, -5.0):
+        with pytest.raises(ValueError, match="deadline_ms"):
+            srv.submit(Request(rid=0, max_new=4, tokens=toks,
+                               deadline_ms=bad))
+    with pytest.raises(ValueError, match="priority"):
+        srv.submit(Request(rid=0, max_new=4, tokens=toks, priority=-1))
+
+
+def test_deadline_expires_within_one_step(smoke_setup):
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params, "none", "xla", "dense", preempt=False)
+    srv = SlotServer(eng)
+    req = Request(rid=0, max_new=200, deadline_ms=1e9,
+                  tokens=np.random.default_rng(5).integers(0, cfg.vocab, 70))
+    srv.submit(req)
+    for _ in range(3):
+        srv.step()
+    assert req.status == "active" and srv.n_occupied == 1
+    n_before = len(srv.slots[0].out)
+    req.deadline_ms = 1e-6  # now long past: the NEXT step must retire it
+    out = srv.step()
+    assert out and out[0] is req
+    assert req.status == "expired"
+    assert srv.n_occupied == 0 and srv._reserved == {}
+    # partial output kept, and expiry stopped generation within one step
+    # (at most one decode launch of decode_chunk tokens after the reap ran)
+    assert n_before <= len(req.output) <= n_before + eng.ecfg.decode_chunk
+    assert srv.stats.expired == 1 and srv.stats.completed == 0
+
+
+def test_cancel_mid_prefill_chunk_leaks_nothing(smoke_setup):
+    """Regression for the retirement refactor: a cancel landing between
+    prefill chunks must release the claimed slot's reservation and leave
+    the pool whole — mid-task state holds no device pages by construction."""
+    cfg, params = smoke_setup
+    eng = _engine(cfg, params, "packkv", "xla", "prefix", preempt=True)
+    srv = SlotServer(eng)
+    long_toks = np.random.default_rng(6).integers(0, cfg.vocab, 3 * PAGE + 50)
+    req = Request(rid=0, max_new=4, tokens=long_toks)
+    srv.submit(req)
+    srv.step()  # task started: first chunk done, more to go
+    assert srv._task is not None and not srv._task.done
+    assert 0 in srv._reserved
+    req.cancel()
+    srv.step()  # reap aborts the task through the shared retirement path
+    assert srv._task is None
+    assert req.status == "cancelled" and srv.stats.cancelled == 1
+    assert srv._reserved == {} and srv.n_occupied == 0
+    assert len(req.output) == 0
+    # pool fully free again (debug_invariants asserted refcounts all along)
+    pool = srv.cache.pages
+    assert int(pool.n_free[0]) == eng.pack_cfg.pool_pages
+    assert int(np.asarray(pool.ref[0]).sum()) == 0
+    # and the server still serves: a fresh request completes normally
+    nxt = Request(rid=1, max_new=4, tokens=long_toks[: PAGE + 30])
+    srv.submit(nxt)
+    srv.run()
+    assert nxt.status == "done" and len(nxt.output) == 4
+
+
+def test_cancel_swapped_out_request(smoke_setup):
+    """A request cancelled WHILE swapped out retires from the SwapStore
+    with its partial output; the store drains and its shared pages unpin."""
+    cfg, params = smoke_setup
+    pre = _engine(cfg, params, "packkv", "xla", "paged", preempt=True)
+    reqs = _traffic(cfg.vocab)
+    srv = SlotServer(pre)
+    srv.submit(reqs[0])
+    srv.submit(reqs[1])
+    for _ in range(8):
+        srv.step()
+    srv.submit(reqs[2])
+    # step until the swap-out happens, then cancel the victim in the store
+    for _ in range(30):
+        srv.step()
+        if srv._swap is not None and len(srv._swap) > 0:
+            break
+    assert len(srv._swap) == 1
+    victim = next(r for r in (reqs[0], reqs[1]) if r.rid in srv._swap)
+    victim.cancel()
+    srv.run()
+    assert victim.status == "cancelled"
+    assert len(victim.output) > 0  # generated-so-far tokens kept
+    assert len(srv._swap) == 0
+    assert srv.stats.completed == 2 and srv.stats.cancelled == 1

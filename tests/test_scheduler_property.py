@@ -22,6 +22,17 @@ paged/dense × chunked/monolithic configurations):
     request still finishes with EXACTLY ``max_new`` tokens (multi-token
     emission never overshoots or double-counts), and every emitted token
     equals the stub's greedy pick for its slot.
+  * Priority + preemption (ISSUE 8) — admission is per-class FIFO (each
+    class's admissions happen in submit order even across preemptions and
+    chunk aborts); page conservation holds through swap-out/swap-in (an
+    evacuated row's pages return to the pool, a restored row re-pops within
+    its reservation); the SwapStore drains by the time the queue does; and
+    ``preemptions``/``cancelled``/``expired`` stats match the event log and
+    terminal statuses exactly.
+  * Fault storms (deterministic ``FaultPlan`` schedules) — pool squeezes,
+    cancel/deadline storms, chunk-boundary aborts and straggler bursts all
+    act through the same seams real traffic does, and every invariant
+    above must survive them after EVERY step.
 
 The deterministic seeded sweep always runs; the hypothesis variant widens
 the search when hypothesis is installed (CI: requirements-dev.txt).
@@ -31,6 +42,7 @@ from types import SimpleNamespace
 import numpy as np
 import pytest
 
+from repro.distributed.fault import FaultEvent, FaultPlan, StragglerMonitor
 from repro.serving import EngineConfig, Request, SlotServer
 from repro.utils import cdiv
 
@@ -160,11 +172,38 @@ class _StubEngine:
             self._pop(cache, i, self._pages_for(cache["toks"][i]) - before)
         return hat, n_accept, cache
 
+    # -- preemption (ISSUE 8) ------------------------------------------------
+    def evacuate(self, cache, slot, n_pages, n_shared=0):
+        """Swap-out: the row's pages go back to the free list, its token
+        count rides out in the mini. The scheduler's ``n_pages`` hint is
+        residual-aware (the REAL engine's flush model); the stub keeps its
+        own simpler block-aligned model, so it ignores the hint — both
+        models stay internally consistent and both are reservation-bounded."""
+        mini = {"toks": cache["toks"][slot]}
+        cache["free"] += cache["rows"][slot]
+        cache["rows"][slot] = 0
+        cache["toks"][slot] = 0
+        self.log.append(("evacuate", slot))
+        return cache, mini
 
-def _drive(rng, *, paged, chunk_pages, spec=False):
+    def restore(self, cache, slot, mini, shared_phys=(), n_pages=0,
+                n_shared=0):
+        self._pop(cache, slot, self._pages_for(mini["toks"]))
+        cache["toks"][slot] = mini["toks"]
+        self.log.append(("restore", slot))
+        return cache
+
+
+def _drive(rng, *, paged, chunk_pages, spec=False, prio=False, preempt=False,
+           fault_factory=None, straggler=None):
     """Run random traffic through SlotServer + stub; assert invariants
-    after every step against the pure-Python oracle. Returns the number of
-    verify launches (speculation cases assert the path was exercised)."""
+    after every step against the pure-Python oracle. Returns the run's
+    ``SlotStats`` so sweeps can assert a path was actually exercised.
+
+    ``prio`` draws per-request priority classes 0-2 (aging on);
+    ``preempt`` turns on swap-out preemption; ``fault_factory`` builds a
+    fresh deterministic ``FaultPlan`` per run; ``straggler`` builds a
+    decode-launch watchdog to inject."""
     page = int(rng.choice([64, 128]))
     n_slots = int(rng.integers(1, 5))
     capacity = page * int(rng.integers(2, 5))
@@ -174,12 +213,17 @@ def _drive(rng, *, paged, chunk_pages, spec=False):
                         page_size=page, pool_pages=pool, calibrate=False,
                         prefill_chunk_pages=chunk_pages, decode_chunk=1,
                         spec_decode=spec, spec_k=int(rng.integers(1, 5)),
-                        spec_backoff=int(rng.choice([0, 1, 32])))
+                        spec_backoff=int(rng.choice([0, 1, 32])),
+                        preempt=preempt, aging_steps=8 if prio else 32)
     eng = _StubEngine(ecfg, pool)
-    srv = SlotServer(eng)
+    plan = fault_factory() if fault_factory is not None else None
+    srv = SlotServer(eng, fault_plan=plan,
+                     straggler=straggler() if straggler is not None else None)
+    faulty = plan is not None
 
     n_req = int(rng.integers(1, 12))
     reqs = []
+    prio_of = {}
     for rid in range(n_req):
         plen = int(rng.integers(1, capacity))
         max_new = int(rng.integers(1, capacity + 96 - plen + 1))
@@ -188,7 +232,9 @@ def _drive(rng, *, paged, chunk_pages, spec=False):
             plen = min(plen, (pool * page) - 1)
         # first prompt token carries the rid so the stub can log FIFO order
         toks = np.full((plen,), rid, np.int64)
-        reqs.append(Request(rid=rid, max_new=max_new, tokens=toks))
+        prio_of[rid] = int(rng.integers(0, 3)) if prio else 0
+        reqs.append(Request(rid=rid, max_new=max_new, tokens=toks,
+                            priority=prio_of[rid]))
 
     while reqs or srv.queue or srv.n_occupied or srv._task is not None:
         # interleave submits with steps at random
@@ -204,8 +250,10 @@ def _drive(rng, *, paged, chunk_pages, spec=False):
         d_chk = sum(e[0] == "chunk" for e in eng.log) - chunks
         # bounded stall: an occupied table always decodes, and waits for
         # at most one bounded chunk first (monolithic mode may admit a
-        # whole prompt per slot, which is exactly the stall being fixed)
-        if occ_before:
+        # whole prompt per slot, which is exactly the stall being fixed).
+        # A reap can empty the table mid-step, so gate on occupancy at the
+        # decode point when requests can die.
+        if occ_before and (srv.n_occupied or not (faulty or preempt)):
             assert d_dec == 1, "occupied step skipped decode"
             if chunk_pages:
                 assert d_chk <= 1, "decode stalled behind >1 prefill chunk"
@@ -219,21 +267,52 @@ def _drive(rng, *, paged, chunk_pages, spec=False):
                         f"slot {slot} holds pages with no reservation"
                     assert held <= srv._reserved[slot], \
                         f"slot {slot} popped {held} > reserved"
-        # refcount conservation: free + held == pool, never negative
+        # page conservation: free + held == pool, never negative — evacuated
+        # rows' pages are back in the pool, restores re-pop within their
+        # reservation, so this holds THROUGH preemption and fault storms
         if srv.cache is not None:
             assert srv.cache["free"] + sum(srv.cache["rows"]) == pool
             assert srv.cache["free"] >= 0
 
-    # every submitted request completed with exactly max_new tokens —
-    # multi-token speculative emission must not overshoot or double-count —
-    # and every token is the slot's constant greedy pick
+    # every submitted request reached a terminal status; completed ones hold
+    # EXACTLY max_new tokens (multi-token speculative emission never
+    # overshoots or double-counts), dead ones at most their partial output
     assert len(srv.done) == n_req
+    statuses = {}
     for rid in range(n_req):
-        out = srv.done[rid].output
-        assert len(out) == srv.done[rid].max_new
+        req = srv.done[rid]
+        statuses[rid] = req.status
+        out = req.output
+        if req.status == "done":
+            assert len(out) == req.max_new
+        else:
+            assert req.status in ("cancelled", "expired")
+            assert len(out) <= req.max_new
         # token 0 is the prefill argmax (zero logits); every decoded token
-        # is the slot's constant greedy pick
-        assert len(set(out[1:])) <= 1, f"rid {rid} mixed tokens: {out}"
+        # is the slot's constant greedy pick. A preempted request may
+        # resume in a DIFFERENT slot, so its constant may change once per
+        # preemption but never more often.
+        assert len(set(out[1:])) <= 1 + req.n_preempts, \
+            f"rid {rid} mixed tokens: {out}"
+    assert srv.stats.completed == sum(s == "done" for s in statuses.values())
+    assert srv.stats.cancelled == sum(
+        s == "cancelled" for s in statuses.values())
+    assert srv.stats.expired == sum(s == "expired" for s in statuses.values())
+    assert srv.stats.completed + srv.stats.cancelled + srv.stats.expired \
+        == n_req
+    # preemption oracle: stats mirror the stub's event log; every swapped
+    # row either streamed back or died with its request (SwapStore drains)
+    evacs = sum(e[0] == "evacuate" for e in eng.log)
+    restores = sum(e[0] == "restore" for e in eng.log)
+    assert srv.stats.preemptions == evacs
+    assert restores <= evacs
+    if srv._swap is not None:
+        assert len(srv._swap) == 0, "SwapStore leaked evacuated rows"
+    if not preempt:
+        assert evacs == 0
+    # the pool is whole again once everything retired
+    if srv.cache is not None:
+        assert srv.cache["free"] == pool
     # speculation oracle: accepted <= drafted per verify launch, and the
     # stats roll-up matches the launch log
     verifies = [e for e in eng.log if e[0] == "verify"]
@@ -243,13 +322,21 @@ def _drive(rng, *, paged, chunk_pages, spec=False):
     assert srv.stats.spec_accepted == sum(e[2] for e in verifies)
     if not spec:
         assert not verifies and srv.stats.spec_launches == 0
-    # FIFO: rows were inserted in submit order. Chunked tasks log their
-    # rid on the FIRST chunk (n_ctx == 0); monolithic inserts log theirs.
+    # PER-CLASS FIFO: each class's rows were inserted in submit order, even
+    # across preemptions and chunk aborts (requeues keep original submit
+    # order within the class). Chunked tasks log their rid on the FIRST
+    # chunk (n_ctx == 0); monolithic inserts log theirs; restores re-enter
+    # without a fresh insert, so re-admissions never reorder the log.
     order = [e[1] for e in eng.log
              if e[0] in ("insert", "chunk") and e[1] is not None]
-    assert order == sorted(order), f"admission violated FIFO: {order}"
-    assert order == list(range(n_req))
-    return len(verifies)
+    for c in set(prio_of.values()):
+        sub = [rid for rid in order if prio_of[rid] == c]
+        assert sub == sorted(sub), \
+            f"class {c} admission violated FIFO: {order}"
+    if not (prio or faulty):
+        assert order == sorted(order), f"admission violated FIFO: {order}"
+        assert order == list(range(n_req))
+    return srv.stats
 
 
 CASES = [(False, 0, False), (False, 1, False), (True, 0, False),
@@ -263,9 +350,119 @@ def test_scheduler_invariants_seeded(paged, chunk_pages, spec):
     n_verify = 0
     for seed in range(25):
         n_verify += _drive(np.random.default_rng(seed), paged=paged,
-                           chunk_pages=chunk_pages, spec=spec)
+                           chunk_pages=chunk_pages, spec=spec).spec_launches
     if spec:  # the sweep must actually hit the verify path
         assert n_verify > 0
+
+
+PREEMPT_CASES = [(False, 0), (False, 1), (True, 0), (True, 1), (True, 2)]
+
+
+@pytest.mark.parametrize("paged,chunk_pages", PREEMPT_CASES)
+def test_scheduler_priority_preempt_seeded(paged, chunk_pages):
+    """Priority classes + swap-out preemption under random traffic:
+    per-class FIFO admission, page conservation through evacuate/restore,
+    SwapStore drainage and stats/log agreement (all inside ``_drive``)."""
+    preempts = 0
+    for seed in range(25):
+        preempts += _drive(np.random.default_rng(seed), paged=paged,
+                           chunk_pages=chunk_pages, prio=True,
+                           preempt=True).preemptions
+    assert preempts > 0, "sweep never exercised the swap-out path"
+
+
+def _squeeze_plan():
+    # squeeze the whole pool for a few steps, then release: admission must
+    # block (not underflow) and resume afterwards
+    return FaultPlan([FaultEvent(step=2, kind="pool_squeeze", arg=10**6),
+                      FaultEvent(step=9, kind="pool_squeeze", arg=0)])
+
+
+FAULT_CASES = [
+    ("cancel_storm",
+     lambda: FaultPlan.storm("cancel", start=3, count=4, every=2)),
+    ("deadline_storm",
+     lambda: FaultPlan.storm("deadline", start=4, count=3, every=3, arg=2)),
+    ("pool_squeeze", _squeeze_plan),
+    ("chunk_abort",
+     lambda: FaultPlan.storm("chunk_abort", start=2, count=5, every=2)),
+    ("mixed",
+     lambda: FaultPlan.storm("cancel", start=3, count=3, every=4)
+     + _squeeze_plan()
+     + FaultPlan.storm("chunk_abort", start=5, count=3, every=3)),
+]
+
+
+@pytest.mark.parametrize("name,factory", FAULT_CASES,
+                         ids=[c[0] for c in FAULT_CASES])
+def test_scheduler_fault_storms(name, factory):
+    """Deterministic fault schedules against the full priority+preemption
+    scheduler: every conservation invariant must hold after every step of
+    every storm, and every request must still reach a terminal status."""
+    died = 0
+    for seed in range(15):
+        for paged, chunk_pages in ((True, 1), (True, 2), (False, 1),
+                                   (True, 0)):
+            stats = _drive(np.random.default_rng(seed), paged=paged,
+                           chunk_pages=chunk_pages, prio=True, preempt=True,
+                           fault_factory=factory)
+            died += stats.cancelled + stats.expired
+    if name in ("cancel_storm", "deadline_storm", "mixed"):
+        assert died > 0, "storm never killed a request"
+
+
+def test_straggler_watchdog_degrades_spec():
+    """A straggler burst on the decode-launch watchdog auto-disables
+    speculative decode — graceful degradation: outputs stay exact, and the
+    mode switch is surfaced in ``SlotStats.degraded_steps``."""
+    ecfg = EngineConfig(capacity=256, max_batch=2, paged=True, page_size=64,
+                        pool_pages=8, calibrate=False, prefill_chunk_pages=1,
+                        decode_chunk=1, spec_decode=True, spec_k=2)
+    eng = _StubEngine(ecfg, 8)
+    plan = FaultPlan.storm("straggler", start=8, count=3, every=1, arg=1e3)
+    srv = SlotServer(eng, fault_plan=plan,
+                     straggler=StragglerMonitor(patience=1))
+    for rid in range(3):
+        srv.submit(Request(rid=rid, max_new=40,
+                           tokens=np.full((65,), rid, np.int64)))
+    srv.run()
+    assert srv._spec_degraded, "watchdog never excluded the straggler"
+    assert srv.stats.degraded_steps > 0
+    assert len(srv.done) == 3
+    for r in srv.done.values():
+        assert r.status == "done" and len(r.output) == r.max_new
+
+
+def _flood(aging: int) -> Request:
+    """One-slot server, endless class-0 flood, one class-2 request."""
+    ecfg = EngineConfig(capacity=128, max_batch=1, paged=False,
+                        calibrate=False, prefill_chunk_pages=0,
+                        decode_chunk=1, aging_steps=aging)
+    eng = _StubEngine(ecfg, 4)
+    srv = SlotServer(eng)
+    srv.submit(Request(rid=0, max_new=2, tokens=np.full((3,), 0, np.int64)))
+    low = Request(rid=999, max_new=2, tokens=np.full((3,), 96, np.int64),
+                  priority=2)
+    srv.submit(low)
+    for rid in range(1, 41):
+        # keep the class-0 queue non-empty: one fresh flood request a step
+        srv.submit(Request(rid=rid, max_new=2,
+                           tokens=np.full((3,), rid % 97, np.int64)))
+        srv.step()
+    return low
+
+
+def test_priority_aging_no_starvation():
+    """Aging promotes a waiting class-2 head one class per ``aging_steps``
+    steps; once promoted to class 0 its earlier submit order beats every
+    later flood arrival — delayed, never starved."""
+    assert _flood(aging=2).status == "done"
+
+
+def test_strict_priority_starves_without_aging():
+    """The control: ``aging_steps = 0`` is strict priority, and the same
+    flood starves the class-2 request indefinitely."""
+    assert _flood(aging=0).status == "queued"
 
 
 def test_scheduler_invariants_hypothesis():
@@ -277,9 +474,11 @@ def test_scheduler_invariants_hypothesis():
     @hyp.settings(max_examples=120, deadline=None,
                   suppress_health_check=list(hyp.HealthCheck))
     @hyp.given(seed=st.integers(0, 2**31 - 1), paged=st.booleans(),
-               chunk_pages=st.integers(0, 3), spec=st.booleans())
-    def prop(seed, paged, chunk_pages, spec):
+               chunk_pages=st.integers(0, 3), spec=st.booleans(),
+               prio=st.booleans(), preempt=st.booleans())
+    def prop(seed, paged, chunk_pages, spec, prio, preempt):
         _drive(np.random.default_rng(seed), paged=paged,
-               chunk_pages=chunk_pages, spec=spec)
+               chunk_pages=chunk_pages, spec=spec, prio=prio,
+               preempt=preempt)
 
     prop()
