@@ -21,6 +21,7 @@ from . import (
     bench_ragged,
     bench_repacking,
     bench_scaling,
+    bench_session,
     bench_spec,
     bench_throughput,
     bench_turning_points,
@@ -43,6 +44,7 @@ BENCHES = {
     "beyond_prefix_cache": bench_prefix.main,
     "beyond_spec_decode": bench_spec.main,
     "beyond_preemption": bench_preempt.main,
+    "beyond_session_cache": bench_session.main,
 }
 
 

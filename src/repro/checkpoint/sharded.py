@@ -89,6 +89,74 @@ def save(path: str, step: int, tree, extra: dict | None = None) -> str:
     return final
 
 
+def save_mini(path: str, tree, extra: dict | None = None) -> str:
+    """Atomic single-entry save of an evacuated mini-cache (or any small
+    pytree) into directory ``path`` — the disk spill tier of the session
+    cache rides this.
+
+    Same on-disk grammar as ``save()`` (arrays.npz of savable-dtype leaf
+    views + manifest.json + COMMIT written last, tmp-dir then rename) but
+    keyed by caller-chosen path instead of a step number, so a
+    ``SessionStore`` can name entries after session traces. ``extra``
+    must be JSON-serializable.
+    """
+    leaves, treedef = _flatten(tree)
+    parent = os.path.dirname(path) or "."
+    tmp = os.path.join(parent, f".tmp-{os.path.basename(path)}")
+    os.makedirs(tmp, exist_ok=True)
+    arrays, dtypes = {}, []
+    for i, x in enumerate(leaves):
+        a, dt = _to_savable(np.asarray(jax.device_get(x)))
+        arrays[f"leaf_{i}"] = a
+        dtypes.append(dt)
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    import hashlib
+
+    manifest = {
+        "tree_hash": hashlib.sha256(str(treedef).encode()).hexdigest()[:16],
+        "n_leaves": len(leaves),
+        "dtypes": dtypes,
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    with open(os.path.join(tmp, COMMIT), "w") as f:
+        f.write("ok")
+    if os.path.exists(path):
+        shutil.rmtree(path)
+    os.rename(tmp, path)
+    return path
+
+
+def load_mini(path: str, treedef=None):
+    """Inverse of ``save_mini``. Returns ``(tree, extra)``.
+
+    With ``treedef`` (a ``jax.tree_util`` treedef, e.g. cached by the
+    ``SessionStore`` from its first evacuation) the leaves are unflattened
+    back into the original structure and the structural fingerprint is
+    checked; with ``treedef=None`` the flat leaf list is returned —
+    enough for byte-level round-trip checks.
+    """
+    if not os.path.exists(os.path.join(path, COMMIT)):
+        raise FileNotFoundError(f"no committed mini-cache at {path}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    dtypes = manifest["dtypes"]
+    leaves = [
+        _from_savable(data[f"leaf_{i}"], dtypes[i])
+        for i in range(manifest["n_leaves"])
+    ]
+    if treedef is None:
+        return leaves, manifest["extra"]
+    import hashlib
+
+    want = hashlib.sha256(str(treedef).encode()).hexdigest()[:16]
+    if manifest.get("tree_hash") not in (None, want):
+        raise ValueError("mini-cache structure mismatch (different engine?)")
+    return treedef.unflatten(leaves), manifest["extra"]
+
+
 def latest_step(path: str) -> int | None:
     if not os.path.isdir(path):
         return None

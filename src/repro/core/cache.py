@@ -50,10 +50,13 @@ Invariants this module maintains (see docs/architecture.md for diagrams):
 from __future__ import annotations
 
 import dataclasses
+import time
+from collections import OrderedDict
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..utils import cdiv, pytree_dataclass, round_up
 from .quantization import QuantConfig
@@ -1655,3 +1658,219 @@ class SwapStore:
             for mini, _ in self._rows.values()
             for leaf in jax.tree_util.tree_leaves(mini)
         )
+
+
+class SessionStore:
+    """Voluntary multi-turn session cache: parked conversations, host-side.
+
+    Where ``SwapStore`` holds *involuntarily* evacuated rows (preemption;
+    keyed by live request id, drained the moment the victim resumes), this
+    store holds rows parked *voluntarily* at retirement so a returning
+    session skips re-prefill. Keys are the session's raw token trace
+    (prompt + generated, as int64 bytes) — a namespace structurally
+    disjoint from SwapStore's integer rids, so preemption swaps and
+    session parks can never collide. Lookup is longest-parked-trace-
+    prefix over the candidate trace lengths.
+
+    Two tiers with a capacity-bounded host tier on top:
+
+      * host RAM — ``jax.device_get`` copies of the evacuated mini-cache
+        (PackKV-compressed pages + one residual buffer, so ~10x cheaper
+        than raw KV), LRU-by-bytes against ``capacity_bytes``;
+      * disk (optional, ``disk_dir``) — LRU spill target using the
+        ``checkpoint.sharded`` savable-dtype mini serializers; without it
+        LRU victims are dropped.
+
+    ``ttl_s`` expires idle entries on both tiers (checked lazily at every
+    public call against the injectable ``clock`` — tests freeze time).
+    Scheduler metadata (including live prefix-trie node references, which
+    are unserializable by design) always stays host-side; only the mini's
+    arrays spill. Same-process only — the treedef for disk unflatten is
+    cached from the first park, not persisted.
+    """
+
+    def __init__(self, capacity_bytes: int = 256 << 20,
+                 ttl_s: Optional[float] = None,
+                 disk_dir: Optional[str] = None, clock=None):
+        self.capacity_bytes = int(capacity_bytes)
+        self.ttl_s = ttl_s
+        self.disk_dir = disk_dir
+        self.clock = clock if clock is not None else time.monotonic
+        # key -> {mini, meta, nbytes, t_used}; order == recency (LRU first)
+        self._host: OrderedDict[bytes, dict] = OrderedDict()
+        # key -> {path, meta, nbytes, t_used}
+        self._disk: OrderedDict[bytes, dict] = OrderedDict()
+        self._len_count: dict[int, int] = {}  # trace length -> #entries
+        self._treedef = None
+        self.parks = 0       # entries stored (cumulative)
+        self.hits = 0        # entries served back (cumulative)
+        self.evictions = 0   # capacity/replacement drops (entry lost)
+        self.expired = 0     # TTL / forced expiries (entry lost)
+        self.spills = 0      # host -> disk demotions
+        self.loads = 0       # disk -> caller promotions
+        self.peak_bytes = 0
+
+    # -- keys ---------------------------------------------------------------
+
+    @staticmethod
+    def key_of(trace) -> bytes:
+        return np.ascontiguousarray(np.asarray(trace, np.int64)).tobytes()
+
+    @staticmethod
+    def trace_of(key: bytes) -> np.ndarray:
+        return np.frombuffer(key, np.int64)
+
+    def _len_add(self, key: bytes, d: int) -> None:
+        n = len(key) // 8
+        c = self._len_count.get(n, 0) + d
+        assert c >= 0
+        if c:
+            self._len_count[n] = c
+        else:
+            self._len_count.pop(n, None)
+
+    # -- internals ----------------------------------------------------------
+
+    def _spill_path(self, key: bytes) -> str:
+        import hashlib
+        import os
+
+        return os.path.join(self.disk_dir,
+                            f"sess-{hashlib.sha1(key).hexdigest()}")
+
+    def _forget(self, key: bytes, counter: str) -> None:
+        """Drop ``key`` from whichever tier holds it."""
+        ent = self._host.pop(key, None)
+        if ent is None:
+            ent = self._disk.pop(key, None)
+            if ent is not None:
+                import shutil
+
+                shutil.rmtree(ent["path"], ignore_errors=True)
+        if ent is not None:
+            self._len_add(key, -1)
+            setattr(self, counter, getattr(self, counter) + 1)
+
+    def _purge(self) -> None:
+        if self.ttl_s is None:
+            return
+        now = self.clock()
+        for tier in (self._host, self._disk):
+            for key in [k for k, e in tier.items()
+                        if now - e["t_used"] > self.ttl_s]:
+                self._forget(key, "expired")
+
+    def _shrink(self) -> None:
+        """LRU-evict (or spill to disk) until the host tier fits."""
+        while self.nbytes > self.capacity_bytes and self._host:
+            key, ent = next(iter(self._host.items()))
+            if self.disk_dir is not None:
+                from ..checkpoint.sharded import save_mini
+
+                path = self._spill_path(key)
+                save_mini(path, ent["mini"])
+                del self._host[key]
+                self._disk[key] = {"path": path, "meta": ent["meta"],
+                                   "nbytes": ent["nbytes"],
+                                   "t_used": ent["t_used"]}
+                self.spills += 1
+            else:
+                self._forget(key, "evictions")
+
+    # -- public -------------------------------------------------------------
+
+    def put(self, trace, mini, meta: dict) -> None:
+        """Park a session under its token ``trace``. A re-park of the same
+        trace replaces the old entry (latest wins; the old one counts as
+        evicted)."""
+        self._purge()
+        key = self.key_of(trace)
+        if key in self._host or key in self._disk:
+            self._forget(key, "evictions")
+        host_mini = jax.device_get(mini)
+        if self._treedef is None:
+            self._treedef = jax.tree_util.tree_structure(host_mini)
+        nbytes = sum(np.asarray(leaf).nbytes
+                     for leaf in jax.tree_util.tree_leaves(host_mini))
+        self._host[key] = {"mini": host_mini, "meta": dict(meta),
+                           "nbytes": nbytes, "t_used": self.clock()}
+        self._len_add(key, +1)
+        self.parks += 1
+        self.peak_bytes = max(self.peak_bytes, self.nbytes)
+        self._shrink()
+
+    def match(self, tokens) -> Optional[bytes]:
+        """Longest parked trace that is a prefix of ``tokens`` — a PEEK
+        (``take`` claims it), so a blocked admission can retry later."""
+        self._purge()
+        if not self._len_count:
+            return None
+        toks = np.ascontiguousarray(np.asarray(tokens, np.int64))
+        for n in sorted(self._len_count, reverse=True):
+            if n > len(toks):
+                continue
+            key = toks[:n].tobytes()
+            if key in self._host or key in self._disk:
+                return key
+        return None
+
+    def meta(self, key: bytes) -> dict:
+        ent = self._host.get(key) or self._disk.get(key)
+        return ent["meta"]
+
+    def take(self, key: bytes):
+        """Claim a matched entry: remove it and return ``(mini, meta)``,
+        promoting from disk if it was spilled."""
+        ent = self._host.pop(key, None)
+        if ent is not None:
+            mini, meta = ent["mini"], ent["meta"]
+        else:
+            import shutil
+
+            from ..checkpoint.sharded import load_mini
+
+            ent = self._disk.pop(key)
+            assert self._treedef is not None
+            mini, _ = load_mini(ent["path"], self._treedef)
+            meta = ent["meta"]
+            shutil.rmtree(ent["path"], ignore_errors=True)
+            self.loads += 1
+        self._len_add(key, -1)
+        self.hits += 1
+        return mini, meta
+
+    def drop(self, key: bytes) -> None:
+        """Discard an entry that can no longer be served (e.g. its shared
+        prefix pages were evicted from the trie while it was parked)."""
+        self._forget(key, "evictions")
+
+    def expire_now(self, n: int) -> int:
+        """Force-expire the ``n`` least-recently-used entries across both
+        tiers (fault injection: ``session_expire``). Returns the count."""
+        order = sorted(
+            [(e["t_used"], k) for k, e in self._host.items()]
+            + [(e["t_used"], k) for k, e in self._disk.items()]
+        )
+        for _, key in order[:n]:
+            self._forget(key, "expired")
+        return min(n, len(order))
+
+    def traces(self, n: int):
+        """The ``n`` least-recently-used parked traces, oldest first
+        (fault injection fabricates returning sessions from these)."""
+        order = sorted(
+            [(e["t_used"], k) for k, e in self._host.items()]
+            + [(e["t_used"], k) for k, e in self._disk.items()]
+        )
+        return [self.trace_of(k) for _, k in order[:n]]
+
+    def __contains__(self, key: bytes) -> bool:
+        return key in self._host or key in self._disk
+
+    def __len__(self) -> int:
+        return len(self._host) + len(self._disk)
+
+    @property
+    def nbytes(self) -> int:
+        """Resident host-tier bytes (disk entries don't count)."""
+        return sum(e["nbytes"] for e in self._host.values())

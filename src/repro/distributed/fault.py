@@ -98,9 +98,20 @@ class FaultPlan:
         from scratch; reservation and scratch must not leak).
       * ``straggler`` — feed a synthetic ``arg``-second launch time to the
         decode-launch watchdog (drives spec-decode degradation).
+      * ``park`` — force a voluntary end-of-turn on up to ``arg`` occupied
+        slots (ascending slot order): the request retires with its partial
+        output (status ``parked``) and its cache state parks in the
+        session store when one is configured.
+      * ``resume`` — fabricate up to ``arg`` returning sessions from the
+        oldest parked traces (a short fixed continuation suffix, rids from
+        a dedicated range far above real traffic) and submit them.
+      * ``session_expire`` — force-expire up to ``arg`` parked sessions
+        (oldest first), as a TTL lapse would — drives the
+        expiry-racing-resume storms.
     """
 
-    KINDS = ("pool_squeeze", "cancel", "deadline", "chunk_abort", "straggler")
+    KINDS = ("pool_squeeze", "cancel", "deadline", "chunk_abort", "straggler",
+             "park", "resume", "session_expire")
 
     def __init__(self, events=()):
         self.events: list[FaultEvent] = sorted(events, key=lambda e: e.step)

@@ -64,6 +64,21 @@ def main() -> int:
                     "admission swaps a lower-class victim's compressed "
                     "pages to host RAM; the victim resumes bit-identically "
                     "later (docs/serving.md)")
+    ap.add_argument("--session-cache", action="store_true",
+                    help="multi-turn session cache: retiring slots park "
+                    "their compressed pages host-side; a returning session "
+                    "restores them and prefills only its new suffix "
+                    "(docs/serving.md)")
+    ap.add_argument("--session-cache-mb", type=int, default=256,
+                    help="host-RAM budget for parked sessions in MB "
+                    "(LRU-by-bytes beyond it: spill to --session-disk-dir "
+                    "or drop)")
+    ap.add_argument("--session-ttl-s", type=float, default=None,
+                    help="idle parked sessions expire after this many "
+                    "seconds (default: never)")
+    ap.add_argument("--session-disk-dir", default=None, metavar="DIR",
+                    help="disk spill tier for LRU host-tier victims "
+                    "(savable-dtype mini serializers; default: drop)")
     ap.add_argument("--priority-every", type=int, default=0, metavar="N",
                     help="demo traffic shaping: every Nth request is "
                     "class 0 (highest), the rest class 1 (0 = all class 0)")
@@ -83,6 +98,11 @@ def main() -> int:
     if not cfg.has_decode:
         raise SystemExit(f"{args.arch} is encoder-only; nothing to serve")
     api = get_model(cfg)
+    if args.session_cache and api.evacuate_slot is None:
+        raise SystemExit(
+            f"{args.arch} (family {cfg.family!r}) cannot serve "
+            "--session-cache: its recurrent slot state has no "
+            "evacuate/restore ops to park through — drop --session-cache")
     key = jax.random.PRNGKey(args.seed)
     params = api.init(key, cfg)
 
@@ -94,7 +114,11 @@ def main() -> int:
                         prefix_cache_pages=args.prefix_cache_pages,
                         prefill_chunk_pages=args.prefill_chunk_pages,
                         spec_decode=args.spec_decode, spec_k=args.spec_k,
-                        preempt=args.preempt, aging_steps=args.aging_steps)
+                        preempt=args.preempt, aging_steps=args.aging_steps,
+                        session_cache=args.session_cache,
+                        session_cache_mb=args.session_cache_mb,
+                        session_ttl_s=args.session_ttl_s,
+                        session_disk_dir=args.session_disk_dir)
     t0 = time.time()
     engine = Engine(cfg, params, pack, ecfg)
     print(f"engine built in {time.time() - t0:.1f}s; policy={args.policy}")
@@ -127,6 +151,21 @@ def main() -> int:
     dt = time.time() - t0
     print(f"{args.requests} requests, {n_tok} tokens in {dt:.1f}s "
           f"({n_tok / dt:.1f} tok/s on CPU)")
+    if args.session_cache:
+        # returning-session demo: every request comes back with a short
+        # follow-up on its full first-turn trace -> served from the park
+        t1 = time.time()
+        for rid in range(args.requests):
+            r = server.done[rid]
+            trace = np.concatenate([np.asarray(r.tokens),
+                                    np.asarray(r.output)])
+            ext = rng.integers(0, cfg.vocab, 8)
+            server.submit(Request(rid=args.requests + rid,
+                                  max_new=args.max_new,
+                                  tokens=np.concatenate([trace, ext])))
+        n2 = sum(len(r.output) for r in server.run())
+        print(f"{args.requests} returning sessions, {n2} tokens in "
+              f"{time.time() - t1:.1f}s")
     s = server.stats
     print(f"slot scheduler: {s.decode_steps} decode steps, "
           f"occupancy {s.occupancy:.2f}, {s.slot_reuses} slot reuses, "
@@ -151,6 +190,16 @@ def main() -> int:
     if args.preempt:
         print(f"preemption: {s.preemptions} swap-outs "
               f"({s.swapped_pages} pages out / {s.restored_pages} back)")
+    if args.session_cache:
+        st = server._sessions
+        print(f"session cache: {s.session_parks} parks, "
+              f"{s.session_hits}/{s.session_lookups} hits "
+              f"(rate {s.session_hit_rate:.2f}), "
+              f"{s.session_restored_pages} pages restored, "
+              f"{s.session_evictions} evicted/expired; host "
+              f"{st.nbytes / 1e6:.1f} MB resident "
+              f"(peak {st.peak_bytes / 1e6:.1f}), "
+              f"{st.spills} disk spills / {st.loads} loads")
     if s.cancelled or s.expired:
         print(f"retired early: {s.cancelled} cancelled, "
               f"{s.expired} past deadline")

@@ -50,7 +50,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..configs.base import ArchConfig
-from ..core.cache import PackKVConfig, SwapStore, calibrate_specs
+from ..core.cache import (
+    PackKVConfig,
+    SessionStore,
+    SwapStore,
+    calibrate_specs,
+)
 from ..distributed.fault import FaultPlan, StragglerMonitor
 from ..models import get_model
 
@@ -102,6 +107,17 @@ class EngineConfig:
     #   a queued request (the no-starvation bound: a class-p head competes
     #   as class 0 after p * aging_steps steps). 0 disables aging — strict
     #   priority, a permanent high-class flood then starves lower classes.
+    # voluntary multi-turn session cache (ISSUE 9; see docs/serving.md):
+    session_cache: bool = False  # park a retiring slot's compressed pages
+    #   host-side, keyed by the session's raw token trace; a returning
+    #   turn streams them back (no forward pass over restored tokens) and
+    #   ingests only its new suffix through teacher-forced decode launches
+    session_cache_mb: int = 256  # host-RAM tier budget (LRU by bytes)
+    session_ttl_s: float | None = None  # idle expiry for parked sessions
+    #   (None = parked entries never age out)
+    session_disk_dir: str | None = None  # LRU spill tier: demote host-tier
+    #   victims to disk via the checkpoint.sharded mini-cache serializers
+    #   instead of dropping them (None = evict outright)
     debug_invariants: bool = False  # assert refcount conservation after every
     #   admit/retire (device sync per check — tests/bring-up only)
 
@@ -256,12 +272,19 @@ class Engine:
                 static_argnames=("n_bucket",),
                 donate_argnames=("cache",),
             )
-        if ecfg.preempt:
+        if ecfg.session_cache and cfg.window:
+            raise ValueError(
+                "--session-cache does not support sliding-window attention "
+                f"(window={cfg.window}): evicted window tokens break the "
+                "parked-trace identity the session key relies on"
+            )
+        if ecfg.preempt or ecfg.session_cache:
             if self.api.evacuate_slot is None:
+                feature = "--preempt" if ecfg.preempt else "--session-cache"
                 raise ValueError(
-                    f"family {cfg.family!r} cannot serve --preempt: its "
+                    f"family {cfg.family!r} cannot serve {feature}: its "
                     "recurrent slot state has no evacuate/restore ops to "
-                    "swap through — drop --preempt"
+                    f"swap through — drop {feature}"
                 )
             # one compile per (live pages, shared-prefix pages) pair — the
             # same specialization granularity as prompt-length admission
@@ -563,8 +586,10 @@ class Request:
     # retired with status 'expired' at the next scheduler step (partial
     # output kept). None = no deadline.
     deadline_ms: float | None = None
-    # lifecycle: queued -> active -> done | cancelled | expired (a
-    # preempted request goes back to queued and keeps its place)
+    # lifecycle: queued -> active -> done | cancelled | expired | parked
+    # (a preempted request goes back to queued and keeps its place;
+    # 'parked' is a fault-forced voluntary end-of-turn — partial output
+    # kept, cache state parked in the session store when it is on)
     status: str = "queued"
     # latency telemetry (wall-clock seconds; filled by SlotServer):
     t_submit: float = 0.0  # stamped by submit()
@@ -631,11 +656,22 @@ class SlotStats:
     expired: int = 0  # requests retired past their deadline_ms
     # decode-launch watchdog (zeros without spec decode / watchdog):
     degraded_steps: int = 0  # decode steps run with spec decode auto-disabled
+    # session-cache telemetry (ISSUE 9; zeros when session_cache is off):
+    session_lookups: int = 0  # admissions that consulted the session store
+    session_parks: int = 0  # retiring slots parked host-side
+    session_hits: int = 0  # admissions served from a parked session
+    session_evictions: int = 0  # parked entries lost (capacity/TTL/invalid)
+    session_restored_pages: int = 0  # pool pages streamed back on hits
 
     @property
     def acceptance_rate(self) -> float:
         return self.spec_accepted / self.spec_drafted if self.spec_drafted \
             else 0.0
+
+    @property
+    def session_hit_rate(self) -> float:
+        return self.session_hits / self.session_lookups if \
+            self.session_lookups else 0.0
 
     @property
     def prefix_hit_rate(self) -> float:
@@ -652,6 +688,7 @@ class SlotStats:
             decode_tok_s=self.decode_tok_s,
             prefix_hit_rate=self.prefix_hit_rate,
             acceptance_rate=self.acceptance_rate,
+            session_hit_rate=self.session_hit_rate,
         )
         return d
 
@@ -816,15 +853,36 @@ class NGramDrafter:
 
 
 class _Active:
-    """One occupied slot: the request plus its generation state."""
+    """One occupied slot: the request plus its generation state.
 
-    __slots__ = ("req", "out", "done")
+    ``forced`` is the teacher-forced ingestion queue of a session resume
+    (the returning turn's uncached suffix tokens): while it is non-empty,
+    decode launches still append to the row's cache, but the launch argmax
+    is overridden host-side by the next forced token — suffix ingestion
+    rides the shared decode launches (no extra jitted op) and is
+    continuation-exact by construction. Forced tokens are prompt, not
+    output: nothing is emitted while the queue drains.
 
-    def __init__(self, req: Request, first_tok: int, eos_id: int | None):
+    ``base`` re-anchors the host counter mirror (``SlotServer._counters``)
+    for rows whose cache state did NOT come from prefilling their own
+    prompt (session resume, or preemption of such a row): ``(n_comp0,
+    n_resid0, cached0, out0)`` snapshotted at the anchor moment."""
+
+    __slots__ = ("req", "out", "done", "forced", "k0", "base")
+
+    def __init__(self, req: Request, first_tok: int | None,
+                 eos_id: int | None, forced=None, base=None):
         self.req = req
-        self.out = [first_tok]
-        self.done = (eos_id is not None and first_tok == eos_id) or \
-            req.max_new <= 1
+        self.forced: list[int] = list(forced) if forced else []
+        self.k0 = len(self.forced)  # forced count at the anchor
+        self.base = base
+        if first_tok is None:  # session resume: nothing emitted yet
+            self.out: list[int] = []
+            self.done = False
+        else:
+            self.out = [first_tok]
+            self.done = (eos_id is not None and first_tok == eos_id) or \
+                req.max_new <= 1
 
     @property
     def remaining(self) -> int:
@@ -835,7 +893,13 @@ class _Active:
         """Host-side mirror of this row's cache occupancy (n_comp + n_resid).
 
         The prompt is inserted at prefill; each decode step appends the
-        PREVIOUS token, so the first generated token is not yet cached."""
+        PREVIOUS token, so the first generated token is not yet cached.
+        Re-anchored rows count appends SINCE the anchor instead: every
+        drained forced token and every emitted token is one append."""
+        if self.base is not None:
+            _, _, cached0, out0 = self.base
+            return cached0 + (self.k0 - len(self.forced)) + \
+                (len(self.out) - out0)
         return len(self.req.tokens) + len(self.out) - 1
 
 
@@ -924,12 +988,27 @@ class SlotServer:
     included — through the same ``_retire_slot``/``_finish_dead`` path,
     and a ``distributed.fault.FaultPlan`` can drive all of it
     deterministically (see docs/serving.md).
+
+    SESSION CACHE (ISSUE 9; ``EngineConfig.session_cache``): multi-turn
+    traffic parks instead of discarding — when a slot retires, its
+    compressed pages, residual, counters and channel calibration are
+    evacuated (the same ``evacuate_row`` gather preemption uses) into a
+    host-RAM ``SessionStore`` keyed by the session's raw token trace
+    (LRU-by-bytes with optional disk spill + TTL; shared prefix pages
+    release their refs and are revalidated against the live trie on
+    return). A returning turn whose prompt extends a parked trace
+    restores the row with ZERO forward passes over the restored tokens
+    and ingests only its new suffix, teacher-forced through the ordinary
+    decode launches — so a session hit is bit-identical to never having
+    parked at all (the continuation-exactness bar of preemption, extended
+    across turns; see docs/serving.md).
     """
 
     def __init__(self, engine: Engine, eos_id: int | None = None,
                  drafter: NGramDrafter | None = None,
                  fault_plan: FaultPlan | None = None,
-                 straggler: StragglerMonitor | None = None):
+                 straggler: StragglerMonitor | None = None,
+                 session_store: SessionStore | None = None):
         if engine.cfg.input_mode != "tokens":
             raise ValueError(
                 f"input_mode {engine.cfg.input_mode!r} not servable per-slot "
@@ -967,6 +1046,18 @@ class SlotServer:
         # preemption: host-RAM store of evacuated rows (ISSUE 8)
         self._swap: SwapStore | None = SwapStore() if engine.ecfg.preempt \
             else None
+        # voluntary session cache: parked retiring rows (ISSUE 9; the
+        # injectable store lets tests freeze clocks / shrink capacities)
+        self._sessions: SessionStore | None = None
+        if engine.ecfg.session_cache:
+            self._sessions = session_store if session_store is not None \
+                else SessionStore(
+                    capacity_bytes=engine.ecfg.session_cache_mb << 20,
+                    ttl_s=engine.ecfg.session_ttl_s,
+                    disk_dir=engine.ecfg.session_disk_dir,
+                )
+        self._fault_rid = 1_000_000_000  # rid range for fault-fabricated
+        #   returning sessions (far above real traffic — never collides)
         self._seq = 0  # global submit stamp (FIFO order within a class)
         self._step_no = 0  # scheduler step counter (aging + fault clock)
         # deterministic fault schedule (tests/bring-up; None in production)
@@ -1208,19 +1299,170 @@ class SlotServer:
 
     def _retire_slot(self, i: int, reason: str = "done") -> Request:
         """Finish the request in slot ``i`` (reason: done | cancelled |
-        expired) and recycle the slot."""
+        expired | parked) and recycle the slot. Natural and voluntary
+        ends of turn ("done" / "parked") park the row's cache state in the
+        session store when it is on; cancelled/expired work is discarded
+        (a killed request is not a conversation that will return)."""
         act = self.slots[i]
         act.req.output = np.asarray(act.out, np.int32)
         act.req.status = reason
         self.done[act.req.rid] = act.req
-        self._release_slot(i)
+        parked = reason in ("done", "parked") and self._park_row(i)
+        # a parked row was evacuated: its pages are already back in the pool
+        self._release_slot(i, free_pages=not parked)
         if reason == "done":
             self.stats.completed += 1
         elif reason == "cancelled":
             self.stats.cancelled += 1
-        else:
+        elif reason == "expired":
             self.stats.expired += 1
         return act.req
+
+    # -- session cache: voluntary park / resume ------------------------------
+    def _park_row(self, i: int) -> bool:
+        """Park slot ``i``'s cache state in the session store at retirement.
+
+        The parked key is the row's cached token TRACE — the first
+        ``cached_tokens + 1`` tokens of prompt + generated (the +1 is the
+        pending seed, ``_last_tok``, which the cache has not appended yet).
+        That formula is exact whether the row completed, was force-parked
+        mid-generation, or was even mid-suffix-ingestion. Shared-prefix
+        pages release their refs (never copy); their trie NODE chain is
+        remembered so a resume can prove, by object identity, that the
+        index still holds the same physical pages. Returns True when the
+        row was evacuated (caller must then release with
+        ``free_pages=False``)."""
+        if self._sessions is None or self.cache is None:
+            return False
+        act = self.slots[i]
+        trace = np.concatenate([
+            np.asarray(act.req.tokens, np.int64),
+            np.asarray(act.out, np.int64),
+        ])[: act.cached_tokens + 1]
+        c, r = self._counters(act)
+        n_pages = n_shared = 0
+        if self.engine.ecfg.paged:
+            n_pages = -(-c // self.engine.ecfg.page_size)
+            n_shared = len(self._slot_shared.get(i, ()))
+        shared = tuple(self._slot_shared.get(i, ()))
+        nodes: list = []
+        if shared and self._index is not None:
+            parent = None
+            for chunk in self._index.chunks(trace)[: len(shared)]:
+                parent = self._index.descend(parent, chunk)
+                assert parent is not None  # live-shared pages can't evict
+                nodes.append(parent)
+        self.cache, mini = self.engine.evacuate(self.cache, i, n_pages,
+                                                n_shared)
+        self._sessions.put(trace, mini, dict(
+            last_tok=int(self._last_tok[i]), n_pages=n_pages,
+            n_shared=n_shared, shared=shared, nodes=tuple(nodes),
+            counters=(c, r),
+        ))
+        self.stats.session_parks += 1
+        return True
+
+    def _session_valid(self, meta: dict) -> bool:
+        """A parked entry's shared-prefix pages are servable iff the SAME
+        trie nodes still hold the SAME physical pages — parking holds no
+        device refs, so pool pressure may have evicted (or evicted and
+        rebuilt with different calibration) the chain while the session
+        was away. Object identity over the remembered node chain is the
+        airtight check: nodes die at eviction and are never resurrected."""
+        if self._index is None:
+            return False
+        node = None
+        for want, page in zip(meta["nodes"], meta["shared"]):
+            node = self._index.descend(node, want.chunk)
+            if node is not want or node.page != page:
+                return False
+        for n in meta["nodes"]:
+            self._index.touch(n)
+        return True
+
+    def _session_try(self, head: Request, slot: int) -> str:
+        """Try to serve ``head`` from a parked session.
+
+        Returns "hit" (popped + admitted into ``slot``), "blocked" (a
+        matching entry exists but its pages don't fit yet — the entry is
+        kept and the admission retries next step) or "miss" (cold path).
+        """
+        if self._sessions is None or self.cache is None:
+            return "miss"
+        while True:
+            key = self._sessions.match(head.tokens)
+            if key is None:
+                return "miss"
+            meta = self._sessions.meta(key)
+            if meta["n_shared"] and not self._session_valid(meta):
+                self._sessions.drop(key)
+                continue
+            if self.engine.ecfg.paged and not self._fit_pages(
+                    head, self._pages_needed(head) - meta["n_shared"],
+                    set(meta["shared"])):
+                return "blocked"
+            req = self._pop_head(head)
+            mini, meta = self._sessions.take(key)
+            self.stats.session_lookups += 1
+            self._session_resume(req, slot, len(key) // 8, mini, meta)
+            return "hit"
+
+    def _session_resume(self, req: Request, i: int, trace_len: int,
+                        mini, meta: dict) -> None:
+        """Re-admit a returning session: stream the parked row back into
+        slot ``i`` (shared prefix re-mapped by reference — pure data
+        movement, NO forward pass) and queue the prompt's uncached suffix
+        for teacher-forced ingestion through the decode launches. The
+        counter anchor pins ``_counters`` to the parked row's exact
+        (n_comp, n_resid) so later flush arithmetic stays a host mirror."""
+        if self.engine.ecfg.paged:
+            self._reserved[i] = self._pages_needed(req) - meta["n_shared"]
+            self.stats.pages_reserved_peak = max(
+                self.stats.pages_reserved_peak, sum(self._reserved.values())
+            )
+        self.cache = self.engine.restore(
+            self.cache, i, mini, meta["shared"],
+            n_pages=meta["n_pages"], n_shared=meta["n_shared"],
+        )
+        if meta["shared"]:
+            self._slot_shared[i] = tuple(meta["shared"])
+        c0, r0 = meta["counters"]
+        forced = [int(t) for t in np.asarray(req.tokens)[trace_len:]]
+        act = _Active(req, None, self.eos_id, forced=forced,
+                      base=(c0, r0, trace_len - 1, 0))
+        self.slots[i] = act
+        req.status = "active"
+        self._last_tok[i] = meta["last_tok"]
+        self._spec_backoff[i] = 0
+        self._spec_cooldown[i] = 0
+        if self._drafter is not None:
+            self._drafter.seed(
+                i, [int(t) for t in np.asarray(req.tokens)[:trace_len]]
+            )
+        if self._ever_used[i]:
+            self.stats.slot_reuses += 1
+        self._ever_used[i] = True
+        self.stats.admitted += 1
+        self.stats.session_hits += 1
+        self.stats.session_restored_pages += meta["n_pages"] - meta["n_shared"]
+        self._check_invariants()
+
+    def _fault_resume(self, n: int) -> None:
+        """Fabricate up to ``n`` returning sessions from the oldest parked
+        traces (fault injection: deterministic continuations — a short
+        fixed suffix, a dedicated rid range far above real traffic).
+        Entries whose continuation would not pass admission bounds are
+        skipped."""
+        if self._sessions is None:
+            return
+        for trace in self._sessions.traces(n):
+            toks = np.concatenate([trace, np.zeros((3,), np.int64)])
+            req = Request(rid=self._fault_rid, max_new=2, tokens=toks)
+            self._fault_rid += 1
+            try:
+                self.submit(req)
+            except ValueError:
+                continue
 
     # -- preemption: compressed swap-out / swap-in ---------------------------
     def _swap_out_one(self, head: Request) -> bool:
@@ -1247,17 +1489,21 @@ class SlotServer:
                                      self.slots[j].remaining, -j))
         act = self.slots[i]
         req = act.req
+        c, r = self._counters(act)
         n_pages = n_shared = 0
         if self.engine.ecfg.paged:
-            n_comp, _ = self._counters(act)
-            n_pages = -(-n_comp // self.engine.ecfg.page_size)
+            n_pages = -(-c // self.engine.ecfg.page_size)
             n_shared = len(self._slot_shared.get(i, ()))
         shared = tuple(self._slot_shared.get(i, ()))
         self.cache, mini = self.engine.evacuate(self.cache, i, n_pages,
                                                 n_shared)
+        # the counter re-anchor + forced queue make the swap meta exact for
+        # ANY row — including a session resume preempted mid-ingestion
         self._swap.put(req.rid, mini, dict(
             out=list(act.out), last_tok=int(self._last_tok[i]),
             n_pages=n_pages, n_shared=n_shared, shared=shared,
+            forced=list(act.forced),
+            base=(c, r, act.cached_tokens, len(act.out)),
         ))
         req.n_preempts += 1
         self._requeue(req)
@@ -1285,9 +1531,9 @@ class SlotServer:
         )
         if meta["shared"]:
             self._slot_shared[i] = tuple(meta["shared"])
-        act = _Active(req, meta["out"][0], self.eos_id)
+        act = _Active(req, None, self.eos_id, forced=meta["forced"],
+                      base=meta["base"])
         act.out = list(meta["out"])
-        act.done = False
         self.slots[i] = act
         req.status = "active"
         self._last_tok[i] = meta["last_tok"]
@@ -1295,8 +1541,13 @@ class SlotServer:
         self._spec_cooldown[i] = 0
         self._ever_used[i] = True
         if self._drafter is not None:
+            # the drafter mirrors the CACHED sequence + pending seed: for a
+            # row preempted mid-suffix-ingestion that is a prompt prefix,
+            # not the whole prompt (the rest drains through ``forced``)
+            n_seen = act.cached_tokens + 1 - len(act.out)
             self._drafter.seed(
-                i, list(np.asarray(req.tokens)) + list(act.out)
+                i, [int(t) for t in np.asarray(req.tokens)[:n_seen]]
+                + list(act.out)
             )
         self.stats.restored_pages += meta["n_pages"] - meta["n_shared"]
         self._check_invariants()
@@ -1344,6 +1595,11 @@ class SlotServer:
                     break
                 self._resume(self._pop_head(head), i)
                 continue
+            hit = self._session_try(head, i)
+            if hit == "hit":
+                continue
+            if hit == "blocked":
+                break
             match_pages: list[int] = []
             match_perms = None
             if self._index is not None and self.cache is not None:
@@ -1355,6 +1611,8 @@ class SlotServer:
                 if not self._fit_pages(head, need_new, set(match_pages)):
                     break
             req = self._pop_head(head)
+            if self._sessions is not None:
+                self.stats.session_lookups += 1  # cold admission == miss
             if self.cache is None:
                 self.cache = self.engine.alloc_slot_cache()
             if paged:
@@ -1429,6 +1687,10 @@ class SlotServer:
                 return None
             self._resume(self._pop_head(head), slot)
             return None
+        if self._session_try(head, slot) != "miss":
+            # hit: resumed (a restore is one scatter, not a prefill);
+            # blocked: the parked entry waits for pages — either way no task
+            return None
         match_pages: list[int] = []
         match_perms = None
         if self._index is not None and self.cache is not None:
@@ -1438,6 +1700,8 @@ class SlotServer:
             if not self._fit_pages(head, need_new, set(match_pages)):
                 return None
         req = self._pop_head(head)
+        if self._sessions is not None:
+            self.stats.session_lookups += 1  # cold admission == miss
         if self.cache is None:
             self.cache = self.engine.alloc_slot_cache()
         if self.engine.ecfg.paged:
@@ -1536,6 +1800,12 @@ class SlotServer:
         occupied = [a for a in self.slots if a is not None]
         n_steps = max(1, min(self.engine.ecfg.decode_chunk,
                              min(a.remaining for a in occupied)))
+        if any(a.forced for a in occupied):
+            # teacher-forced suffix ingestion overrides the launch argmax
+            # from the HOST — a multi-step in-graph chunk would feed the
+            # model its own (wrong) token, so ingesting steps go one at a
+            # time (the other rows still decode usefully in the launch)
+            n_steps = 1
         n_max = max(a.cached_tokens for a in occupied) + n_steps
         return n_steps, self.engine.bucket_for(n_max)
 
@@ -1626,11 +1896,12 @@ class SlotServer:
             out.append(self._task.req)
         return out
 
-    def _apply_faults(self) -> None:
+    def _apply_faults(self, finished: list[Request]) -> None:
         """Fire this step's scheduled faults (see ``distributed.fault.
         FaultPlan`` for kind semantics). Faults act through the same seams
-        real traffic does — cancel flags, deadline rewrites, requeues — so
-        every invariant the scheduler maintains must survive them."""
+        real traffic does — cancel flags, deadline rewrites, requeues,
+        forced end-of-turn parks — so every invariant the scheduler
+        maintains must survive them."""
         if self._faults is None:
             return
         for ev in self._faults.at(self._step_no):
@@ -1650,6 +1921,21 @@ class SlotServer:
                     self._requeue(req)  # prefill restarts from scratch
             elif ev.kind == "straggler":
                 self._observe_launch(float(ev.arg))
+            elif ev.kind == "park":
+                # voluntary end-of-turn mid-generation: the user stopped
+                # typing — retire with the partial output, park the cache
+                n = max(1, int(ev.arg))
+                for i, act in enumerate(self.slots):
+                    if n == 0:
+                        break
+                    if act is not None:
+                        finished.append(self._retire_slot(i, "parked"))
+                        n -= 1
+            elif ev.kind == "resume":
+                self._fault_resume(max(1, int(ev.arg)))
+            elif ev.kind == "session_expire":
+                if self._sessions is not None:
+                    self._sessions.expire_now(max(1, int(ev.arg)))
 
     def _observe_launch(self, dt: float) -> None:
         """Feed one decode-launch wall time to the straggler watchdog; a
@@ -1673,7 +1959,7 @@ class SlotServer:
         t0 = time.perf_counter()
         self._step_no += 1
         finished: list[Request] = []
-        self._apply_faults()
+        self._apply_faults(finished)
         self._reap(finished)
         if self.engine.ecfg.prefill_chunk_pages > 0:
             self._advance_task(finished)
@@ -1688,6 +1974,10 @@ class SlotServer:
                     self.stats.degraded_steps += 1
                 self._decode_plain(finished)
             self._observe_launch(time.perf_counter() - t_dec)
+        if self._sessions is not None:  # mirror store-side eviction counts
+            self.stats.session_evictions = (
+                self._sessions.evictions + self._sessions.expired
+            )
         self.stats.wall_s += time.perf_counter() - t0
         return finished
 
@@ -1714,8 +2004,20 @@ class SlotServer:
             if act is None:
                 continue
             self.stats.occupied_slot_steps += 1
+            if act.forced:
+                # teacher-forced suffix ingestion (session resume): the
+                # launch cached the previous token; the argmax is
+                # overridden by the next already-known prompt token —
+                # nothing is emitted, no EOS/max_new bookkeeping applies
+                t = act.forced.pop(0)
+                self._last_tok[i] = t
+                if self._drafter is not None:
+                    self._drafter.extend(i, (t,))
+                continue
             t = int(nxt[i])
             act.out.append(t)
+            if act.req.t_first is None:  # first real token of a session hit
+                act.req.t_first = now
             act.req.token_times.append(now)
             self._last_tok[i] = t
             self.stats.tokens_out += 1
@@ -1751,11 +2053,24 @@ class SlotServer:
         for i, act in enumerate(self.slots):
             if act is None:
                 continue
+            if act.forced:
+                # teacher-forced suffix ingestion (session resume): the
+                # chunk plan pins n_steps to 1 while any row has forced
+                # tokens pending, so exactly one append landed — override
+                # the argmax with the already-known prompt token
+                if n_exec:
+                    t = act.forced.pop(0)
+                    self._last_tok[i] = t
+                    if self._drafter is not None:
+                        self._drafter.extend(i, (t,))
+                continue
             emitted = []
             for s in range(n_exec):
                 t = int(toks[s, i])
                 emitted.append(t)
                 act.out.append(t)
+                if act.req.t_first is None:  # first real token of a hit
+                    act.req.t_first = now
                 act.req.token_times.append(now)
                 self._last_tok[i] = t
                 self.stats.tokens_out += 1
@@ -1779,11 +2094,20 @@ class SlotServer:
         block (``n_comp = Lb``), then each cached decode token appends one
         residual slot with a block flush whenever the residual hits R at
         append start (paged rows stop flushing once the compressed region
-        is at capacity, exactly ``core.cache.append_token``'s guard)."""
+        is at capacity, exactly ``core.cache.append_token``'s guard).
+
+        Re-anchored rows (session resume, or a preemption of one) start
+        from the anchor's exact ``(n_comp, n_resid)`` snapshot and apply
+        the same append recurrence to the tokens cached since — the
+        closed-form flush count is anchor-independent."""
         pack = self.engine.pack_cfg
-        S = len(act.req.tokens)
-        lb = (S // pack.block) * pack.block
-        r = S - lb + len(act.out) - 1  # residual had no flush ever happened
+        if act.base is not None:
+            lb, r0, cached0, _ = act.base
+            r = r0 + (act.cached_tokens - cached0)
+        else:
+            S = len(act.req.tokens)
+            lb = (S // pack.block) * pack.block
+            r = S - lb + len(act.out) - 1  # residual had no flush ever fired
         f = 0
         if r > pack.residual:  # flushes fire as soon as r crosses R
             f = -(-(r - pack.residual) // pack.block)
@@ -1816,6 +2140,8 @@ class SlotServer:
             if act is None:
                 continue
             toks[i, 0] = self._last_tok[i]
+            if act.forced:
+                continue  # suffix ingestion: seed-only, next token is known
             if self._spec_cooldown[i] > 0:
                 self._spec_cooldown[i] -= 1
                 continue
@@ -1886,6 +2212,14 @@ class SlotServer:
             if act is None:
                 continue
             self.stats.occupied_slot_steps += 1
+            if act.forced:
+                # teacher-forced suffix ingestion: the row rode the verify
+                # launch seed-only (lens == 1, its seed append committed);
+                # the model's next token is overridden by the known one
+                t = act.forced.pop(0)
+                self._last_tok[i] = t
+                self._drafter.extend(i, (t,))
+                continue
             m = int(n_accept[i])  # accepted drafts (in-graph rule)
             kb = int(lens[i]) - 1
             self.stats.spec_drafted += kb
@@ -1908,6 +2242,8 @@ class SlotServer:
                 t = int(hat[i, j])
                 emitted.append(t)
                 act.out.append(t)
+                if act.req.t_first is None:  # first real token of a hit
+                    act.req.t_first = now
                 act.req.token_times.append(now)
                 self._last_tok[i] = t
                 self.stats.tokens_out += 1

@@ -33,15 +33,25 @@ paged/dense × chunked/monolithic configurations):
     cancel/deadline storms, chunk-boundary aborts and straggler bursts all
     act through the same seams real traffic does, and every invariant
     above must survive them after EVERY step.
+  * Session cache (ISSUE 9) — every retirement-park shows up in the
+    evacuation log (``evacuations == preemptions + session_parks``);
+    parked entries hold host BYTES, never pool pages, so page
+    conservation is unchanged; fault-fabricated returning sessions
+    (``resume`` events) admit as hits (restore, no insert) or fall back
+    cold without disturbing per-class FIFO of first admissions; expiry
+    racing a resume degrades to a cold admission, never a crash or leak.
 
 The deterministic seeded sweep always runs; the hypothesis variant widens
-the search when hypothesis is installed (CI: requirements-dev.txt).
+the search when hypothesis is installed (CI: requirements-dev.txt;
+``HYPOTHESIS_MAX_EXAMPLES`` raises the example count on the nightly lane).
 """
+import os
 from types import SimpleNamespace
 
 import numpy as np
 import pytest
 
+from repro.core.cache import SessionStore
 from repro.distributed.fault import FaultEvent, FaultPlan, StragglerMonitor
 from repro.serving import EngineConfig, Request, SlotServer
 from repro.utils import cdiv
@@ -195,15 +205,16 @@ class _StubEngine:
 
 
 def _drive(rng, *, paged, chunk_pages, spec=False, prio=False, preempt=False,
-           fault_factory=None, straggler=None):
+           session=False, fault_factory=None, straggler=None):
     """Run random traffic through SlotServer + stub; assert invariants
     after every step against the pure-Python oracle. Returns the run's
     ``SlotStats`` so sweeps can assert a path was actually exercised.
 
     ``prio`` draws per-request priority classes 0-2 (aging on);
-    ``preempt`` turns on swap-out preemption; ``fault_factory`` builds a
-    fresh deterministic ``FaultPlan`` per run; ``straggler`` builds a
-    decode-launch watchdog to inject."""
+    ``preempt`` turns on swap-out preemption; ``session`` turns on the
+    voluntary session cache (every natural retirement parks);
+    ``fault_factory`` builds a fresh deterministic ``FaultPlan`` per run;
+    ``straggler`` builds a decode-launch watchdog to inject."""
     page = int(rng.choice([64, 128]))
     n_slots = int(rng.integers(1, 5))
     capacity = page * int(rng.integers(2, 5))
@@ -214,7 +225,8 @@ def _drive(rng, *, paged, chunk_pages, spec=False, prio=False, preempt=False,
                         prefill_chunk_pages=chunk_pages, decode_chunk=1,
                         spec_decode=spec, spec_k=int(rng.integers(1, 5)),
                         spec_backoff=int(rng.choice([0, 1, 32])),
-                        preempt=preempt, aging_steps=8 if prio else 32)
+                        preempt=preempt, session_cache=session,
+                        aging_steps=8 if prio else 32)
     eng = _StubEngine(ecfg, pool)
     plan = fault_factory() if fault_factory is not None else None
     srv = SlotServer(eng, fault_plan=plan,
@@ -277,7 +289,8 @@ def _drive(rng, *, paged, chunk_pages, spec=False, prio=False, preempt=False,
     # every submitted request reached a terminal status; completed ones hold
     # EXACTLY max_new tokens (multi-token speculative emission never
     # overshoots or double-counts), dead ones at most their partial output
-    assert len(srv.done) == n_req
+    # (fault-fabricated returning sessions add done entries past n_req)
+    assert len(srv.done) >= n_req if session else len(srv.done) == n_req
     statuses = {}
     for rid in range(n_req):
         req = srv.done[rid]
@@ -286,29 +299,43 @@ def _drive(rng, *, paged, chunk_pages, spec=False, prio=False, preempt=False,
         if req.status == "done":
             assert len(out) == req.max_new
         else:
-            assert req.status in ("cancelled", "expired")
+            assert req.status in ("cancelled", "expired", "parked")
             assert len(out) <= req.max_new
         # token 0 is the prefill argmax (zero logits); every decoded token
         # is the slot's constant greedy pick. A preempted request may
         # resume in a DIFFERENT slot, so its constant may change once per
-        # preemption but never more often.
+        # preemption but never more often. (A session HIT emits only slot
+        # constants — no prefill argmax — so the bound still holds.)
         assert len(set(out[1:])) <= 1 + req.n_preempts, \
             f"rid {rid} mixed tokens: {out}"
-    assert srv.stats.completed == sum(s == "done" for s in statuses.values())
+    all_done = list(srv.done.values())
+    n_parked = sum(r.status == "parked" for r in all_done)
+    assert srv.stats.completed == sum(r.status == "done" for r in all_done)
     assert srv.stats.cancelled == sum(
-        s == "cancelled" for s in statuses.values())
-    assert srv.stats.expired == sum(s == "expired" for s in statuses.values())
+        r.status == "cancelled" for r in all_done)
+    assert srv.stats.expired == sum(r.status == "expired" for r in all_done)
     assert srv.stats.completed + srv.stats.cancelled + srv.stats.expired \
-        == n_req
-    # preemption oracle: stats mirror the stub's event log; every swapped
-    # row either streamed back or died with its request (SwapStore drains)
+        + n_parked == len(all_done)
+    if not session:
+        assert n_parked == 0
+    # preemption + session oracle: every evacuation in the stub's log is a
+    # swap-out or a retirement park, every swapped row either streamed
+    # back or died with its request (SwapStore drains; parked entries may
+    # legitimately outlive the run — they hold host bytes, not pages)
     evacs = sum(e[0] == "evacuate" for e in eng.log)
     restores = sum(e[0] == "restore" for e in eng.log)
-    assert srv.stats.preemptions == evacs
+    assert srv.stats.preemptions + srv.stats.session_parks == evacs
     assert restores <= evacs
     if srv._swap is not None:
         assert len(srv._swap) == 0, "SwapStore leaked evacuated rows"
-    if not preempt:
+    if srv._sessions is not None:
+        # store counters are self-consistent: everything parked was served
+        # back, evicted/expired, or still resident
+        st = srv._sessions
+        assert st.parks == st.hits + st.evictions + st.expired + len(st)
+        assert srv.stats.session_parks == st.parks
+        assert srv.stats.session_hits == st.hits
+    if not (preempt or session):
         assert evacs == 0
     # the pool is whole again once everything retired
     if srv.cache is not None:
@@ -329,6 +356,15 @@ def _drive(rng, *, paged, chunk_pages, spec=False, prio=False, preempt=False,
     # without a fresh insert, so re-admissions never reorder the log.
     order = [e[1] for e in eng.log
              if e[0] in ("insert", "chunk") and e[1] is not None]
+    if session:
+        # a fault-fabricated resume that MISSES re-prefills cold and logs
+        # the original rid again (the stub keys the log on tokens[0], and
+        # a fabricated session's trace starts with the original prompt).
+        # First admissions must still be per-class FIFO; re-walks may
+        # interleave anywhere.
+        seen: set = set()
+        order = [rid for rid in order
+                 if not (rid in seen or seen.add(rid))]
     for c in set(prio_of.values()):
         sub = [rid for rid in order if prio_of[rid] == c]
         assert sub == sorted(sub), \
@@ -411,6 +447,55 @@ def test_scheduler_fault_storms(name, factory):
         assert died > 0, "storm never killed a request"
 
 
+SESSION_CASES = [
+    # voluntary mid-flight parks: rows retire as "parked", their bytes move
+    # host-side, and the pool is whole after every step
+    ("park_storm",
+     lambda: FaultPlan.storm("park", start=2, count=5, every=2)),
+    # parked sessions come back: fabricated returning requests must admit
+    # as session hits (restore, no insert) or fall back to a cold prefill
+    ("park_resume",
+     lambda: FaultPlan.storm("park", start=2, count=4, every=3)
+     + FaultPlan.storm("resume", start=4, count=4, every=3)),
+    # a returning session under a squeezed pool must block, not underflow,
+    # and stream back once the squeeze lifts
+    ("resume_pressure",
+     lambda: FaultPlan.storm("park", start=2, count=3, every=2)
+     + FaultPlan.storm("resume", start=5, count=3, every=2)
+     + FaultPlan([FaultEvent(step=6, kind="pool_squeeze", arg=10**6),
+                  FaultEvent(step=12, kind="pool_squeeze", arg=0)])),
+    # expiry racing a resume: the store may expire an entry the very step a
+    # returning session arrives — it must degrade to a cold admission
+    ("expiry_race",
+     lambda: FaultPlan.storm("park", start=2, count=4, every=2)
+     + FaultPlan.storm("session_expire", start=5, count=4, every=2)
+     + FaultPlan.storm("resume", start=5, count=4, every=2)),
+]
+
+
+@pytest.mark.parametrize("name,factory", SESSION_CASES,
+                         ids=[c[0] for c in SESSION_CASES])
+def test_scheduler_session_storms(name, factory):
+    """Deterministic park/resume/expire schedules against the session-cache
+    scheduler: free+held == pool after every step, evacuations reconcile
+    with parks+preemptions, and the session store's own counters balance
+    (parks == hits + evictions + expired + resident) — across paged/dense,
+    chunked/monolithic prefill, and preemption on/off."""
+    parks = hits = 0
+    for seed in range(15):
+        for paged, chunk_pages, preempt in ((True, 1, True), (True, 2, False),
+                                            (False, 1, True), (True, 0, False)):
+            stats = _drive(np.random.default_rng(seed), paged=paged,
+                           chunk_pages=chunk_pages, prio=True,
+                           preempt=preempt, session=True,
+                           fault_factory=factory)
+            parks += stats.session_parks
+            hits += stats.session_hits
+    assert parks > 0, "storm never parked a session"
+    if name == "park_resume":
+        assert hits > 0, "resume storm never produced a session hit"
+
+
 def test_straggler_watchdog_degrades_spec():
     """A straggler burst on the decode-launch watchdog auto-disables
     speculative decode — graceful degradation: outputs stay exact, and the
@@ -471,14 +556,16 @@ def test_scheduler_invariants_hypothesis():
     hyp = pytest.importorskip("hypothesis")
     st = pytest.importorskip("hypothesis.strategies")
 
-    @hyp.settings(max_examples=120, deadline=None,
-                  suppress_health_check=list(hyp.HealthCheck))
+    @hyp.settings(
+        max_examples=int(os.environ.get("HYPOTHESIS_MAX_EXAMPLES", "120")),
+        deadline=None, suppress_health_check=list(hyp.HealthCheck))
     @hyp.given(seed=st.integers(0, 2**31 - 1), paged=st.booleans(),
                chunk_pages=st.integers(0, 3), spec=st.booleans(),
-               prio=st.booleans(), preempt=st.booleans())
-    def prop(seed, paged, chunk_pages, spec, prio, preempt):
+               prio=st.booleans(), preempt=st.booleans(),
+               session=st.booleans())
+    def prop(seed, paged, chunk_pages, spec, prio, preempt, session):
         _drive(np.random.default_rng(seed), paged=paged,
                chunk_pages=chunk_pages, spec=spec, prio=prio,
-               preempt=preempt)
+               preempt=preempt, session=session)
 
     prop()

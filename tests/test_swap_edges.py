@@ -1,0 +1,172 @@
+"""SwapStore / evacuation edge cases (ISSUE 9 satellite).
+
+Host-only unit tests over the scheduler stub from the property suite —
+the seams exercised here are exactly the ones the session cache leans on:
+
+  * duplicate-rid put is a hard error (a rid can be swapped out at most
+    once; re-swapping after a resume is legal);
+  * pages pinned only through a swapped-out row's metadata
+    (``_live_shared``) survive prefix-index eviction until the row dies,
+    then become reclaimable;
+  * a victim evacuated by a chunked admission stays host-side across the
+    whole multi-step prefill window (page conservation holds while the
+    SwapStore and an in-flight chunk task overlap) and resumes exactly;
+  * a parked session restores into a reservation SMALLER than its
+    original turn's (turn 2 may promise far fewer new tokens) — the
+    restore pops only the parked pages, never the stale worst case.
+"""
+import numpy as np
+import pytest
+
+from test_scheduler_property import _StubEngine
+
+from repro.core.cache import SwapStore
+from repro.serving import EngineConfig, Request, SlotServer
+from repro.serving.engine import PrefixIndex
+
+
+def test_swapstore_duplicate_rid():
+    """One resident entry per rid: a duplicate put asserts instead of
+    silently clobbering a live evacuated row; pop -> put (a second
+    preemption after a resume) is legal; drop is idempotent."""
+    st = SwapStore()
+    mini = {"pages": np.zeros((4, 8), np.uint8)}
+    st.put(7, mini, {"shared": ()})
+    with pytest.raises(AssertionError):
+        st.put(7, mini, {"shared": ()})
+    got, meta = st.pop(7)
+    assert 7 not in st and meta == {"shared": ()}
+    assert np.array_equal(got["pages"], mini["pages"])
+    st.put(7, mini, {"shared": ()})  # re-swap after resume
+    st.drop(7)
+    st.drop(7)  # already gone: no-op
+    assert len(st) == 0
+    assert st.swapped_out == 2 and st.swapped_in == 1
+    assert st.nbytes == 0 and st.peak_bytes == 32
+
+
+class _IndexStubEngine(_StubEngine):
+    """Stub + the index-release seam ``_evict_to_fit`` calls."""
+
+    def index_release(self, cache, ids):
+        cache["free"] += len(ids)
+        for p in ids:
+            self.released.append(int(p))
+        return cache
+
+    def __init__(self, ecfg, pool_pages):
+        super().__init__(ecfg, pool_pages)
+        self.released = []
+
+
+def test_live_shared_pin_survives_index_eviction():
+    """A swapped-out row's shared pages are pinned by metadata alone (its
+    slot released the device refs at evacuation). Index eviction must
+    never reclaim them while the row is host-side; once the row dies the
+    pin lifts and the same page is reclaimable."""
+    ecfg = EngineConfig(capacity=256, max_batch=2, paged=True, page_size=64,
+                        pool_pages=4, page_watermark=0, calibrate=False,
+                        prefill_chunk_pages=0, decode_chunk=1, preempt=True)
+    eng = _IndexStubEngine(ecfg, 4)
+    srv = SlotServer(eng)
+    srv.cache = eng.alloc_slot_cache()
+    # hand-build the host state: the index holds refs on pages 3 and 5,
+    # page 5 is also the shared prefix of a swapped-out request
+    srv._index = PrefixIndex(ecfg.page_size)
+    chunks = srv._index.chunks(np.arange(2 * ecfg.page_size))
+    srv._index.insert(None, chunks[0], 5)
+    srv._index.insert(None, chunks[1], 3)
+    srv.cache["free"] -= 2  # the refs the index notionally holds
+    srv._swap.put(9, {"toks": 64},
+                  {"shared": (5,), "n_pages": 1, "n_shared": 1,
+                   "out": [1], "last_tok": 1, "forced": [],
+                   "base": (64, 0, 64, 1)})
+    assert srv._live_shared() == {5}
+    # avail = 4 - 2 held = 2; asking for 3 forces ONE eviction — it must
+    # be page 3 (page 5 is pinned), and asking for 4 must then block
+    assert srv._evict_to_fit(3, set())
+    assert eng.released == [3] and srv._index.pages == {5}
+    assert not srv._evict_to_fit(4, set()), "evicted a pinned shared page"
+    assert srv._index.pages == {5}
+    # the swapped row dies -> pin lifts -> page 5 is reclaimable
+    srv._swap.drop(9)
+    assert srv._live_shared() == set()
+    assert srv._evict_to_fit(4, set())
+    assert eng.released == [3, 5] and srv._index.n_held == 0
+    assert srv.stats.prefix_evictions == 2
+    assert srv.cache["free"] == 4
+
+
+def test_evacuation_overlaps_chunked_prefill():
+    """A chunked admission that evacuates a victim at task start leaves the
+    victim host-side for the WHOLE multi-step prefill window: conservation
+    holds while the SwapStore and the in-flight task overlap, and the
+    victim resumes to exactly ``max_new`` tokens."""
+    page, pool = 64, 5
+    ecfg = EngineConfig(capacity=192, max_batch=2, paged=True, page_size=page,
+                        pool_pages=pool, page_watermark=0, calibrate=False,
+                        prefill_chunk_pages=1, decode_chunk=1, preempt=True,
+                        aging_steps=0)
+    eng = _StubEngine(ecfg, pool)
+    srv = SlotServer(eng)
+    # A: low class, single-chunk prompt (fused insert), 3-page reservation
+    srv.submit(Request(rid=0, max_new=100, tokens=np.zeros((64,), np.int64),
+                       priority=2))
+    srv.step()
+    assert srv.n_occupied == 1 and not srv._swap
+    # B: high class, 3-chunk prompt; needs 3 pages > 2 avail -> evacuates A
+    srv.submit(Request(rid=1, max_new=62,
+                       tokens=np.ones((130,), np.int64), priority=0))
+    overlap = 0
+    while srv.queue or srv.n_occupied or srv._task is not None:
+        srv.step()
+        if srv._task is not None and len(srv._swap) > 0:
+            overlap += 1
+        assert srv.cache["free"] + sum(srv.cache["rows"]) == pool
+        assert sum(srv._reserved.values()) <= pool
+    assert overlap >= 2, "victim never sat host-side across chunk steps"
+    assert srv.stats.preemptions == 1 and len(srv._swap) == 0
+    a, b = srv.done[0], srv.done[1]
+    assert a.status == "done" and len(a.output) == 100 and a.n_preempts == 1
+    assert b.status == "done" and len(b.output) == 62
+    assert srv.cache["free"] == pool
+
+
+def test_session_restore_into_smaller_reservation():
+    """Turn 1 parks under a WORST-CASE reservation (large ``max_new``);
+    the returning turn promises one token, so its reservation is smaller
+    than the original. The restore must pop only the parked pages and stay
+    within the smaller bound — it may not assume turn 1's worst case."""
+    page, pool = 64, 6
+    ecfg = EngineConfig(capacity=256, max_batch=1, paged=True, page_size=page,
+                        pool_pages=pool, page_watermark=0, calibrate=False,
+                        prefill_chunk_pages=0, decode_chunk=1,
+                        session_cache=True)
+    eng = _StubEngine(ecfg, pool)
+    # slot 0's greedy constant is 1 -> eos_id=1 ends turn 1 after two
+    # tokens, far short of its 100-token worst case
+    srv = SlotServer(eng, eos_id=1)
+    prompt = np.zeros((70,), np.int64)
+    srv.submit(Request(rid=0, max_new=100, tokens=prompt))
+    srv.run()
+    out1 = list(srv.done[0].output)
+    assert len(out1) == 2, "turn 1 should have stopped at eos"
+    assert srv.stats.session_parks == 1 and srv.cache["free"] == pool
+    orig_reservation = -(-min(256, 70 + 100) // page)
+    assert orig_reservation == 3  # sanity: worst case of turn 1
+    # turn 2: trace + one fresh token, ONE new token promised -> the new
+    # reservation is STRICTLY smaller than turn 1's worst case
+    trace = np.concatenate([prompt, np.asarray(out1, np.int64)])
+    srv.submit(Request(rid=0, max_new=1,
+                       tokens=np.concatenate([trace, [5]])))
+    srv.step()
+    assert srv.stats.session_hits == 1
+    new_res = srv._reserved.get(0)
+    assert new_res is not None and new_res < orig_reservation
+    held = srv.cache["rows"][0]
+    assert held <= new_res, f"restore popped {held} > reserved {new_res}"
+    while srv.queue or srv.n_occupied or srv._task is not None:
+        srv.step()
+        assert srv.cache["free"] + sum(srv.cache["rows"]) == pool
+    assert srv.done[0].status == "done" and len(srv.done[0].output) == 1
+    assert srv.cache["free"] == pool
