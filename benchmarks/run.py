@@ -22,6 +22,7 @@ from . import (
     bench_repacking,
     bench_scaling,
     bench_session,
+    bench_sharded,
     bench_spec,
     bench_throughput,
     bench_turning_points,
@@ -45,7 +46,16 @@ BENCHES = {
     "beyond_spec_decode": bench_spec.main,
     "beyond_preemption": bench_preempt.main,
     "beyond_session_cache": bench_session.main,
+    "beyond_sharded_serving": bench_sharded.main,
 }
+
+
+def _print_suites(stream, indent: str = "") -> None:
+    """The ONE rendering of the suite registry: ``--list`` and the
+    unknown-``--only`` error both call this, so they cannot drift when a
+    suite is added."""
+    for name in BENCHES:
+        print(f"{indent}{name}", file=stream)
 
 
 def main() -> int:
@@ -56,14 +66,12 @@ def main() -> int:
                     help="print registered suite names and exit")
     args = ap.parse_args()
     if args.list:
-        for name in BENCHES:
-            print(name)
+        _print_suites(sys.stdout)
         return 0
     if args.only and not any(args.only in name for name in BENCHES):
         print(f"--only {args.only!r} matches no registered suite; "
               f"known suites:", file=sys.stderr)
-        for name in BENCHES:
-            print(f"  {name}", file=sys.stderr)
+        _print_suites(sys.stderr, indent="  ")
         return 2
     results = {}
     for name, fn in BENCHES.items():

@@ -197,9 +197,63 @@ def batch_specs(batch: dict, mesh: Mesh):
 
 _CTX_LAST = {"payload", "mins", "shifts", "scale", "zero"}  # context dim last
 
+# cache leaves whose trailing dims carry a KV-head axis (serving lanes)
+_HEAD_LEAVES = _CTX_LAST | {"raw_k", "raw_v", "resid_k", "resid_v", "chan_perm"}
+# leaves stored pool-major when paged: [lead.., H_kv, pool_pages, ...]
+# (no batch dim — the page table maps rows to pages)
+_POOL_LEAVES = _CTX_LAST | {"raw_k", "raw_v"}
+# the replicated page ledger + per-row counters: the host scheduler's
+# single source of truth, identical on every device by construction
+_LEDGER = {"n_comp", "n_resid", "pos", "step", "page_table", "free",
+           "n_free", "ref"}
+
+
+def cache_leaf_spec(names: list[str], shape, mesh: Mesh, *, n_lead: int,
+                    dp=(), ctx_axis: str | None = None,
+                    head_axis: str | None = None, paged: bool = False) -> P:
+    """One leaf-path -> PartitionSpec rule shared by training
+    (``cache_specs``: batch -> DP, context -> 'model') and serving
+    (``serving_cache_specs``: KV-head -> 'kv', ledger replicated).
+
+    names: path component names ending in the leaf field name; n_lead:
+    stacked leading dims before batch (layers); dp / ctx_axis / head_axis:
+    the axes each role maps to (empty/None = that role stays replicated);
+    paged: the cache stores ``_POOL_LEAVES`` pool-major. Every rule is
+    divisibility-checked via ``spec_with_fallback``.
+    """
+    leaf_name = names[-1]
+    nd = len(shape)
+    want: list = [None] * nd
+    if leaf_name in _LEDGER:
+        return P(*want)
+    # how many leading stacked dims (layers/groups/2-subblocks)?
+    lead = min(n_lead + (1 if "rec" in names or "tail" in names else 0), nd - 1)
+    if leaf_name in ("tail_lru_h", "tail_conv"):
+        lead = 1
+    pool = paged and leaf_name in _POOL_LEAVES
+    if dp and nd > lead and not pool:
+        want[lead] = dp  # batch dim
+    if head_axis is not None and leaf_name in _HEAD_LEAVES:
+        hd_dim = lead if pool else lead + 1
+        if hd_dim < nd:
+            want[hd_dim] = head_axis
+    if ctx_axis is not None:
+        if leaf_name in _CTX_LAST and nd >= lead + 2:
+            want[-1] = ctx_axis
+        elif leaf_name in ("raw_k", "raw_v") and nd >= lead + 3:
+            want[-2] = ctx_axis
+        elif leaf_name in ("S",) and nd >= lead + 3:
+            want[lead + 1] = ctx_axis  # rwkv heads
+        elif leaf_name in ("lru_h",) and nd >= lead + 2:
+            want[-1] = ctx_axis  # lru width
+        elif leaf_name in ("conv",) and nd >= lead + 3:
+            want[-1] = ctx_axis
+    return spec_with_fallback(shape, want, mesh)
+
 
 def cache_specs(cache, mesh: Mesh, n_lead: int = 1):
-    """Decode-cache specs. n_lead: stacked leading dims before batch (layers).
+    """Decode-cache specs (training). n_lead: stacked leading dims before
+    batch (layers).
 
     Rules: batch dim -> DP axes; compressed-context dim -> 'model'
     (context parallelism); residual/raw context stays local; everything
@@ -208,31 +262,42 @@ def cache_specs(cache, mesh: Mesh, n_lead: int = 1):
     dp = dp_axes(mesh)
 
     def f(path, leaf):
-        names = _path_names(path)
-        leaf_name = names[-1]
-        nd = leaf.ndim
-        want: list = [None] * nd
-        if leaf_name in ("n_comp", "n_resid", "pos", "step"):
-            return P(*want)
-        # how many leading stacked dims (layers/groups/2-subblocks)?
-        lead = min(n_lead + (1 if "rec" in names or "tail" in names else 0), nd - 1)
-        if leaf_name in ("tail_lru_h", "tail_conv"):
-            lead = 1
-        if nd > lead:
-            want[lead] = dp  # batch dim
-        if leaf_name in _CTX_LAST and nd >= lead + 2:
-            want[-1] = "model"
-        elif leaf_name in ("raw_k", "raw_v") and nd >= lead + 3:
-            want[-2] = "model"
-        elif leaf_name in ("S",) and nd >= lead + 3:
-            want[lead + 1] = "model"  # rwkv heads
-        elif leaf_name in ("lru_h",) and nd >= lead + 2:
-            want[-1] = "model"  # lru width
-        elif leaf_name in ("conv",) and nd >= lead + 3:
-            want[-1] = "model"
-        return spec_with_fallback(leaf.shape, want, mesh)
+        return cache_leaf_spec(_path_names(path), leaf.shape, mesh,
+                               n_lead=n_lead, dp=dp, ctx_axis="model")
 
     return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def serving_cache_specs(cache, mesh: Mesh, head_axis: str = "kv"):
+    """Serving-engine cache specs: payloads sharded by KV head over
+    ``head_axis``, page ledger + per-row counters replicated (see
+    kernels/sharded.py and docs/architecture.md). The cache batch dim
+    stays replicated — the ``dp`` mesh axis partitions attention WORK by
+    row masking, never cache state, so appends are identical everywhere."""
+    n_lead = cache.n_comp.ndim - 1  # stacked (layers) dims before batch
+    paged = getattr(cache, "pages", None) is not None
+
+    def f(path, leaf):
+        return cache_leaf_spec(_path_names(path), leaf.shape, mesh,
+                               n_lead=n_lead, head_axis=head_axis,
+                               paged=paged)
+
+    return jax.tree_util.tree_map_with_path(f, cache)
+
+
+def serving_specs(tree, mesh: Mesh, head_axis: str = "kv"):
+    """Specs for an arbitrary serving dispatch in/out pytree: every
+    ``LayerKVCache`` node gets ``serving_cache_specs``; any other leaf
+    (params, logits, tokens, scratch) is replicated."""
+    from ..core.cache import LayerKVCache
+
+    def node(x):
+        if isinstance(x, LayerKVCache):
+            return serving_cache_specs(x, mesh, head_axis)
+        return jax.tree_util.tree_map(lambda _: P(), x)
+
+    return jax.tree_util.tree_map(
+        node, tree, is_leaf=lambda x: isinstance(x, LayerKVCache))
 
 
 def to_named(tree_specs, mesh: Mesh):

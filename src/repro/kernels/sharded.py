@@ -1,210 +1,163 @@
-"""Context-parallel fused decode attention (beyond-paper, §Perf H1).
+"""KV-head sharding lanes for the multi-device serving engine.
 
-The compressed cache is sharded along the CONTEXT dim over 'model'. Under
-plain GSPMD, the decode step's softmax/weighted-V force enormous
-reshards (measured 8.4e10 collective bytes/step/device on qwen3-32b —
-GSPMD even emits 'involuntary full rematerialization' warnings). But the
-fused attention already produces log-sum-exp PARTIALS (o, m, l) — exactly
-the right thing to merge ACROSS context shards too:
+The engine shards the compressed pool PAYLOADS (K/V tier bytes, tier
+scales/zeros, residual buffers, calibration perms) over a ``kv`` mesh
+axis by KV head — the head-major pool layout ``[H_kv, pool_pages, ...]``
+makes the head axis the natural partition — while the page LEDGER (page
+table, free list, refcounts) and the per-row counters stay replicated,
+so the host scheduler's reservation arithmetic reads one
+device-identical source of truth (docs/architecture.md).
 
-  each 'model' shard runs the fused kernel over its local context slice
-  -> psum-merge the [B, H, D]+[B, H] partials (a few hundred KB)
-  -> add the residual-buffer partial.
+Every cache-touching jitted dispatch runs inside a shard_map "lane"
+(``sharded_call``): the unmodified model code asks ``active_lane()``
+whether it is on a head shard, slices its contiguous q/k/v head block
+(GQA query heads group contiguously by KV head — kernels/ref
+``_grouped_q`` — so one slice serves q, k and v), runs the ordinary
+attention + cache-append math on local heads, and merges attention
+outputs back with ONE ``psum`` of disjoint scatters per layer. Because
+every per-head computation is head-independent (softmax, tier matvecs,
+quantization, calibration are all per-(row, head)), and the merge adds
+each output cell as ``x + 0 + ... + 0``, the sharded result is
+BIT-IDENTICAL to the single-device run — no reduction-order change
+anywhere.
 
-Same math (merge_partials is associative), ~1000× less wire traffic.
+Data-parallel slot sharding composes over a ``dp`` axis: cache STATE
+stays replicated across ``dp`` (every shard runs the identical append),
+and only the attention READ is partitioned — a shard masks the per-row
+counters to its owned rows (a masked row spans zero context tokens and
+every decode kernel guards its softmax denominator, so it contributes
+exact ``0.0``), and the same disjoint-scatter psum assembles the row
+blocks. Batches that don't divide ``dp`` degrade to fully-replicated
+compute, still exact.
 
-The decode-append flush also becomes shard-local: a 64-token block lands
-entirely inside one context shard (block | shard sizes), so the owner
-masks the write and everyone else no-ops — no cross-shard DUS.
+This module replaced the seed-era context-parallel decode prototype
+(``context_parallel_decode_step``): head sharding needs no cross-shard
+log-sum-exp merge at all — each shard owns complete softmax rows — so
+there is now one sharded decode path, the lane, shared by decode,
+verify, prefill-insert and the chunked/prefix admission segments.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from functools import partial
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
-from ..core.cache import LayerKVCache
-from ..core.tiered import TierBuffer, TieredCache
-from . import ops, ref
+from ..utils import shard_map_compat
 
 Array = jax.Array
 
+KV_AXIS = "kv"
+DP_AXIS = "dp"
 
-def _local_cache_partials(q, kc: TieredCache, vc: TieredCache, n_comp,
-                          sm_scale: float, axis: str):
-    """Fused attention partials over THIS shard's context slice.
-
-    n_comp: scalar or per-row [B] global valid length.
-    """
-    idx = jax.lax.axis_index(axis)
-    L_loc = kc.capacity  # local capacity inside shard_map
-    start = idx * L_loc
-    n_local = jnp.clip(n_comp - start, 0, L_loc)
-    s = ref.kpack_scores_ref(q, kc, sm_scale)  # [B, H, L_loc]
-    mask = ref.valid_mask(n_local, L_loc, lead=2)
-    s = jnp.where(mask, s, ref.NEG_INF)
-    m = jnp.max(s, axis=-1)
-    p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
-    l = jnp.sum(p, axis=-1)
-    o = ref.vpack_out_ref(p, vc)
-    # vpack zero-term used unmasked p=0 rows fine (p already masked)
-    return o, m, l
+_LANE = None
 
 
-def _local_dense_partials(q, raw_k, raw_v, n_comp, sm_scale: float, axis: str):
-    """Policy='none' variant: dense scores over the local context slice."""
-    idx = jax.lax.axis_index(axis)
-    B, H, D = q.shape
-    h_kv = raw_k.shape[1]
-    L_loc = raw_k.shape[2]
-    start = idx * L_loc
-    n_local = jnp.clip(n_comp - start, 0, L_loc)
-    qg = q.astype(jnp.float32).reshape(B, h_kv, H // h_kv, D)
-    s = jnp.einsum("bhgd,bhld->bhgl", qg, raw_k.astype(jnp.float32)) * sm_scale
-    s = s.reshape(B, H, L_loc)
-    mask = ref.valid_mask(n_local, L_loc, lead=2)
-    s = jnp.where(mask, s, ref.NEG_INF)
-    m = jnp.max(s, axis=-1)
-    p = jnp.where(mask, jnp.exp(s - m[..., None]), 0.0)
-    l = jnp.sum(p, axis=-1)
-    pg = p.reshape(B, h_kv, H // h_kv, L_loc)
-    o = jnp.einsum("bhgl,bhld->bhgd", pg, raw_v.astype(jnp.float32))
-    return o.reshape(B, H, D), m, l
+@dataclasses.dataclass(frozen=True)
+class Lane:
+    """Shard coordinates of the current shard_map lane."""
+
+    n_kv: int = 1
+    n_dp: int = 1
+    kv_axis: str = KV_AXIS
+    dp_axis: str = DP_AXIS
+
+    # -- head axis (kv) -----------------------------------------------------
+    def heads(self, h: int) -> int:
+        """Local head count for an ``h``-head global axis."""
+        assert h % self.n_kv == 0, (h, self.n_kv)
+        return h // self.n_kv
+
+    def split(self, x: Array, axis: int) -> Array:
+        """This shard's contiguous head block along ``axis``.
+
+        Works for attention heads too (H = G * H_kv, kv-grouped
+        contiguously), not just KV heads.
+        """
+        loc = self.heads(x.shape[axis])
+        i = jax.lax.axis_index(self.kv_axis)
+        return jax.lax.dynamic_slice_in_dim(x, i * loc, loc, axis)
+
+    def merge(self, x: Array, axis: int, full: int, owned=None) -> Array:
+        """Scatter the local head block into a zeros buffer and psum.
+
+        Contributions are disjoint — distinct head blocks over ``kv``,
+        and (when ``owned`` partitions rows) distinct row blocks over
+        ``dp`` — so each merged cell is ``x + 0 + ... + 0``: exactly the
+        single-device value. ``owned``: bool [B] row mask from
+        ``owned_rows`` (row dim must be axis 0), or None when rows were
+        not partitioned.
+        """
+        if owned is not None:
+            own = owned.reshape(owned.shape + (1,) * (x.ndim - 1))
+            x = jnp.where(own, x, jnp.zeros_like(x))
+        loc = x.shape[axis]
+        if full != loc:
+            start = [0] * x.ndim
+            start[axis] = jax.lax.axis_index(self.kv_axis) * loc
+            shape = list(x.shape)
+            shape[axis] = full
+            x = jax.lax.dynamic_update_slice(
+                jnp.zeros(shape, x.dtype), x, tuple(start))
+        axes = [a for a, n in ((self.kv_axis, self.n_kv),) if n > 1]
+        if owned is not None and self.n_dp > 1:
+            axes.append(self.dp_axis)
+        return jax.lax.psum(x, tuple(axes)) if axes else x
+
+    # -- row axis (dp) ------------------------------------------------------
+    def owned_rows(self, n_rows: int):
+        """Bool [n_rows] mask of the rows this dp shard computes, or None
+        when rows are not partitioned (``n_dp == 1``, or ``n_rows`` not
+        divisible — every shard then computes every row, still exact)."""
+        if self.n_dp == 1 or n_rows % self.n_dp:
+            return None
+        per = n_rows // self.n_dp
+        i = jax.lax.axis_index(self.dp_axis)
+        return (jnp.arange(n_rows) // per) == i
+
+    def mask_read(self, cache_l, owned):
+        """Counter-masked attention-read view of a layer cache: non-owned
+        rows span zero context/residual tokens (their attention output is
+        then exact 0.0). Only the READ is masked — appends and commits
+        always use the unmasked cache so replicated state stays identical
+        on every shard."""
+        if owned is None:
+            return cache_l
+        zero = lambda n: jnp.where(owned, n, jnp.zeros_like(n))
+        return dataclasses.replace(
+            cache_l, n_comp=zero(cache_l.n_comp), n_resid=zero(cache_l.n_resid))
 
 
-def _append_token_local(cache_l: LayerKVCache, k_new, v_new, axis: str,
-                        n_shards: int, ring: bool):
-    """Shard-local decode append at per-row offsets: each row's 64-token
-    flush block lands in exactly one context shard (block | shard size);
-    the owner masks the write per row."""
-    from ..core.cache import (
-        append_block_rows,
-        compress_block,
-        row_update_tokens,
-        select_rows,
-    )
-
-    cfg = cache_l.cfg
-    R = cfg.residual
-
-    def write(c):
-        rk = row_update_tokens(c.resid_k, k_new, c.n_resid)
-        rv = row_update_tokens(c.resid_v, v_new, c.n_resid)
-        return dataclasses.replace(c, resid_k=rk, resid_v=rv,
-                                   n_resid=c.n_resid + 1)
-
-    def flush(c):
-        need = c.n_resid >= R  # [B]
-        blk_k = c.resid_k[..., : cfg.block, :]
-        blk_v = c.resid_v[..., : cfg.block, :]
-        idx = jax.lax.axis_index(axis)
-        L_loc = c.capacity  # local shard capacity inside shard_map
-        g_off = (c.n_comp % (L_loc * n_shards)) if ring else c.n_comp
-        owner = need & ((g_off // L_loc) == idx)  # [B]
-        off = jnp.clip(g_off - idx * L_loc, 0, L_loc - cfg.block)
-        if cfg.policy == "none":
-            new_rk = row_update_tokens(c.raw_k, blk_k, off)
-            new_rv = row_update_tokens(c.raw_v, blk_v, off)
-            c = dataclasses.replace(
-                c,
-                raw_k=select_rows(owner, new_rk, c.raw_k),
-                raw_v=select_rows(owner, new_rv, c.raw_v),
-            )
-        else:
-            kc, vc = compress_block(blk_k, blk_v, cfg, c.k.chan_perm,
-                                    c.v.chan_perm)
-            nk = append_block_rows(c.k, kc, off)
-            nv = append_block_rows(c.v, vc, off)
-            c = dataclasses.replace(c, k=select_rows(owner, nk, c.k),
-                                    v=select_rows(owner, nv, c.v))
-        rk = jnp.roll(c.resid_k, -cfg.block, axis=-2)
-        rv = jnp.roll(c.resid_v, -cfg.block, axis=-2)
-        step = jnp.where(need, cfg.block, 0).astype(jnp.int32)
-        return dataclasses.replace(c,
-                                   resid_k=select_rows(need, rk, c.resid_k),
-                                   resid_v=select_rows(need, rv, c.resid_v),
-                                   n_comp=c.n_comp + step,
-                                   n_resid=c.n_resid - step)
-
-    cache_l = jax.lax.cond(jnp.any(cache_l.n_resid >= R), flush,
-                           lambda c: c, cache_l)
-    return write(cache_l)
+def active_lane() -> Lane | None:
+    """The Lane of the current shard_map trace, or None outside one."""
+    return _LANE
 
 
-def _cache_specs_local(cache, mesh, dp, axis: str):
-    from ..distributed.sharding import spec_with_fallback
-
-    ctx_last = {"payload", "mins", "shifts", "scale", "zero"}
-
-    def f(path, leaf):
-        name = str(getattr(path[-1], "key", getattr(path[-1], "name", path[-1])))
-        nd = leaf.ndim
-        want: list = [None] * nd
-        if name in ("n_comp", "n_resid"):
-            return spec_with_fallback(leaf.shape, want, mesh)
-        if nd >= 2:
-            want[0] = dp  # batch
-        if name in ctx_last and nd >= 2:
-            want[-1] = axis
-        elif name in ("raw_k", "raw_v") and nd >= 3:
-            want[-2] = axis
-        return spec_with_fallback(leaf.shape, want, mesh)
-
-    return jax.tree_util.tree_map_with_path(f, cache)
+def local_heads(h: int) -> int:
+    """``h`` heads as seen by the current lane (global count outside)."""
+    lane = active_lane()
+    return lane.heads(h) if lane is not None else h
 
 
-def context_parallel_decode_step(
-    q: Array,
-    k_new: Array,
-    v_new: Array,
-    cache: LayerKVCache,
-    sm_scale: float,
-    mesh,
-    *,
-    axis: str = "model",
-    ring: bool = False,
-) -> tuple[Array, LayerKVCache]:
-    """Append one token + fused decode attention, context-parallel.
+@contextlib.contextmanager
+def lane_scope(lane: Lane):
+    global _LANE
+    prev, _LANE = _LANE, lane
+    try:
+        yield lane
+    finally:
+        _LANE = prev
 
-    q: [B, H, D]; k_new/v_new: [B, H_kv, 1, D]. The cache context dim is
-    sharded over ``axis``; partials merge with log-sum-exp psums (a few
-    hundred KB) instead of GSPMD reshards (§Perf H1)."""
-    from ..distributed.sharding import dp_axes, spec_with_fallback
 
-    dp = dp_axes(mesh)
-    n_shards = mesh.shape[axis]
-    q_spec = spec_with_fallback(q.shape, [dp, None, None], mesh)
-    kv_spec = spec_with_fallback(k_new.shape, [dp, None, None, None], mesh)
-    c_specs = _cache_specs_local(cache, mesh, dp, axis)
+def sharded_call(fn, mesh, in_specs, out_specs):
+    """shard_map ``fn`` with a Lane installed for the duration of its
+    (synchronous) trace, so model code can ask ``active_lane()``."""
+    lane = Lane(n_kv=int(mesh.shape.get(KV_AXIS, 1)),
+                n_dp=int(mesh.shape.get(DP_AXIS, 1)))
 
-    def local(q_l, k_l, v_l, cache_l: LayerKVCache):
-        cache_l = _append_token_local(cache_l, k_l, v_l, axis, n_shards, ring)
-        n_valid = cache_l.n_comp
-        if ring:
-            n_valid = jnp.minimum(n_valid, cache_l.capacity * n_shards)
-        if cache_l.cfg.policy == "none":
-            o_c, m_c, l_c = _local_dense_partials(
-                q_l, cache_l.raw_k, cache_l.raw_v, n_valid, sm_scale, axis)
-        else:
-            o_c, m_c, l_c = _local_cache_partials(
-                q_l, cache_l.k, cache_l.v, n_valid, sm_scale, axis)
-        # merge context-shard partials: tiny [B,H,D]+[B,H] exchanges
-        m_g = jax.lax.pmax(m_c, axis)
-        scale_ = jnp.exp(m_c - m_g)
-        o_g = jax.lax.psum(o_c * scale_[..., None], axis)
-        l_g = jax.lax.psum(l_c * scale_, axis)
-        o_r, m_r, l_r = ops._residual_partials(
-            q_l, cache_l.resid_k, cache_l.resid_v, cache_l.n_resid, sm_scale)
-        out = ops.merge_partials(o_g, m_g, l_g, o_r, m_r, l_r)
-        return out, cache_l
+    def local(*args):
+        with lane_scope(lane):
+            return fn(*args)
 
-    from ..utils import shard_map_compat
-
-    return shard_map_compat(
-        local, mesh=mesh,
-        in_specs=(q_spec, kv_spec, kv_spec, c_specs),
-        out_specs=(q_spec, c_specs),
-    )(q, k_new, v_new, cache)
+    return shard_map_compat(local, mesh, in_specs, out_specs)

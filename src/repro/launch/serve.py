@@ -91,8 +91,21 @@ def main() -> int:
     ap.add_argument("--stats-json", default=None, metavar="PATH",
                     help="dump final SlotStats (incl. drafted/accepted "
                     "counts and acceptance rate) as JSON to PATH")
+    ap.add_argument("--mesh", default="1,1", metavar="DP,KV",
+                    help="serving mesh shape 'dp,kv': shard pool payloads "
+                    "by KV head over kv devices and partition attention "
+                    "rows over dp (1,1 = single-device; outputs are "
+                    "bit-identical either way; docs/serving.md). Needs "
+                    "dp*kv visible devices — on CPU set "
+                    "XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT first")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
+
+    try:
+        mesh_shape = tuple(int(x) for x in args.mesh.split(","))
+        assert len(mesh_shape) == 2
+    except (ValueError, AssertionError):
+        raise SystemExit(f"--mesh takes 'dp,kv' (e.g. 1,2), got {args.mesh!r}")
 
     cfg = get_arch(args.arch, smoke=args.smoke)
     if not cfg.has_decode:
@@ -118,10 +131,17 @@ def main() -> int:
                         session_cache=args.session_cache,
                         session_cache_mb=args.session_cache_mb,
                         session_ttl_s=args.session_ttl_s,
-                        session_disk_dir=args.session_disk_dir)
+                        session_disk_dir=args.session_disk_dir,
+                        mesh_shape=mesh_shape)
     t0 = time.time()
     engine = Engine(cfg, params, pack, ecfg)
     print(f"engine built in {time.time() - t0:.1f}s; policy={args.policy}")
+    if engine.mesh is not None:
+        print(f"serving mesh dp={mesh_shape[0]} x kv={mesh_shape[1]} over "
+              f"{mesh_shape[0] * mesh_shape[1]} devices: pool payloads "
+              f"sharded by KV head ({cfg.n_kv_heads} -> "
+              f"{cfg.n_kv_heads // mesh_shape[1]}/shard), page ledger "
+              "replicated")
     ks, vs = engine.pack_cfg.k_spec_static, engine.pack_cfg.v_spec_static
     if args.policy == "packkv" and ks is not None:  # recurrent: no KV tiers
         print(f"calibrated K tiers {ks.widths}×{ks.counts}; "

@@ -333,16 +333,7 @@ def decode_step(params: dict, cfg: ArchConfig, cache: RGState, token: Array,
             positions, cfg.rope_theta,
         )
         qd = q[:, :, 0]
-        from ..distributed.sharding import _ACTIVE_MESH as mesh
-
-        n_sh = mesh.shape.get("model", 1) if mesh is not None else 1
-        if n_sh > 1 and W % n_sh == 0 and (W // n_sh) % cache_l.cfg.block == 0:
-            from ..kernels.sharded import context_parallel_decode_step
-
-            attn, cache_l = context_parallel_decode_step(
-                qd, k, v, cache_l, sm_scale, mesh, ring=True
-            )
-        elif cache_l.cfg.policy == "none":
+        if cache_l.cfg.policy == "none":
             cache_l = append_token(cache_l, k, v, ring=True)
             n_valid = jnp.minimum(cache_l.n_comp, W)
             attn = dense_decode_attention(

@@ -24,6 +24,7 @@ from ..core.cache import (
     prefill_cache,
 )
 from ..kernels import dense_decode_attention, packed_decode_attention
+from ..kernels.sharded import active_lane, local_heads
 from .layers import (
     attention_init,
     ctx_attention,
@@ -167,9 +168,10 @@ def encode(params: dict, cfg: ArchConfig, batch: dict) -> Array:
 
 
 def alloc_cache(cfg: ArchConfig, pack_cfg: PackKVConfig, batch: int, capacity: int):
-    """Stacked per-layer caches [n_layers, ...]."""
+    """Stacked per-layer caches [n_layers, ...]. Inside a shard_map lane
+    (kernels/sharded.py) the head dim is this shard's local block."""
     one = lambda _: alloc_layer_cache(
-        pack_cfg, batch, cfg.n_kv_heads, cfg.hd, capacity
+        pack_cfg, batch, local_heads(cfg.n_kv_heads), cfg.hd, capacity
     )
     return jax.vmap(one)(jnp.arange(cfg.n_layers))
 
@@ -192,7 +194,13 @@ def prefill(params: dict, cfg: ArchConfig, pack_cfg: PackKVConfig, capacity: int
         hh = hh + jnp.dot(attn.astype(hh.dtype), layer_params["attn"]["wo"])
         m, _ = _apply_mlp(cfg, layer_params, rmsnorm(hh, layer_params["ln2"]))
         hh = hh + m
-        cache_l = alloc_layer_cache(pack_cfg, B, cfg.n_kv_heads, cfg.hd, capacity)
+        lane = active_lane()
+        if lane is not None:
+            # prefill attention stays replicated (identical on every
+            # shard); only the CACHE is built head-local
+            k, v = lane.split(k, 1), lane.split(v, 1)
+        cache_l = alloc_layer_cache(pack_cfg, B, local_heads(cfg.n_kv_heads),
+                                    cfg.hd, capacity)
         cache_l = prefill_cache(cache_l, k, v)  # compress-as-you-prefill
         return hh, cache_l
 
@@ -287,6 +295,13 @@ def _prefill_segment(params: dict, cfg: ArchConfig, pack_cfg: PackKVConfig,
             layer_params["attn"], hn, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
             positions, cfg.rope_theta, cfg.qk_norm, cfg.use_rope,
         )
+        lane = active_lane()
+        if lane is not None:
+            # the mini-cache context is head-local inside a lane: slice
+            # the segment's q/k/v to the same head block, attend locally
+            # (per-head softmax is head-independent), merge disjointly
+            q = lane.split(q, 1)
+            k, v = lane.split(k, 1), lane.split(v, 1)
         if n_ctx:
             if pack_cfg.policy == "none":
                 ck = cache_l.raw_k[..., :n_ctx, :]
@@ -303,6 +318,8 @@ def _prefill_segment(params: dict, cfg: ArchConfig, pack_cfg: PackKVConfig,
         else:
             k_all, v_all = k, v
         attn = ctx_attention(q, k_all, v_all, n_ctx, sm_scale)
+        if lane is not None:
+            attn = lane.merge(attn, 1, cfg.n_heads)
         attn = attn.transpose(0, 2, 1, 3).reshape(B, S, cfg.n_heads * cfg.hd)
         hh = hh + jnp.dot(attn.astype(hh.dtype), layer_params["attn"]["wo"])
         m, _ = _apply_mlp(cfg, layer_params, rmsnorm(hh, layer_params["ln2"]))
@@ -453,8 +470,15 @@ def prefill_chunk_insert(cfg: ArchConfig, pack_cfg: PackKVConfig,
 
     def body(_, xs):
         k, v = xs
-        cache_l = alloc_layer_cache(dense_cfg, 1, cfg.n_kv_heads, cfg.hd,
-                                    cap_mini)
+        lane = active_lane()
+        if lane is not None:
+            # the raw scratch is replicated full-head; the row it
+            # compresses into is head-local (per-head quantization and
+            # calibration are head-independent, so the local bytes equal
+            # the single-device row's head slice)
+            k, v = lane.split(k, 1), lane.split(v, 1)
+        cache_l = alloc_layer_cache(dense_cfg, 1, local_heads(cfg.n_kv_heads),
+                                    cfg.hd, cap_mini)
         return None, prefill_cache(cache_l, k, v)
 
     _, row = jax.lax.scan(body, None, (scratch["k"], scratch["v"]))
@@ -534,16 +558,6 @@ def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,
     sm_scale = 1.0 / (cfg.hd ** 0.5)
 
     from ..core.cache import slice_compressed
-    from ..distributed.sharding import _ACTIVE_MESH as mesh
-
-    def _use_cp(cache_l) -> bool:
-        if cache_l.pages is not None:  # paged pool is not context-sharded
-            return False
-        if mesh is None or "model" not in mesh.axis_names:
-            return False
-        n = mesh.shape["model"]
-        cap = cache_l.capacity
-        return n > 1 and cap % n == 0 and (cap // n) % cache_l.cfg.block == 0
 
     def body(hh, xs):
         layer_params, cache_l = xs
@@ -553,18 +567,20 @@ def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,
             positions, cfg.rope_theta, cfg.qk_norm, cfg.use_rope,
         )
         qd = q[:, :, 0]  # [B, H, Dh]
-        if _use_cp(cache_l):
-            # context-parallel fused decode (§Perf H1): LSE partial merge
-            # across context shards instead of GSPMD reshards (the shards
-            # already do length-proportional work per device; no bucketing)
-            from ..kernels.sharded import context_parallel_decode_step
-
-            attn, cache_l = context_parallel_decode_step(
-                qd, k, v, cache_l, sm_scale, mesh
-            )
-        elif cache_l.cfg.policy == "none":
-            cache_l = append_token(cache_l, k, v)
-            read = slice_compressed(cache_l, n_bucket)
+        lane = active_lane()
+        owned = lane.owned_rows(B) if lane is not None else None
+        if lane is not None:
+            # KV-head lane (kernels/sharded.py): local head blocks in,
+            # append + attention on local heads, one disjoint psum out
+            qd = lane.split(qd, 1)
+            k, v = lane.split(k, 1), lane.split(v, 1)
+        cache_l = append_token(cache_l, k, v)
+        # dp shards read through counter-masked views (non-owned rows span
+        # zero tokens -> exact 0.0, discarded by the merge); appends above
+        # always use the real counters so replicated state stays identical
+        rd = lane.mask_read(cache_l, owned) if lane is not None else cache_l
+        if cache_l.cfg.policy == "none":
+            read = slice_compressed(rd, n_bucket)
             attn = dense_decode_attention(
                 qd, read.raw_k, read.raw_v, read.resid_k, read.resid_v,
                 read.n_comp, read.n_resid, sm_scale,
@@ -574,19 +590,19 @@ def decode_step(params: dict, cfg: ArchConfig, cache, token: Array,
             # physical page in-kernel, no gathered copy is materialized
             from ..kernels import paged_decode_attention
 
-            cache_l = append_token(cache_l, k, v)
             attn = paged_decode_attention(
-                qd, cache_l, sm_scale, n_bucket=n_bucket, backend=backend,
+                qd, rd, sm_scale, n_bucket=n_bucket, backend=backend,
             )
         else:
             # paged + xla reads through the page-table gather inside
             # slice_compressed; dense mode slices the contiguous prefix
-            cache_l = append_token(cache_l, k, v)
-            read = slice_compressed(cache_l, n_bucket)
+            read = slice_compressed(rd, n_bucket)
             attn = packed_decode_attention(
                 qd, read.k, read.v, read.resid_k, read.resid_v,
                 read.n_comp, read.n_resid, sm_scale, backend=backend,
             )
+        if lane is not None:
+            attn = lane.merge(attn, 1, cfg.n_heads, owned)
         attn = attn.reshape(B, 1, cfg.n_heads * cfg.hd)
         hh = hh + jnp.dot(attn.astype(hh.dtype), layer_params["attn"]["wo"])
         m, _ = _apply_mlp(cfg, layer_params, rmsnorm(hh, layer_params["ln2"]))
@@ -641,9 +657,10 @@ def verify_steps(params: dict, cfg: ArchConfig, cache, tokens: Array,
     contractions, row-wise max/sum reductions) is unchanged, only stacked,
     so the vmapped launch stays bit-identical to the unrolled one (the
     verify-vs-stepwise tests pin this). Until the commit, draft bytes are
-    invisible to every masked read. The context-parallel decode path is
-    not reachable here (speculation is a single-device serving feature;
-    the Engine gates it).
+    invisible to every masked read. Inside a shard_map lane
+    (kernels/sharded.py) the window runs on this shard's head block with
+    the same per-position kernels and merges through the same disjoint
+    psum as ``decode_step``, so sharded verify stays bit-identical too.
     """
     from ..core.cache import (
         append_window, commit_window, mask_free_slots, slice_compressed,
@@ -663,7 +680,13 @@ def verify_steps(params: dict, cfg: ArchConfig, cache, tokens: Array,
             layer_params["attn"], hn, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
             positions, cfg.rope_theta, cfg.qk_norm, cfg.use_rope,
         )
+        lane = active_lane()
+        owned = lane.owned_rows(B) if lane is not None else None
+        if lane is not None:
+            q = lane.split(q, 1)
+            k, v = lane.split(k, 1), lane.split(v, 1)
         cache_l = append_window(cache_l, k, v, lens)
+        rd = lane.mask_read(cache_l, owned) if lane is not None else cache_l
         # q: [B, H, w, Dh]. The attention is UNROLLED per window position,
         # each position invoking the exact per-token kernel decode_step
         # uses — NOT vmapped/batched over w: a batched lowering changes the
@@ -675,7 +698,7 @@ def verify_steps(params: dict, cfg: ArchConfig, cache, tokens: Array,
         # per-row contractions are byte-stable under batching (pinned by
         # the verify-vs-stepwise and end-to-end exactness tests).
         if cache_l.cfg.policy == "none":
-            read = slice_compressed(cache_l, n_bucket)
+            read = slice_compressed(rd, n_bucket)
             attn = jnp.stack([
                 dense_decode_attention(
                     q[:, :, i], read.raw_k, read.raw_v, read.resid_k,
@@ -688,18 +711,20 @@ def verify_steps(params: dict, cfg: ArchConfig, cache, tokens: Array,
             attn = jnp.stack([
                 paged_decode_attention(
                     q[:, :, i],
-                    dataclasses.replace(cache_l, n_resid=cache_l.n_resid + i),
+                    dataclasses.replace(rd, n_resid=rd.n_resid + i),
                     sm_scale, n_bucket=n_bucket, backend=backend,
                 ) for i in range(w)
             ], axis=2)
         else:
-            read = slice_compressed(cache_l, n_bucket)
+            read = slice_compressed(rd, n_bucket)
             attn = jnp.stack([
                 packed_decode_attention(
                     q[:, :, i], read.k, read.v, read.resid_k, read.resid_v,
                     read.n_comp, read.n_resid + i, sm_scale, backend=backend,
                 ) for i in range(w)
             ], axis=2)
+        if lane is not None:
+            attn = lane.merge(attn, 1, cfg.n_heads, owned)
         attn = attn.transpose(0, 2, 1, 3).reshape(B, w, cfg.n_heads * cfg.hd)
         hh = hh + jnp.dot(attn.astype(hh.dtype), layer_params["attn"]["wo"])
         m, _ = _apply_mlp(cfg, layer_params, rmsnorm(hh, layer_params["ln2"]))

@@ -69,6 +69,15 @@ class EngineConfig:
     backend: str = "xla"  # xla | pallas
     calibrate: bool = True
     calib_tokens: int = 192  # multiple of the 64-token block
+    # multi-device serving (see kernels/sharded.py + docs/architecture.md):
+    mesh_shape: tuple = (1, 1)  # (dp, kv): data-parallel row shards x
+    #   KV-head shards. (1, 1) = feature off (plain single-device jits,
+    #   bit-for-bit the pre-mesh engine). Anything else builds a
+    #   jax Mesh over dp*kv devices and routes every cache-touching
+    #   dispatch through a shard_map lane: pool payloads shard by KV head
+    #   over 'kv', the page ledger + counters stay replicated, attention
+    #   work partitions over 'dp' by row masking. Outputs stay
+    #   bit-identical to (1, 1); recurrent families reject loudly.
     # length-aware launches (see docs/performance.md):
     bucketed: bool = True  # slice the compressed region to a live-length bucket
     bucket_unit: int = 256  # smallest bucket; power-of-two multiples up to capacity
@@ -129,6 +138,41 @@ class Engine:
         self.params = params
         self.ecfg = ecfg
         self.api = get_model(cfg)
+        mesh_shape = tuple(ecfg.mesh_shape)
+        if mesh_shape == (1, 1):
+            self.mesh = None  # feature off: plain single-device jits
+        else:
+            n_dp, n_kv = mesh_shape
+            if n_dp < 1 or n_kv < 1:
+                raise ValueError(f"mesh_shape must be positive, got "
+                                 f"{mesh_shape}")
+            if cfg.family in ("rwkv6", "hybrid_rglru"):
+                raise ValueError(
+                    f"family {cfg.family!r} cannot serve --mesh: its "
+                    "recurrent slot state has no KV-head axis to shard "
+                    "over the 'kv' mesh axis — drop --mesh (single-device "
+                    "serving still applies)")
+            if cfg.n_kv_heads % n_kv:
+                raise ValueError(
+                    f"n_kv_heads {cfg.n_kv_heads} not divisible by "
+                    f"kv_shards {n_kv} — pool payloads shard by whole KV "
+                    "heads")
+            n_dev = len(jax.devices())
+            if n_dev < n_dp * n_kv:
+                raise ValueError(
+                    f"mesh {n_dp}x{n_kv} needs {n_dp * n_kv} devices, have "
+                    f"{n_dev} (host-platform testing: set "
+                    "XLA_FORCE_HOST_PLATFORM_DEVICE_COUNT / "
+                    "--xla_force_host_platform_device_count before jax "
+                    "initializes)")
+            from jax.sharding import Mesh, NamedSharding, PartitionSpec
+
+            devs = np.array(jax.devices()[: n_dp * n_kv]).reshape(n_dp, n_kv)
+            self.mesh = Mesh(devs, ("dp", "kv"))
+            # params are replicated once at build; every lane reads them
+            # with a replicated in_spec, so no dispatch re-broadcasts
+            self.params = jax.device_put(
+                self.params, NamedSharding(self.mesh, PartitionSpec()))
         if ecfg.prefix_cache:
             if self.api.prefill_prefix is None:
                 raise ValueError(
@@ -175,29 +219,31 @@ class Engine:
                 and cfg.family not in ("rwkv6",)
             ) else pack_cfg
         )
-        self._prefill = jax.jit(
+        self._prefill = self._lane_jit(
             partial(self.api.prefill, cfg=cfg, pack_cfg=self.pack_cfg,
                     capacity=ecfg.capacity)
         )
         # one compile per launch bucket (bounded: core.cache.bucket_set)
-        self._decode = jax.jit(
+        self._decode = self._lane_jit(
             partial(self.api.decode_step, cfg=cfg, backend=ecfg.backend),
-            static_argnames=("n_bucket",),
+            static=("n_bucket",),
         )
         # one compile per distinct prompt length; slot index is traced
-        self._insert = jax.jit(
+        self._insert = self._lane_jit(
             partial(self.api.prefill_into_slot, cfg=cfg,
                     pack_cfg=self.pack_cfg, capacity=ecfg.capacity)
         )
-        self._reset = jax.jit(self.api.reset_slot)
-        self._mask_free = jax.jit(self.api.mask_free)
+        self._reset = self._lane_jit(self.api.reset_slot)
+        self._mask_free = self._lane_jit(self.api.mask_free)
         # chunked interleaved admission: one bounded prefill chunk per
-        # scheduler step (one compile per distinct (chunk length, offset))
+        # scheduler step (one compile per distinct (chunk length, offset)).
+        # The chunk scratch is raw full-head K/V and carries no cache, so
+        # it stays a plain replicated jit even on a mesh.
         self._chunk_step = jax.jit(
             partial(self.api.prefill_chunk, cfg=cfg, pack_cfg=self.pack_cfg),
             static_argnames=("n_ctx",),
         )
-        self._chunk_insert = jax.jit(
+        self._chunk_insert = self._lane_jit(
             partial(self.api.prefill_chunk_insert, cfg=cfg,
                     pack_cfg=self.pack_cfg, capacity=ecfg.capacity)
         )
@@ -216,37 +262,37 @@ class Engine:
         # final chunk fused with the row insert: one dispatch instead of
         # chunk_step + chunk_insert, and no scratch round-trip, on the last
         # step of every multi-chunk admission
-        self._chunk_final = jax.jit(_chunk_final_fn,
-                                    static_argnames=("n_ctx",))
+        self._chunk_final = self._lane_jit(_chunk_final_fn,
+                                           static=("n_ctx",))
         if ecfg.prefix_cache:
             from ..core.cache import acquire_pages, release_pages
 
             # one compile per (prompt length, matched-prefix length) pair
-            self._insert_prefix = jax.jit(
+            self._insert_prefix = self._lane_jit(
                 partial(self.api.prefill_prefix, cfg=cfg,
                         pack_cfg=self.pack_cfg, capacity=ecfg.capacity),
-                static_argnames=("n_prefix",),
+                static=("n_prefix",),
             )
             # interleaved prefix admission: the same per-page segments,
             # one dispatch each (mini-cache round-trips between them)
-            self._prefix_chunk_init = jax.jit(
+            self._prefix_chunk_init = self._lane_jit(
                 partial(self.api.prefix_chunk_init, cfg=cfg,
                         pack_cfg=self.pack_cfg, capacity=ecfg.capacity),
-                static_argnames=("n_prefix", "prompt_len"),
+                static=("n_prefix", "prompt_len"),
             )
-            self._prefix_chunk = jax.jit(
+            self._prefix_chunk = self._lane_jit(
                 partial(self.api.prefix_chunk, cfg=cfg,
                         pack_cfg=self.pack_cfg),
-                static_argnames=("n_ctx",),
+                static=("n_ctx",),
             )
-            self._prefix_chunk_insert = jax.jit(
+            self._prefix_chunk_insert = self._lane_jit(
                 partial(self.api.prefix_chunk_insert, pack_cfg=self.pack_cfg),
-                static_argnames=("n_prefix", "prompt_len"),
+                static=("n_prefix", "prompt_len"),
             )
             # index pin/unpin ops take sentinel-padded fixed-length id
             # vectors, so each compiles exactly once
-            self._acquire_pages = jax.jit(acquire_pages)
-            self._release_pages = jax.jit(release_pages)
+            self._acquire_pages = self._lane_jit(acquire_pages)
+            self._release_pages = self._lane_jit(release_pages)
             self._dummy_perm = jnp.broadcast_to(
                 jnp.arange(cfg.hd, dtype=jnp.int32),
                 (cfg.n_layers, cfg.n_kv_heads, cfg.hd),
@@ -267,10 +313,10 @@ class Engine:
             # acceptance rule, the counter-only commit of the accepted
             # prefix, and free-row masking all run inside the same program
             # (models/*.verify_steps), so one dispatch per spec step.
-            self._verify = jax.jit(
+            self._verify = self._lane_jit(
                 partial(self.api.decode_verify, cfg=cfg, backend=ecfg.backend),
-                static_argnames=("n_bucket",),
-                donate_argnames=("cache",),
+                static=("n_bucket",),
+                donate=("cache",),
             )
         if ecfg.session_cache and cfg.window:
             raise ValueError(
@@ -288,25 +334,77 @@ class Engine:
                 )
             # one compile per (live pages, shared-prefix pages) pair — the
             # same specialization granularity as prompt-length admission
-            self._evacuate = jax.jit(
+            self._evacuate = self._lane_jit(
                 self.api.evacuate_slot,
-                static_argnames=("n_pages", "n_shared"),
+                static=("n_pages", "n_shared"),
             )
-            self._restore = jax.jit(
+            self._restore = self._lane_jit(
                 self.api.restore_slot,
-                static_argnames=("n_pages", "n_shared"),
+                static=("n_pages", "n_shared"),
             )
         if self.api.decode_multi is not None:
             # donated multi-step decode: the chunk loop updates the cache
             # buffers in place (no per-token copy) and one dispatch covers
             # up to ``decode_chunk`` tokens
-            self._decode_multi = jax.jit(
+            self._decode_multi = self._lane_jit(
                 partial(self.api.decode_multi, cfg=cfg, backend=ecfg.backend),
-                static_argnames=("t_max", "n_bucket"),
-                donate_argnames=("cache",),
+                static=("t_max", "n_bucket"),
+                donate=("cache",),
             )
         else:
             self._decode_multi = None
+
+    # -- mesh lanes ---------------------------------------------------------
+    def _lane_jit(self, fn, *, static=(), donate=()):
+        """jit one serving dispatch; on a mesh, the body runs inside a
+        shard_map lane (kernels/sharded.py) with cache-spec-derived in/out
+        specs. Off-mesh (``mesh_shape == (1, 1)``) this is exactly
+        ``jax.jit(fn)`` — the pre-mesh engine, byte for byte.
+
+        Mechanics on a mesh: the wrapper binds the caller's args against
+        ``fn``'s signature, closes over the static (python) args, derives
+        per-arg PartitionSpecs by name (``LayerKVCache`` args/outputs get
+        ``serving_cache_specs`` — payloads by KV head, ledger replicated;
+        calibration perms shard their head dim; everything else is
+        replicated), gets output specs from ``jax.eval_shape`` over the
+        unsharded body (global shapes ARE the out-spec shapes), and
+        dispatches through ``sharded_call``, which installs the Lane the
+        model code queries via ``active_lane()``.
+        """
+        if self.mesh is None:
+            return jax.jit(fn, static_argnames=static, donate_argnames=donate)
+        import inspect
+
+        from ..distributed.sharding import serving_specs
+        from ..kernels.sharded import sharded_call
+
+        mesh = self.mesh
+        sig = inspect.signature(fn)
+
+        def mesh_fn(*args, **kwargs):
+            ba = sig.bind(*args, **kwargs)
+            statics = {k: ba.arguments.pop(k) for k in static
+                       if k in ba.arguments}
+            names = list(ba.arguments)
+            vals = [ba.arguments[k] for k in names]
+            body = lambda *a: fn(**dict(zip(names, a)), **statics)
+            in_specs = tuple(self._arg_specs(n, v)
+                             for n, v in zip(names, vals))
+            out_specs = serving_specs(jax.eval_shape(body, *vals), mesh)
+            return sharded_call(body, mesh, in_specs, out_specs)(*vals)
+
+        mesh_fn.__signature__ = sig  # so jit resolves static/donated names
+        return jax.jit(mesh_fn, static_argnames=static, donate_argnames=donate)
+
+    def _arg_specs(self, name, val):
+        from ..distributed.sharding import serving_specs, spec_with_fallback
+
+        if name in ("k_perm", "v_perm"):
+            # [n_layers, H_kv, D] calibration perms ride head-sharded so
+            # the lane's local mini-cache seeds from its own head block
+            want = [None] * (val.ndim - 2) + ["kv", None]
+            return spec_with_fallback(val.shape, want, self.mesh)
+        return serving_specs(val, self.mesh)
 
     # -- calibration --------------------------------------------------------
     def _calibrate(self, pack_cfg: PackKVConfig) -> PackKVConfig:
@@ -410,10 +508,22 @@ class Engine:
         return bucket_length(n_max, self.ecfg.capacity, unit)
 
     def alloc_slot_cache(self):
-        """Slot-table decode cache: max_batch rows, per-row counters."""
-        return self.api.alloc_cache(
+        """Slot-table decode cache: max_batch rows, per-row counters.
+
+        On a mesh the fresh cache is placed with its serving shardings up
+        front (payloads by KV head over 'kv', ledger + counters
+        replicated), so every later lane dispatch consumes and produces
+        it with zero resharding."""
+        cache = self.api.alloc_cache(
             self.cfg, self.pack_cfg, self.ecfg.max_batch, self.ecfg.capacity
         )
+        if self.mesh is not None:
+            from ..distributed.sharding import serving_cache_specs, to_named
+
+            cache = jax.device_put(
+                cache, to_named(serving_cache_specs(cache, self.mesh),
+                                self.mesh))
+        return cache
 
     def insert_request(self, cache, slot: int, tokens: np.ndarray):
         """Jitted single-slot prefill-insert; returns (last logits [V], cache)."""

@@ -40,11 +40,18 @@ paged/dense × chunked/monolithic configurations):
     (``resume`` events) admit as hits (restore, no insert) or fall back
     cold without disturbing per-class FIFO of first admissions; expiry
     racing a resume degrades to a cold admission, never a crash or leak.
+  * Replicated ledger (ISSUE 10) — on a ``(dp, kv)`` serving mesh the
+    page ledger is REPLICATED: the stub applies every ledger op to one
+    independent replica per mesh device and asserts the replicas stay
+    identical, so the scheduler can never feed an op device-dependent
+    state; the same seeded traffic at (1,1), (1,2) and (2,2) must
+    produce identical event logs and stats.
 
 The deterministic seeded sweep always runs; the hypothesis variant widens
 the search when hypothesis is installed (CI: requirements-dev.txt;
 ``HYPOTHESIS_MAX_EXAMPLES`` raises the example count on the nightly lane).
 """
+import copy
 import os
 from types import SimpleNamespace
 
@@ -204,8 +211,55 @@ class _StubEngine:
         return cache
 
 
+def _tree_eq(a, b):
+    if isinstance(a, np.ndarray):
+        return isinstance(b, np.ndarray) and np.array_equal(a, b)
+    if isinstance(a, dict):
+        return a.keys() == b.keys() and all(_tree_eq(a[k], b[k]) for k in a)
+    if isinstance(a, (list, tuple)):
+        return len(a) == len(b) and all(map(_tree_eq, a, b))
+    return a == b
+
+
+class _MeshStubEngine(_StubEngine):
+    """The stub on a ``(dp, kv)`` mesh: the REAL sharded engine keeps its
+    page ledger REPLICATED across every device (only pool payloads shard,
+    by KV head), so every ledger transition must be a pure function of
+    scheduler-visible state. Enforced by replay: each op runs once per
+    mesh device on an independent deep copy of its inputs and the replica
+    results must be identical — any device-dependent input the scheduler
+    smuggled in would diverge them."""
+
+    _REPLAYED = ("insert_request", "free_slot", "mask_free", "chunk_step",
+                 "chunk_insert", "chunk_final", "decode", "decode_verify",
+                 "evacuate", "restore")
+
+    def __init__(self, ecfg, pool_pages, mesh_shape=(1, 1)):
+        super().__init__(ecfg, pool_pages)
+        self.n_dev = mesh_shape[0] * mesh_shape[1]
+
+    def __getattribute__(self, name):
+        if name in _MeshStubEngine._REPLAYED:
+            base = getattr(_StubEngine, name)
+
+            def replayed(*args, **kw):
+                mark = len(self.log)
+                first = base(self, *copy.deepcopy(args),
+                             **copy.deepcopy(kw))
+                for _ in range(self.n_dev - 1):
+                    del self.log[mark:]  # replicas log once, not n_dev times
+                    rep = base(self, *copy.deepcopy(args), **copy.deepcopy(kw))
+                    assert _tree_eq(first, rep), \
+                        f"ledger replica diverged in {name}"
+                return first
+
+            return replayed
+        return super().__getattribute__(name)
+
+
 def _drive(rng, *, paged, chunk_pages, spec=False, prio=False, preempt=False,
-           session=False, fault_factory=None, straggler=None):
+           session=False, fault_factory=None, straggler=None,
+           mesh_shape=(1, 1), log_sink=None):
     """Run random traffic through SlotServer + stub; assert invariants
     after every step against the pure-Python oracle. Returns the run's
     ``SlotStats`` so sweeps can assert a path was actually exercised.
@@ -226,8 +280,9 @@ def _drive(rng, *, paged, chunk_pages, spec=False, prio=False, preempt=False,
                         spec_decode=spec, spec_k=int(rng.integers(1, 5)),
                         spec_backoff=int(rng.choice([0, 1, 32])),
                         preempt=preempt, session_cache=session,
-                        aging_steps=8 if prio else 32)
-    eng = _StubEngine(ecfg, pool)
+                        aging_steps=8 if prio else 32,
+                        mesh_shape=mesh_shape)
+    eng = _MeshStubEngine(ecfg, pool, mesh_shape)
     plan = fault_factory() if fault_factory is not None else None
     srv = SlotServer(eng, fault_plan=plan,
                      straggler=straggler() if straggler is not None else None)
@@ -372,6 +427,8 @@ def _drive(rng, *, paged, chunk_pages, spec=False, prio=False, preempt=False,
     if not (prio or faulty):
         assert order == sorted(order), f"admission violated FIFO: {order}"
         assert order == list(range(n_req))
+    if log_sink is not None:
+        log_sink.extend(eng.log)
     return srv.stats
 
 
@@ -405,6 +462,37 @@ def test_scheduler_priority_preempt_seeded(paged, chunk_pages):
                            chunk_pages=chunk_pages, prio=True,
                            preempt=True).preemptions
     assert preempts > 0, "sweep never exercised the swap-out path"
+
+
+MESH_SHAPES = ((1, 1), (1, 2), (2, 2))
+
+
+@pytest.mark.parametrize("paged,chunk_pages", [(True, 1), (True, 0),
+                                               (False, 1)])
+def test_scheduler_ledger_device_count_independent(paged, chunk_pages):
+    """ISSUE 10: the scheduler's ledger decisions may not depend on the
+    mesh shape. Same seeded traffic (with speculation, priorities,
+    preemption and session parks all on) at (1,1), (1,2) and (2,2):
+    identical per-op replica ledgers (asserted inside the stub), identical
+    event logs, identical stats roll-ups."""
+    fields = ("completed", "cancelled", "expired", "decode_steps",
+              "prefill_chunks", "admitted", "preemptions", "session_parks",
+              "session_hits", "spec_drafted", "spec_accepted",
+              "pages_reserved_peak", "admission_blocks")
+    for seed in range(8):
+        runs = []
+        for ms in MESH_SHAPES:
+            log = []
+            stats = _drive(np.random.default_rng(seed), paged=paged,
+                           chunk_pages=chunk_pages, spec=True, prio=True,
+                           preempt=True, session=True, mesh_shape=ms,
+                           log_sink=log)
+            runs.append((log, {f: getattr(stats, f) for f in fields}))
+        for ms, (log, st) in zip(MESH_SHAPES[1:], runs[1:]):
+            assert log == runs[0][0], \
+                f"seed {seed}: event log at mesh {ms} != (1,1)"
+            assert st == runs[0][1], \
+                f"seed {seed}: stats at mesh {ms} != (1,1): {st}"
 
 
 def _squeeze_plan():

@@ -27,6 +27,7 @@ shared-prefix pages, and the loud rejections (sliding-window attention,
 recurrent families).
 """
 import dataclasses
+import json
 
 import jax
 import jax.numpy as jnp
@@ -244,6 +245,92 @@ def test_session_shared_prefix_park(smoke_setup):
     assert (srv.stats.session_restored_pages - restored_before
             == meta["n_pages"] - meta["n_shared"])
     assert srv.done[2].status == "done" and len(srv.done[2].output) == 5
+
+
+_SHARDED_CHILD = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json
+import jax, jax.numpy as jnp
+import numpy as np
+from repro.configs import SMOKES
+from repro.core.cache import PackKVConfig
+from repro.models import get_model
+from repro.serving import Engine, EngineConfig, Request, SlotServer
+
+cfg = SMOKES["llama2-7b"]
+params = get_model(cfg).init(jax.random.PRNGKey(0), cfg)
+PAGE = 128
+
+
+def build(mesh_shape, session):
+    return Engine(cfg, params, PackKVConfig(policy="packkv"),
+                  EngineConfig(capacity=512, max_batch=1, calib_tokens=128,
+                               bucket_unit=64, paged=True, page_size=PAGE,
+                               session_cache=session, mesh_shape=mesh_shape))
+
+
+r = np.random.default_rng(5)
+prompt = r.integers(0, cfg.vocab, 200)
+ext = r.integers(0, cfg.vocab, 5)
+
+# the park/hit drive on the kv-sharded engine
+srv = SlotServer(build((1, 2), session=True))
+srv.submit(Request(rid=0, max_new=8, tokens=prompt))
+srv.run()
+out1 = list(map(int, srv.done[0].output))
+srv.submit(Request(rid=1, max_new=6, tokens=np.concatenate(
+    [prompt, np.asarray(out1), ext])))
+srv.run()
+hits = srv.stats.session_hits
+out2 = list(map(int, srv.done[1].output))
+
+# the cold control: same mesh, session cache OFF, manual uninterrupted
+# drive of the whole conversation (parked bytes vs recompute must agree)
+base = build((1, 2), session=False)
+cache = base.alloc_slot_cache()
+logits, cache = base.insert_request(cache, 0, prompt)
+t = int(jnp.argmax(logits))
+c1 = [t]
+for _ in range(7):
+    lg, cache = base.decode(cache, jnp.asarray([[t]]), None)
+    t = int(jnp.argmax(lg, -1)[0])
+    c1.append(t)
+for f in [c1[-1]] + [int(x) for x in ext[:-1]]:
+    _, cache = base.decode(cache, jnp.asarray([[f]]), None)
+lg, cache = base.decode(cache, jnp.asarray([[int(ext[-1])]]), None)
+t = int(jnp.argmax(lg, -1)[0])
+c2 = [t]
+for _ in range(5):
+    lg, cache = base.decode(cache, jnp.asarray([[t]]), None)
+    t = int(jnp.argmax(lg, -1)[0])
+    c2.append(t)
+print("RESULT " + json.dumps({"hits": hits, "out1": out1, "out2": out2,
+                              "c1": c1, "c2": c2}))
+"""
+
+
+@pytest.mark.slow
+def test_session_hit_matches_cold_on_mesh():
+    """ISSUE 10: park/resume on a kv-sharded mesh. The parked mini gathers
+    shard-local payloads into the same dense full-head format as
+    single-device parks, and the restore re-shards through the lane
+    in_specs — so a session HIT on the mesh must equal the uninterrupted
+    cold drive on the same mesh, bit for bit."""
+    import subprocess
+    import sys
+    r = subprocess.run(
+        [sys.executable, "-c", _SHARDED_CHILD], capture_output=True,
+        text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root"},
+        cwd=".", timeout=900,
+    )
+    lines = [l for l in r.stdout.splitlines() if l.startswith("RESULT ")]
+    assert lines, f"child failed:\n{r.stderr[-2000:]}"
+    res = json.loads(lines[0][7:])
+    assert res["hits"] == 1, "returning session missed on the mesh"
+    assert res["out1"] == res["c1"], "turn 1 diverged on the mesh"
+    assert res["out2"] == res["c2"], "sharded session hit != cold drive"
 
 
 def test_session_rejects_sliding_window(smoke_setup):
